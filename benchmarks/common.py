@@ -1,0 +1,18 @@
+"""Shared benchmark utilities: timing + CSV rows `name,us_per_call,derived`."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+Row = tuple[str, float, str]
+
+
+def timed(fn: Callable[[], Any]) -> tuple[Any, float]:
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(rows: list[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

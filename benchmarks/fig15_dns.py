@@ -1,0 +1,51 @@
+"""Figures 15-17: replicated DNS. Tail-fraction reductions (Fig 15), mean /
+percentile reductions vs k (Fig 16), marginal cost-effectiveness vs the
+16 ms/KB benchmark (Fig 17)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timed
+from repro.core import analytic, dns
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    pop = dns.DNSPopulation()
+    key = jax.random.PRNGKey(6)
+
+    def work():
+        ranking = dns.rank_servers(key, pop)
+        lat = dns.sample_latencies(jax.random.PRNGKey(7), pop, 400_000)
+        return ranking, lat
+
+    (ranking, lat), us = timed(work)
+    r1 = dns.replicated_response(lat, ranking, 1)
+    means = []
+    for k in range(1, 11):
+        rk = dns.replicated_response(lat, ranking, k)
+        means.append(float(jnp.mean(rk)))
+        if k in (2, 5, 10):
+            f500 = float(jnp.mean(r1 > 500.0)) / max(
+                float(jnp.mean(rk > 500.0)), 1e-9)
+            f1500 = float(jnp.mean(r1 > 1500.0)) / max(
+                float(jnp.mean(rk > 1500.0)), 1e-9)
+            mean_red = (means[0] - means[-1]) / means[0] * 100
+            p99_red = (float(jnp.percentile(r1, 99))
+                       - float(jnp.percentile(rk, 99))) / \
+                float(jnp.percentile(r1, 99)) * 100
+            rows.append((f"fig15/k={k}", us / 10,
+                         f"frac500_reduction={f500:.1f}x;"
+                         f"frac1500_reduction={f1500:.1f}x;"
+                         f"mean_reduction={mean_red:.0f}%;"
+                         f"p99_reduction={p99_red:.0f}%"))
+    marg = dns.marginal_savings_ms_per_kb(jnp.asarray(means), pop)
+    total_kb = 9 * pop.query_bytes / 1024.0
+    abs_ms_per_kb = (means[0] - means[-1]) / total_kb
+    rows.append(("fig17/marginal", us / 10,
+                 f"k2_ms_per_kb={float(marg[0]):.0f};"
+                 f"k10_ms_per_kb={float(marg[-1]):.1f};"
+                 f"absolute_k10={abs_ms_per_kb:.1f};"
+                 f"benchmark={analytic.BENEFIT_THRESHOLD_MS_PER_KB}"))
+    return rows

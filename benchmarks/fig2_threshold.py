@@ -1,0 +1,31 @@
+"""Figure 2: threshold load vs variance for Pareto / Weibull / two-point
+families. Paper: thresholds rise with variance, bounded in (~0.26, 0.5)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, timed
+from repro.core import distributions as dists
+from repro.core import queueing, threshold
+
+CFG = queueing.SimConfig(n_servers=20, n_arrivals=50_000)
+
+FAMILIES = {
+    "pareto": [(a, dists.pareto(a)) for a in (6.0, 3.0, 2.5, 2.2, 2.05)],
+    "weibull": [(k, dists.weibull(k)) for k in (2.0, 1.0, 0.7, 0.5, 0.4)],
+    "two_point": [(p, dists.two_point(p))
+                  for p in (0.1, 0.5, 0.8, 0.95, 0.99)],
+}
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(1)
+    for fam, entries in FAMILIES.items():
+        for x, dist in entries:
+            (t, us) = timed(lambda d=dist: threshold.threshold_grid(
+                key, d, CFG, n_seeds=2))
+            var = "inf" if dist.variance is None else f"{dist.variance:.2f}"
+            rows.append((f"fig2/{fam}/x={x:g}", us,
+                         f"threshold={t:.3f};variance={var}"))
+    return rows

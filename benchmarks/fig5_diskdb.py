@@ -1,0 +1,53 @@
+"""Figures 5-11: the disk-backed database study, reproduced by running the
+paper-calibrated storage service-time models through the §2.1 queueing
+simulator. One variant per paper figure."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timed
+from repro.core import queueing, storage_sim, threshold
+
+VARIANTS = {
+    "fig5_base": storage_sim.StorageConfig(),
+    "fig6_small_files": storage_sim.StorageConfig(mean_file_kb=0.04),
+    "fig7_pareto_sizes": storage_sim.StorageConfig(file_dist="pareto"),
+    "fig8_cache_001": storage_sim.StorageConfig(cache_disk_ratio=0.01),
+    "fig9_ec2_variance": storage_sim.StorageConfig(seek_cv=1.5),
+    "fig10_400kb": storage_sim.StorageConfig(mean_file_kb=400.0),
+    "fig11_in_memory": storage_sim.StorageConfig(cache_disk_ratio=2.0),
+}
+
+LOADS = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(4)
+    for name, scfg in VARIANTS.items():
+        dist, ms_scale, ovh = storage_sim.service_dist(scfg)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=60_000,
+                                 client_overhead=ovh)
+
+        def work(dist=dist, cfg=cfg):
+            r1 = queueing.simulate_grid(key, dist, LOADS, cfg, 1)
+            r2 = queueing.simulate_grid(key, dist, LOADS, cfg, 2)
+            s1 = queueing.summarize(r1, cfg)
+            s2 = queueing.summarize(r2, cfg)
+            t = threshold.threshold_grid(key, dist, cfg, n_seeds=1)
+            return s1, s2, t
+
+        (s1, s2, t), us = timed(work)
+        m1 = float(s1["mean"][0]) * ms_scale
+        m2 = float(s2["mean"][0]) * ms_scale
+        p99_1 = float(s1["p99"][1]) * ms_scale
+        p99_2 = float(s2["p99"][1]) * ms_scale
+        p999_1 = float(s1["p99.9"][0]) * ms_scale
+        p999_2 = float(s2["p99.9"][0]) * ms_scale
+        rows.append((f"fig5-11/{name}", us,
+                     f"threshold={t:.2f};mean@0.1={m1:.2f}->{m2:.2f}ms;"
+                     f"p99@0.2={p99_1:.1f}->{p99_2:.1f}ms;"
+                     f"p999@0.1_ratio={p999_1 / max(p999_2, 1e-9):.2f}x;"
+                     f"overhead_frac={ovh:.3f}"))
+    return rows

@@ -1,0 +1,78 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = collective_bytes / (chips x 50e9 B/s ICI link)
+(the dry-run JSON stores PER-DEVICE flops/bytes — chips divide out).
+Also reports MODEL_FLOPS = 6*N(_active)*D and the usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Row
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_ROOT = Path(__file__).resolve().parent.parent
+# prefer the optimized sweep; fall back to the baseline
+DRYRUN_DIR = (_ROOT / "experiments/dryrun_opt"
+              if (_ROOT / "experiments/dryrun_opt").exists()
+              else _ROOT / "experiments/dryrun")
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if not rec.get("ok") or "scaled_flops" not in rec:
+        return None
+    from repro.configs import base as cfgbase
+    cfg = cfgbase.get_config(rec["arch"])
+    shape = cfgbase.SHAPES[rec["shape"]]
+    devices = rec["devices"]
+    # per-device terms (JSON values are per-device already)
+    t_compute = rec["scaled_flops"] / PEAK_FLOPS
+    t_memory = rec["scaled_io_bytes"] / HBM_BW
+    coll = sum(rec.get("collective_bytes", {}).values())
+    t_coll = coll / LINK_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda x: x[1])[0]
+    # model flops for this step kind
+    n_params = (cfg.active_param_count if cfg.moe else cfg.param_count)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_params * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_params * tokens
+    else:  # decode: one token per sequence
+        model_flops = 2 * n_params * shape.global_batch
+    model_flops_dev = model_flops / devices
+    useful = model_flops_dev / max(rec["scaled_flops"], 1.0)
+    return {
+        "t_compute": t_compute, "t_memory": t_memory, "t_coll": t_coll,
+        "dominant": dominant, "useful_ratio": useful,
+        "model_flops_per_dev": model_flops_dev,
+        "hbm_bytes_per_dev": rec.get("temp_size_in_bytes", 0),
+    }
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    if not DRYRUN_DIR.exists():
+        return [("roofline/missing", 0.0, "run repro.launch.dryrun first")]
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        a = analyze_record(rec)
+        if a is None:
+            rows.append((f"roofline/{f.stem}", 0.0,
+                         f"SKIP({rec.get('error', 'no analysis')})"))
+            continue
+        rows.append((
+            f"roofline/{f.stem}", rec.get("compile_s", 0) * 1e6,
+            f"compute_s={a['t_compute']:.3e};memory_s={a['t_memory']:.3e};"
+            f"collective_s={a['t_coll']:.3e};dominant={a['dominant']};"
+            f"useful={a['useful_ratio']:.2f}"))
+    return rows

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--only fig14`` runs one module.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_queueing, fig2_threshold, fig3_random,
+                            fig4_overhead, fig5_diskdb, fig12_memcached,
+                            fig14_network, fig15_dns, roofline,
+                            serving_hedge, tab_tcp)
+    modules = [fig1_queueing, fig2_threshold, fig3_random, fig4_overhead,
+               fig5_diskdb, fig12_memcached, fig14_network, fig15_dns,
+               tab_tcp, serving_hedge, roofline]
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in modules:
+        name = mod.__name__.split(".")[-1]
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # keep the harness going
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

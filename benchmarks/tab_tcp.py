@@ -1,0 +1,34 @@
+"""§3.1: TCP handshake duplication — expected savings vs the cost benchmark."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timed
+from repro.core import analytic
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    m = analytic.TCPModel()
+    key = jax.random.PRNGKey(8)
+
+    def work():
+        t1 = analytic.handshake_times(key, m, 400_000, duplicated=False)
+        t2 = analytic.handshake_times(key, m, 400_000, duplicated=True)
+        return t1, t2
+
+    (t1, t2), us = timed(work)
+    mean_save = float(jnp.mean(t1) - jnp.mean(t2))
+    p995 = float(jnp.percentile(t1, 99.5) - jnp.percentile(t2, 99.5))
+    p999 = float(jnp.percentile(t1, 99.9) - jnp.percentile(t2, 99.9))
+    # 3 packets * 50 B = 150 B extra per handshake
+    ms_per_kb = mean_save * 1e3 / (150 / 1024)
+    rows.append(("tcp/handshake", us,
+                 f"mean_saving_ms={mean_save * 1e3:.1f};"
+                 f"first_order_ms={analytic.handshake_mean_saving(m) * 1e3:.1f};"
+                 f"p995_saving_ms={p995 * 1e3:.0f};"
+                 f"p999_saving_ms={p999 * 1e3:.0f};"
+                 f"ms_per_kb={ms_per_kb:.0f};"
+                 f"benchmark={analytic.BENEFIT_THRESHOLD_MS_PER_KB}"))
+    return rows

@@ -1,0 +1,68 @@
+"""Serve a small model with batched requests through the hedged scheduler:
+4 replicas, one artificially slow (straggler) — redundancy masks it.
+
+Run:  PYTHONPATH=src python examples/serve_hedged.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.hedging import HedgePolicy, LoadMeter
+from repro.models import lm
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import HedgedScheduler
+
+
+class SlowWrapper:
+    """A replica with an injected 150 ms stall (multi-tenant interference)."""
+
+    def __init__(self, inner, stall_s=0.15):
+        self.inner = inner
+        self.stall_s = stall_s
+        self.name = inner.name + "-slow"
+
+    def generate(self, *args, **kwargs):
+        time.sleep(self.stall_s)
+        return self.inner.generate(*args, **kwargs)
+
+
+def run(k: int, engines) -> np.ndarray:
+    sched = HedgedScheduler(
+        engines, policy=HedgePolicy(max_k=k, threshold=1.1),
+        meter=LoadMeter(alpha=0.0, init=0.0), seed=0)
+    rng = np.random.default_rng(0)
+    lat = []
+    try:
+        for _ in range(16):
+            prompt = rng.integers(0, 500, 12).astype(np.int32)
+            req = sched.submit(prompt, max_new_tokens=4)
+            lat.append(req.latency)
+        stats = dict(sched.stats)
+    finally:
+        sched.shutdown()
+    print(f"  k={k}: mean={np.mean(lat) * 1e3:.0f}ms "
+          f"p90={np.percentile(lat, 90) * 1e3:.0f}ms  stats={stats}")
+    return np.asarray(lat)
+
+
+def main() -> None:
+    cfg = get_smoke_config("gemma2-2b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    engines = [InferenceEngine(cfg, params, max_len=64, name=f"r{i}")
+               for i in range(4)]
+    engines[0] = SlowWrapper(engines[0])  # one straggler replica
+    # warm the jit caches so latencies measure serving, not compilation
+    engines[1].generate(np.zeros(4, np.int32), max_new_tokens=2)
+
+    print("without redundancy (k=1): requests landing on the slow replica "
+          "eat the stall")
+    l1 = run(1, engines)
+    print("with redundancy (k=2, duplicates at low priority):")
+    l2 = run(2, engines)
+    print(f"p90 improvement: {np.percentile(l1, 90) / np.percentile(l2, 90):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

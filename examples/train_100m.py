@@ -1,0 +1,48 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred steps
+with the full production substrate — deterministic data pipeline, hedged
+(redundant) data loading, async checkpointing, crash-safe resume.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 200]
+(~100M params on CPU: expect a few seconds per step.)
+"""
+import argparse
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig
+from repro.training.optimizer import make_optimizer
+from repro.training.train_loop import Trainer, TrainerConfig
+
+
+def model_100m() -> ModelConfig:
+    # ~105M params: 12L, d768, GQA 12/4 heads — a GPT-2-small-ish config
+    # assembled from the same blocks as the assigned architectures.
+    return ModelConfig(
+        name="repro-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, head_dim=64, d_ff=3072, vocab_size=32_000,
+        pattern=("global",), mlp_act="silu", gated_mlp=True,
+        tie_embeddings=True, recipe="tp", long_context_ok=False)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    print(f"params ~ {cfg.param_count / 1e6:.1f}M")
+    trainer = Trainer(
+        cfg,
+        DataConfig(seq_len=args.seq_len, batch_size=args.batch, seed=0),
+        TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                      hedged_loader_k=2, log_every=10),
+        opt=make_optimizer("adamw", lr=3e-4))
+    out = trainer.run(args.steps)
+    print(f"final loss {out['history'][-1]['loss']:.4f}; "
+          f"hedged-loader duplicate wins: {out['loader_duplicate_wins']}")
+
+
+if __name__ == "__main__":
+    main()

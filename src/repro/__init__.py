@@ -1,0 +1,7 @@
+"""repro: "Low Latency via Redundancy" (Vulimiri et al., 2013) as a
+production multi-pod JAX training + serving framework.
+
+See README.md for the tour, DESIGN.md for the paper->system mapping, and
+EXPERIMENTS.md for the validation / dry-run / roofline / perf logs.
+"""
+__version__ = "1.0.0"

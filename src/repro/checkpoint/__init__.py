@@ -1,0 +1,1 @@
+"""Atomic + async checkpointing with elastic (resharded) restore."""

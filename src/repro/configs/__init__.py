@@ -1,0 +1,22 @@
+"""Architecture registry: importing this package registers all configs."""
+from repro.configs import (  # noqa: F401
+    command_r_35b,
+    deepseek_v3_671b,
+    gemma2_2b,
+    gemma3_12b,
+    granite_moe_3b_a800m,
+    llava_next_34b,
+    mamba2_370m,
+    musicgen_large,
+    nemotron_4_15b,
+    recurrentgemma_9b,
+)
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    InputShape,
+    ModelConfig,
+    cells,
+    get_config,
+    get_smoke_config,
+    list_architectures,
+)

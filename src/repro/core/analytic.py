@@ -1,0 +1,119 @@
+"""Closed-form results from the paper.
+
+* Theorem 1 (M/M/1 + replication): with unit-mean exponential service and
+  per-server arrival rate rho, mean response is 1/(1-rho) unreplicated and
+  1/(2(1-2rho)) with k=2 (min of two independent Exp(1-2rho) samples), so
+  replication helps iff rho < 1/3.
+* The general-k M/M/1 approximation (k-way independent queues).
+* Client-side overhead break-even (paper Figure 4, exponential case).
+* The §3.1 TCP-handshake model: per-packet loss p, initial timeouts
+  (3 s SYN, 3 s SYN-ACK, 3·RTT ACK), exponential backoff; duplication moves
+  p -> p_pair (the measured correlated pair-loss probability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+THRESHOLD_EXPONENTIAL = 1.0 / 3.0
+# Paper: deterministic-service threshold from queueing-model simulation.
+THRESHOLD_DETERMINISTIC = 0.2582
+
+
+def mm1_mean(rho) -> Array:
+    """Mean response of an M/M/1 queue with unit-mean service."""
+    rho = jnp.asarray(rho)
+    return jnp.where(rho < 1.0, 1.0 / (1.0 - rho), jnp.inf)
+
+
+def mm1_response_cdf(t, rho) -> Array:
+    """P(response <= t) for M/M/1: Exp(1 - rho)."""
+    t, rho = jnp.asarray(t), jnp.asarray(rho)
+    return 1.0 - jnp.exp(-(1.0 - rho) * t)
+
+
+def mm1_replicated_mean(rho, k: int = 2) -> Array:
+    """Mean of min over k independent M/M/1 responses, each at load k*rho."""
+    rho = jnp.asarray(rho)
+    rate = 1.0 - k * rho  # each copy's response ~ Exp(1 - k rho)
+    return jnp.where(rate > 0.0, 1.0 / (k * rate), jnp.inf)
+
+
+def exponential_threshold(k: int = 2, overhead: float = 0.0) -> float:
+    """Largest rho with mm1_replicated_mean(rho,k) + overhead < mm1_mean(rho).
+
+    With overhead c: 1/(k(1-k rho)) + c = 1/(1-rho). For k=2, c=0 this gives
+    exactly 1/3 (Theorem 1). Solved in closed form for k=2, numerically
+    otherwise.
+    """
+    if k == 2 and overhead == 0.0:
+        return THRESHOLD_EXPONENTIAL
+    import numpy as np
+
+    lo, hi = 1e-6, 1.0 / k - 1e-9
+    f = lambda r: float(mm1_replicated_mean(r, k) + overhead - mm1_mean(r))
+    if f(lo) >= 0.0:
+        return 0.0
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if f(mid) < 0.0:
+            lo = mid
+        else:
+            hi = mid
+    return float(np.round(0.5 * (lo + hi), 6))
+
+
+# ---------------------------------------------------------------------------
+# §3.1 TCP connection establishment
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TCPModel:
+    rtt: float = 0.03           # seconds
+    p_single: float = 0.0048    # measured single-packet loss prob [Chan et al.]
+    p_pair: float = 0.0007      # measured back-to-back pair loss prob
+    syn_timeout: float = 3.0    # Linux initial SYN / SYN-ACK RTO
+    max_retries: int = 8
+
+
+def _packet_completion_time(key: Array, p: float, timeout: float, rtt: float,
+                            shape: tuple[int, ...],
+                            max_retries: int) -> Array:
+    """Time until a packet is first delivered, with exponential backoff."""
+    # retry r (r=0..R) succeeds w.p. (1-p) p^r; its completion time is
+    # sum_{j<r} timeout*2^j + rtt/2.
+    u = jax.random.uniform(key, shape)
+    # invert the geometric: r = floor(log(1-u)/log(p)) clipped
+    r = jnp.floor(jnp.log1p(-u) / jnp.log(p)).astype(jnp.int32)
+    r = jnp.clip(r, 0, max_retries)
+    backoff = timeout * (2.0 ** r.astype(jnp.float32) - 1.0)  # geometric sum
+    return backoff + rtt / 2.0
+
+
+def handshake_times(key: Array, model: TCPModel, n: int,
+                    duplicated: bool) -> Array:
+    """Monte-Carlo handshake completion times (n,) under the §3.1 model."""
+    p = model.p_pair if duplicated else model.p_single
+    k1, k2, k3 = jax.random.split(key, 3)
+    syn = _packet_completion_time(k1, p, model.syn_timeout, model.rtt, (n,),
+                                  model.max_retries)
+    synack = _packet_completion_time(k2, p, model.syn_timeout, model.rtt, (n,),
+                                     model.max_retries)
+    ack = _packet_completion_time(k3, p, 3.0 * model.rtt, model.rtt, (n,),
+                                  model.max_retries)
+    return syn + synack + ack
+
+
+def handshake_mean_saving(model: TCPModel) -> float:
+    """First-order expected saving (the paper's back-of-envelope):
+    (3 + 3 + 3*RTT) * (p_single - p_pair)."""
+    dp = model.p_single - model.p_pair
+    return (model.syn_timeout * 2 + 3.0 * model.rtt) * dp
+
+
+# Cost-effectiveness benchmark from Vulimiri et al. [28, 29]:
+BENEFIT_THRESHOLD_MS_PER_KB = 16.0

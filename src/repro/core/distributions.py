@@ -1,0 +1,200 @@
+"""Service-time distributions for the replication queueing model (paper §2.1).
+
+Every distribution is normalized to UNIT MEAN so that per-server utilization
+equals the arrival rate per server (rho). The families here are exactly the
+ones the paper studies: exponential (Theorem 1), deterministic (Conjecture 1
+worst case), Pareto / Weibull / two-point (Figure 2), random discrete
+(Figure 3), plus empirical mixtures used by the storage/DNS studies.
+
+All samplers are pure functions of a PRNG key and shape, suitable for use
+inside jit/vmap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceDist:
+    """A unit-mean service-time distribution."""
+
+    name: str
+    sample: Callable[[Array, tuple[int, ...]], Array]
+    mean: float = 1.0
+    variance: float | None = None  # None = infinite / not in closed form
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"ServiceDist({self.name})"
+
+
+def exponential() -> ServiceDist:
+    """Exp(1): the analytically tractable case of Theorem 1."""
+
+    def sample(key: Array, shape: tuple[int, ...]) -> Array:
+        return jax.random.exponential(key, shape)
+
+    return ServiceDist("exponential", sample, variance=1.0)
+
+
+def deterministic() -> ServiceDist:
+    """Unit point mass — the paper's conjectured worst case (threshold ~25.8%)."""
+
+    def sample(key: Array, shape: tuple[int, ...]) -> Array:
+        del key
+        return jnp.ones(shape)
+
+    return ServiceDist("deterministic", sample, variance=0.0)
+
+
+def pareto(alpha: float) -> ServiceDist:
+    """Unit-mean Pareto with tail index ``alpha`` (> 1).
+
+    x_m = (alpha - 1) / alpha so that E[X] = alpha * x_m / (alpha - 1) = 1.
+    Variance is finite only for alpha > 2.
+    """
+    if alpha <= 1.0:
+        raise ValueError("Pareto needs alpha > 1 for a finite mean")
+    x_m = (alpha - 1.0) / alpha
+    if alpha > 2.0:
+        var = x_m**2 * alpha / ((alpha - 1.0) ** 2 * (alpha - 2.0))
+    else:
+        var = None
+
+    def sample(key: Array, shape: tuple[int, ...]) -> Array:
+        u = jax.random.uniform(key, shape, minval=jnp.finfo(jnp.float32).tiny)
+        return x_m * u ** (-1.0 / alpha)
+
+    return ServiceDist(f"pareto(a={alpha:g})", sample, variance=var)
+
+
+def weibull(shape_k: float) -> ServiceDist:
+    """Unit-mean Weibull with shape ``k`` (k < 1 => heavier than exponential)."""
+    if shape_k <= 0:
+        raise ValueError("Weibull shape must be positive")
+    # scale so that mean = lam * Gamma(1 + 1/k) = 1
+    import math
+
+    g1 = math.gamma(1.0 + 1.0 / shape_k)
+    lam = 1.0 / g1
+    g2 = math.gamma(1.0 + 2.0 / shape_k)
+    var = lam**2 * (g2 - g1**2)
+
+    def sample(key: Array, shape: tuple[int, ...]) -> Array:
+        u = jax.random.uniform(key, shape, minval=jnp.finfo(jnp.float32).tiny)
+        return lam * (-jnp.log(u)) ** (1.0 / shape_k)
+
+    return ServiceDist(f"weibull(k={shape_k:g})", sample, variance=float(var))
+
+
+def two_point(p: float) -> ServiceDist:
+    """The paper's Fig 2(c) family: 0.5 w.p. p, (1 - 0.5 p)/(1 - p) w.p. 1-p.
+
+    Unit mean by construction; variance -> infinity as p -> 1.
+    """
+    if not 0.0 <= p < 1.0:
+        raise ValueError("two_point needs 0 <= p < 1")
+    hi = (1.0 - 0.5 * p) / (1.0 - p)
+    var = p * 0.25 + (1.0 - p) * hi**2 - 1.0
+
+    def sample(key: Array, shape: tuple[int, ...]) -> Array:
+        u = jax.random.uniform(key, shape)
+        return jnp.where(u < p, 0.5, hi)
+
+    return ServiceDist(f"two_point(p={p:g})", sample, variance=float(var))
+
+
+def discrete(values: Array | list[float], probs: Array | list[float],
+             name: str = "discrete") -> ServiceDist:
+    """Arbitrary discrete distribution, renormalized to unit mean.
+
+    Used for the paper's Figure 3 (random distributions on {1..N}) and for
+    the storage-service empirical mixtures.
+    """
+    v = jnp.asarray(values, dtype=jnp.float32)
+    p = jnp.asarray(probs, dtype=jnp.float32)
+    p = p / jnp.sum(p)
+    mean = jnp.sum(v * p)
+    v = v / mean  # unit mean
+    var = float(jnp.sum(p * v**2) - 1.0)
+    logits = jnp.log(p)
+
+    def sample(key: Array, shape: tuple[int, ...]) -> Array:
+        idx = jax.random.categorical(key, logits, shape=shape)
+        return v[idx]
+
+    return ServiceDist(name, sample, variance=var)
+
+
+def random_discrete(key: Array, support: int, *, dirichlet_alpha: float | None = None,
+                    name: str | None = None) -> ServiceDist:
+    """A random unit-mean discrete distribution on {1, .., support}.
+
+    ``dirichlet_alpha=None`` samples probabilities uniformly from the simplex
+    (equivalently Dirichlet(1)); the paper additionally uses a symmetric
+    Dirichlet with concentration 0.1 to get a wider spread (Figure 3).
+    """
+    alpha = 1.0 if dirichlet_alpha is None else dirichlet_alpha
+    probs = jax.random.dirichlet(key, jnp.full((support,), alpha))
+    values = jnp.arange(1, support + 1, dtype=jnp.float32)
+    label = name or f"random_discrete(N={support},a={alpha:g})"
+    return discrete(values, probs, name=label)
+
+
+def mixture(components: list[ServiceDist], weights: list[float],
+            name: str = "mixture", *, normalize: bool = True) -> ServiceDist:
+    """Finite mixture of unit-mean components (renormalized to unit mean).
+
+    The storage-service models (disk/cache) are mixtures of a fast memory
+    path and a slow disk path.
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+    logits = jnp.log(w)
+    # mixture of unit-mean components has unit mean already; ``normalize`` is
+    # for callers that pass non-unit components on purpose.
+
+    def sample(key: Array, shape: tuple[int, ...]) -> Array:
+        k1, k2 = jax.random.split(key)
+        idx = jax.random.categorical(k1, logits, shape=shape)
+        keys = jax.random.split(k2, len(components))
+        draws = jnp.stack([c.sample(keys[i], shape) for i, c in enumerate(components)])
+        return jnp.take_along_axis(draws, idx[None, ...], axis=0)[0]
+
+    means = jnp.asarray([c.mean for c in components])
+    mixture_mean = float(jnp.sum(w * means))
+    if normalize and abs(mixture_mean - 1.0) > 1e-6:
+        inner = sample
+
+        def sample(key: Array, shape: tuple[int, ...]) -> Array:  # noqa: F811
+            return inner(key, shape) / mixture_mean
+
+        mixture_mean = 1.0
+    return ServiceDist(name, sample, mean=mixture_mean)
+
+
+def scaled(dist: ServiceDist, scale: float) -> ServiceDist:
+    """Scale a unit-mean distribution to mean ``scale`` (storage sims use
+    real milliseconds)."""
+
+    def sample(key: Array, shape: tuple[int, ...]) -> Array:
+        return dist.sample(key, shape) * scale
+
+    var = None if dist.variance is None else dist.variance * scale**2
+    return ServiceDist(f"{dist.name}*{scale:g}", sample, mean=dist.mean * scale,
+                       variance=var)
+
+
+# Registry used by benchmarks / CLI.
+FAMILIES: dict[str, Callable[..., ServiceDist]] = {
+    "exponential": exponential,
+    "deterministic": deterministic,
+    "pareto": pareto,
+    "weibull": weibull,
+    "two_point": two_point,
+}

@@ -1,0 +1,146 @@
+"""Redundant ("hedged") execution — the paper's technique as a runtime.
+
+The paper's prescription, operationalized:
+  * duplicate a request to k diverse resources and take the first completion
+    (``hedged_call``);
+  * only duplicate while measured utilization is below the threshold load
+    for the measured service distribution (``HedgePolicy`` — §2.1 says that
+    threshold is 25-50%, so the default conservative threshold is 0.25 and a
+    measured one can be plugged in);
+  * optionally issue duplicates at lower priority so they never delay
+    primary work (§2.4) — honored by the serving scheduler which passes
+    ``priority=LOW`` for copies >= 1;
+  * optionally cancel outstanding copies once one completes (beyond-paper:
+    Dean & Barroso's "tied requests"; the paper's model serves every copy to
+    completion, so cancellation is OFF by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Any, Callable, Sequence
+
+PRIORITY_HIGH = 0
+PRIORITY_LOW = 1
+
+
+@dataclasses.dataclass
+class HedgeResult:
+    value: Any
+    winner: int               # index of the replica that completed first
+    latency: float            # seconds until first completion
+    k: int                    # number of copies actually issued
+    losers_cancelled: int = 0
+
+
+class LoadMeter:
+    """EWMA utilization estimate: fraction of busy capacity.
+
+    ``update`` is fed (busy_fraction in [0, 1]) samples by whoever owns the
+    resource pool (the serving scheduler reports queue occupancy / busy
+    replicas each tick).
+    """
+
+    def __init__(self, alpha: float = 0.1, init: float = 0.0):
+        self.alpha = float(alpha)
+        self._util = float(init)
+        self._lock = threading.Lock()
+
+    def update(self, busy_fraction: float) -> None:
+        b = min(max(float(busy_fraction), 0.0), 1.0)
+        with self._lock:
+            self._util = (1.0 - self.alpha) * self._util + self.alpha * b
+
+    @property
+    def utilization(self) -> float:
+        with self._lock:
+            return self._util
+
+
+@dataclasses.dataclass
+class HedgePolicy:
+    """Decide the replication factor for the next request.
+
+    ``threshold`` should be the threshold load for the system's service-time
+    distribution (estimated via ``repro.core.threshold``); the paper
+    guarantees it lies in (0.258, 0.5) when client-side overhead is small,
+    so 0.25 is a universally safe default. ``client_overhead_frac`` is the
+    client-side duplication cost relative to mean service time; following
+    §2.1/Fig 4, hedging is disabled when it is large.
+    """
+
+    max_k: int = 2
+    threshold: float = 0.25
+    client_overhead_frac: float = 0.0
+    overhead_cutoff: float = 0.5  # Fig 4: overhead ~ mean latency kills gains
+
+    def k_for(self, utilization: float) -> int:
+        if self.client_overhead_frac >= self.overhead_cutoff:
+            return 1
+        # duplicating multiplies utilization by k; stay under the threshold.
+        k = self.max_k
+        while k > 1 and utilization >= self.threshold:
+            k -= 1
+        return k
+
+
+def hedged_call(replicas: Sequence[Callable[..., Any]],
+                *args: Any,
+                k: int = 2,
+                executor: ThreadPoolExecutor | None = None,
+                cancel: bool = False,
+                timeout: float | None = None,
+                **kwargs: Any) -> HedgeResult:
+    """Run ``k`` of the given replica callables concurrently, first wins.
+
+    Replicas are picked in order (callers shuffle / rank for diversity, as
+    the DNS study ranks servers). ``cancel=True`` attempts
+    ``Future.cancel()`` on the losers (only not-yet-started work can be
+    cancelled — same constraint a real RPC layer has before the server
+    dequeues the request).
+    """
+    k = max(1, min(k, len(replicas)))
+    own_pool = executor is None
+    pool = executor or ThreadPoolExecutor(max_workers=k)
+    t0 = time.monotonic()
+    futures: list[Future] = [pool.submit(replicas[i], *args, **kwargs)
+                             for i in range(k)]
+    try:
+        done, pending = wait(futures, timeout=timeout,
+                             return_when=FIRST_COMPLETED)
+        if not done:
+            raise TimeoutError(f"no replica completed within {timeout}s")
+        # earliest completed future wins; exceptions propagate only if every
+        # issued copy failed (redundancy masks single failures).
+        winner_future = None
+        for f in done:
+            if f.exception() is None:
+                winner_future = f
+                break
+        if winner_future is None:
+            remaining = list(pending)
+            while remaining:
+                d, remaining_set = wait(remaining, return_when=FIRST_COMPLETED)
+                remaining = list(remaining_set)
+                for f in d:
+                    if f.exception() is None:
+                        winner_future = f
+                        break
+                if winner_future is not None:
+                    break
+            if winner_future is None:
+                raise next(iter(done)).exception()  # every copy failed
+        latency = time.monotonic() - t0
+        cancelled = 0
+        if cancel:
+            for f in futures:
+                if f is not winner_future and f.cancel():
+                    cancelled += 1
+        return HedgeResult(value=winner_future.result(),
+                           winner=futures.index(winner_future),
+                           latency=latency, k=k, losers_cancelled=cancelled)
+    finally:
+        if own_pool:
+            pool.shutdown(wait=False, cancel_futures=True)

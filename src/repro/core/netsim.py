@@ -1,0 +1,236 @@
+"""In-network packet replication on a k=6 fat-tree (paper §2.4).
+
+Slot-synchronous packet simulation in JAX (one ``lax.scan`` over time
+slots). Topology: 54 hosts, 18 edge, 18 agg, 9 core switches (3-layer
+fat-tree, full bisection). Every directed link serves one 1500 B packet per
+slot from a two-level strict-priority queue.
+
+The paper's scheme: the first R packets of every flow are REPLICATED along
+an alternate (edge->agg->core) path at strict LOW priority — duplicates can
+never delay primary traffic. A packet is delivered when either copy
+arrives. Primaries dropped at a full queue are retransmitted after an RTO
+with exponential backoff (the §2.4 timeout-avoidance mechanism); dropped
+duplicates simply vanish.
+
+Simplifications vs ns-3 (documented in DESIGN.md §8): no TCP
+congestion-window dynamics (flows are paced one packet/slot at the source),
+drops happen on enqueue past the buffer cap, per-hop delay = 1 slot.
+The reproduced phenomenology is Fig 14's: median FCT gain rising to
+intermediate load then falling, and tail gains from RTO avoidance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+K = 6
+N_HOST = 54
+N_EDGE = 18
+N_AGG = 18
+N_CORE = 9
+# directed link ids: we enumerate (host->edge), (edge->agg), (agg->core),
+# (core->agg), (agg->edge), (edge->host)
+L_HE = 0
+L_EA = N_HOST                       # 18 edges x 3 aggs = 54
+L_AC = L_EA + 54                    # 18 aggs x 3 cores = 54
+L_CA = L_AC + 54
+L_AE = L_CA + 54
+L_EH = L_AE + 54
+N_LINKS = L_EH + N_HOST
+
+MAX_HOPS = 6
+
+
+def _edge_of(host: int) -> int:
+    return host // 3
+
+
+def _pod_of_edge(e: int) -> int:
+    return e // 3
+
+
+def _links_for_path(src: int, dst: int, up1: int, up2: int) -> list[int]:
+    """Directed link ids for src->dst via agg choice up1 (0..2) and core
+    choice up2 (0..2). Intra-edge flows shortcut at the edge switch."""
+    es, ed = _edge_of(src), _edge_of(dst)
+    out = [L_HE + src]
+    if es == ed:
+        out.append(L_EH + dst)
+        return out
+    ps, pd = _pod_of_edge(es), _pod_of_edge(ed)
+    agg_s = ps * 3 + up1           # agg index within pod ps
+    if ps == pd:
+        # up to agg, back down to target edge
+        out.append(L_EA + es * 3 + up1)
+        out.append(L_AE + agg_s * 3 + (ed % 3))
+        out.append(L_EH + dst)
+        return out
+    core = up1 * 3 + up2           # agg position up1 connects cores 3*up1..
+    agg_d = pd * 3 + up1
+    out.append(L_EA + es * 3 + up1)
+    out.append(L_AC + agg_s * 3 + up2)
+    out.append(L_CA + agg_d * 3 + up2)
+    out.append(L_AE + agg_d * 3 + (ed % 3))
+    out.append(L_EH + dst)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    n_flows: int = 600
+    load: float = 0.4               # fraction of host-link capacity
+    mean_flow_pkts: int = 7         # ~10 KB at 1500 B
+    elephant_frac: float = 0.05     # heavy flows (data-center mix [8])
+    elephant_pkts: int = 200
+    replicate_first: int = 8        # R packets duplicated (0 = baseline)
+    buffer_pkts: int = 150          # 225 KB / 1500 B
+    rto_slots: int = 300            # TCP minRTO >> RTT, the 10 ms analogue
+    seed: int = 0
+
+
+def build_workload(cfg: NetConfig):
+    """Packet table (numpy, host side): paths, start slots, flow ids."""
+    rng = np.random.default_rng(cfg.seed)
+    sizes = np.where(rng.random(cfg.n_flows) < cfg.elephant_frac,
+                     cfg.elephant_pkts,
+                     1 + rng.geometric(1.0 / cfg.mean_flow_pkts))
+    sizes = sizes.astype(np.int64)
+    # Poisson flow arrivals so that offered load matches cfg.load
+    total_pkts = sizes.sum()
+    horizon = int(total_pkts / (N_HOST * cfg.load))
+    starts = np.sort(rng.integers(0, max(horizon, 1), cfg.n_flows))
+    src = rng.integers(0, N_HOST, cfg.n_flows)
+    dst = (src + 1 + rng.integers(0, N_HOST - 1, cfg.n_flows)) % N_HOST
+
+    rows = []  # (flow, seq, start_slot, prio, path..., is_dup)
+    for f in range(cfg.n_flows):
+        up1, up2 = rng.integers(0, 3), rng.integers(0, 3)
+        alt1, alt2 = (up1 + 1 + rng.integers(0, 2)) % 3, rng.integers(0, 3)
+        path = _links_for_path(int(src[f]), int(dst[f]), int(up1), int(up2))
+        alt_path = _links_for_path(int(src[f]), int(dst[f]), int(alt1),
+                                   int(alt2))
+        for s in range(int(sizes[f])):
+            t0 = int(starts[f]) + s  # paced: one packet per slot
+            rows.append((f, s, t0, 0, path, 0))
+            if s < cfg.replicate_first:
+                rows.append((f, s, t0, 1, alt_path, 1))
+    n = len(rows)
+    paths = np.full((n, MAX_HOPS), -1, np.int32)
+    meta = np.zeros((n, 5), np.int32)  # flow, seq, start, prio, is_dup
+    lens = np.zeros((n,), np.int32)
+    for i, (f, s, t0, prio, path, dup) in enumerate(rows):
+        meta[i] = (f, s, t0, prio, dup)
+        lens[i] = len(path)
+        paths[i, :len(path)] = path
+    return meta, paths, lens, sizes, starts
+
+
+@partial(jax.jit, static_argnames=("n_slots", "buffer_pkts", "rto_slots"))
+def _simulate(meta: Array, paths: Array, lens: Array, *, n_slots: int,
+              buffer_pkts: int, rto_slots: int):
+    """Advance the packet table slot by slot. Returns delivery slots (-1 if
+    never delivered)."""
+    n = meta.shape[0]
+    flow, seq, start, prio, is_dup = (meta[:, 0], meta[:, 1], meta[:, 2],
+                                      meta[:, 3], meta[:, 4])
+
+    state = {
+        "hop": jnp.zeros((n,), jnp.int32),
+        "ready": start,                       # slot at which eligible
+        "alive": jnp.ones((n,), bool),
+        "delivered": jnp.full((n,), -1, jnp.int32),
+        "retries": jnp.zeros((n,), jnp.int32),
+    }
+
+    big = jnp.int32(1 << 30)
+
+    def slot_step(state, t):
+        hop = state["hop"]
+        cur_link = jnp.take_along_axis(paths, hop[:, None], axis=1)[:, 0]
+        in_flight = (state["alive"] & (state["delivered"] < 0)
+                     & (state["ready"] <= t))
+        cur_link = jnp.where(in_flight, cur_link, N_LINKS)  # park inactive
+
+        # queue occupancy per link (all waiting packets)
+        occ = jax.ops.segment_sum(in_flight.astype(jnp.int32), cur_link,
+                                  num_segments=N_LINKS + 1)
+
+        # service: per link pick lexicographic (priority, ready, uid) via
+        # three rounds of int32 segment_min (strict priority then FIFO)
+        def seg_min(vals, mask):
+            v = jnp.where(mask, vals, big)
+            return jax.ops.segment_min(v, cur_link,
+                                       num_segments=N_LINKS + 1)
+
+        best_prio = seg_min(prio, in_flight)
+        cand = in_flight & (prio == best_prio[cur_link])
+        best_ready = seg_min(state["ready"], cand)
+        cand = cand & (state["ready"] == best_ready[cur_link])
+        uid = jnp.arange(n, dtype=jnp.int32)
+        first_uid = seg_min(uid, cand)
+        served = cand & (uid == first_uid[cur_link]) & (cur_link < N_LINKS)
+
+        new_hop = jnp.where(served, hop + 1, hop)
+        done = served & (new_hop >= lens)
+        delivered = jnp.where(done & (state["delivered"] < 0), t,
+                              state["delivered"])
+
+        # next-queue overflow: drop or schedule retransmit
+        nxt_link = jnp.take_along_axis(
+            paths, jnp.minimum(new_hop, MAX_HOPS - 1)[:, None], axis=1)[:, 0]
+        entering = served & ~done
+        nxt_occ = occ[jnp.where(entering, nxt_link, N_LINKS)]
+        overflow = entering & (nxt_occ >= buffer_pkts)
+        # duplicates vanish on drop; primaries back off and retransmit
+        drop_dup = overflow & (is_dup == 1)
+        retrans = overflow & (is_dup == 0)
+        alive = state["alive"] & ~drop_dup
+        retries = jnp.where(retrans, state["retries"] + 1, state["retries"])
+        backoff = rto_slots * (1 << jnp.minimum(retries, 6))
+        ready = jnp.where(retrans, t + backoff,
+                          jnp.where(served, t + 1, state["ready"]))
+        new_hop = jnp.where(retrans, jnp.zeros_like(new_hop),
+                            jnp.where(overflow, hop, new_hop))
+
+        return {"hop": new_hop, "ready": ready, "alive": alive,
+                "delivered": delivered, "retries": retries}, None
+
+    state, _ = jax.lax.scan(slot_step, state, jnp.arange(n_slots))
+    return state["delivered"]
+
+
+def flow_completion_times(cfg: NetConfig, n_slots: int | None = None):
+    """Run the sim; returns (fct_slots (n_flows,), sizes, short_mask)."""
+    meta, paths, lens, sizes, starts = build_workload(cfg)
+    if n_slots is None:
+        n_slots = int(starts.max() + sizes.max() * 3 + 8 * cfg.rto_slots)
+    delivered = np.asarray(_simulate(
+        jnp.asarray(meta), jnp.asarray(paths), jnp.asarray(lens),
+        n_slots=n_slots, buffer_pkts=cfg.buffer_pkts,
+        rto_slots=cfg.rto_slots))
+    flow, seq, start, prio, is_dup = meta.T
+    n_flows = cfg.n_flows
+    fct = np.zeros(n_flows)
+    undelivered = np.zeros(n_flows, bool)
+    for f in range(n_flows):
+        rows = np.where(flow == f)[0]
+        per_seq: dict[int, int] = {}
+        for r in rows:
+            d = delivered[r]
+            if d < 0:
+                continue
+            s = seq[r]
+            per_seq[s] = min(per_seq.get(s, 1 << 30), int(d))
+        if len(per_seq) < sizes[f]:
+            undelivered[f] = True
+            fct[f] = n_slots
+        else:
+            fct[f] = max(per_seq.values()) - starts[f] + 1
+    short = sizes <= 10
+    return fct, sizes, short, undelivered

@@ -1,0 +1,146 @@
+"""Discrete-event simulation of the paper's replication queueing model (§2.1).
+
+Model (exactly as in the paper): ``N`` independent identical FIFO servers,
+Poisson arrivals at rate ``N * rho`` (so each server sees utilization ``rho``
+without replication), each arriving request is copied to ``k`` distinct
+servers chosen uniformly at random, every copy is served to completion
+(no cancellation — this is what doubles utilization), and the request's
+response time is the minimum over its copies' (queueing delay + service
+time). An optional fixed ``client_overhead`` is added to every request when
+k > 1 (paper Figure 4).
+
+The simulator is a single ``lax.scan`` over arrivals with the vector of
+per-server next-free times as carry, ``vmap``-able over a batch of loads /
+seeds. Common random numbers (CRN): the arrival process, the first copy's
+server choice, and the first copy's service time are identical for every
+``k`` under the same seed, which makes paired k=2 vs k=1 comparisons (and
+hence threshold estimation) low-variance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributions import ServiceDist
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    n_servers: int = 20
+    n_arrivals: int = 100_000
+    warmup_frac: float = 0.1
+    client_overhead: float = 0.0  # latency penalty added to replicated requests
+
+
+def _sample_inputs(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int):
+    """Draw all randomness up front. Column 0 of servers/services is shared
+    by every k (CRN)."""
+    n, m = cfg.n_servers, cfg.n_arrivals
+    k_gap, k_srv0, k_srvx, k_svc = jax.random.split(key, 4)
+    # Unit-rate exponential gaps; scaled by the actual rate at sim time so the
+    # same key yields a coupled arrival process across loads.
+    unit_gaps = jax.random.exponential(k_gap, (m,))
+    first = jax.random.randint(k_srv0, (m,), 0, n)
+    if k_max > 1:
+        # distinct extra copies: choose k-1 distinct offsets in [1, n).
+        # The same score tensor is used for every k, so copy sets are nested
+        # (k=2's extra server is also one of k=3's) — CRN across k.
+        scores = jax.random.uniform(k_srvx, (m, n - 1))
+        _, offs = jax.lax.top_k(scores, k_max - 1)  # (m, k_max-1) in [0, n-1)
+        extra = (first[:, None] + 1 + offs) % n
+        servers = jnp.concatenate([first[:, None], extra], axis=1)
+    else:
+        servers = first[:, None]
+    # Per-copy fold_in keys so copy j's service times are identical for every
+    # k_max (CRN: k=1 and k=2 share the first copy's service draw).
+    services = jnp.stack(
+        [dist.sample(jax.random.fold_in(k_svc, j), (m,)) for j in range(k_max)],
+        axis=1)
+    return unit_gaps, servers, services
+
+
+def _scan_sim(arrivals: Array, servers: Array, services: Array, n_servers: int,
+              overhead: float) -> Array:
+    """Run the FIFO replication DES. arrivals (M,), servers (M,k), services
+    (M,k) -> response times (M,)."""
+
+    def step(free: Array, inp):
+        t, srv, svc = inp
+        start = jnp.maximum(free[srv], t)
+        finish = start + svc
+        free = free.at[srv].set(finish)  # srv entries are distinct
+        return free, jnp.min(finish) - t
+
+    free0 = jnp.zeros((n_servers,))
+    _, resp = jax.lax.scan(step, free0, (arrivals, servers, services))
+    k = servers.shape[1]
+    if k > 1 and overhead != 0.0:
+        resp = resp + overhead
+    return resp
+
+
+@partial(jax.jit, static_argnames=("dist", "cfg", "k"))
+def simulate(key: Array, dist: ServiceDist, rho: Array, cfg: SimConfig,
+             k: int = 1) -> Array:
+    """Response times (M,) for a single load ``rho`` and replication ``k``."""
+    unit_gaps, servers, services = _sample_inputs(key, dist, cfg, k)
+    rate = cfg.n_servers * rho
+    arrivals = jnp.cumsum(unit_gaps / rate)
+    return _scan_sim(arrivals, servers[:, :k], services[:, :k],
+                     cfg.n_servers, cfg.client_overhead)
+
+
+@partial(jax.jit, static_argnames=("dist", "cfg", "k"))
+def simulate_grid(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig,
+                  k: int = 1) -> Array:
+    """Response times (B, M) for a grid of loads, one coupled sample path."""
+    unit_gaps, servers, services = _sample_inputs(key, dist, cfg, k)
+    rates = cfg.n_servers * rhos  # (B,)
+    arrivals = jnp.cumsum(unit_gaps)[None, :] / rates[:, None]  # (B, M)
+    sim = jax.vmap(
+        lambda a: _scan_sim(a, servers[:, :k], services[:, :k],
+                            cfg.n_servers, cfg.client_overhead))
+    return sim(arrivals)
+
+
+def _warm(resp: Array, cfg: SimConfig) -> Array:
+    start = int(cfg.n_arrivals * cfg.warmup_frac)
+    return resp[..., start:]
+
+
+def summarize(resp: Array, cfg: SimConfig,
+              percentiles=(50.0, 90.0, 99.0, 99.9)) -> dict[str, Array]:
+    """Post-warmup mean + percentiles along the last axis."""
+    r = _warm(resp, cfg)
+    out = {"mean": jnp.mean(r, axis=-1)}
+    for p in percentiles:
+        out[f"p{p:g}"] = jnp.percentile(r, p, axis=-1)
+    return out
+
+
+def mean_response(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig,
+                  k: int, n_seeds: int = 1) -> Array:
+    """Post-warmup mean response (B,) averaged over ``n_seeds`` seeds."""
+    keys = jax.random.split(key, n_seeds)
+    means = []
+    for s in range(n_seeds):
+        resp = simulate_grid(keys[s], dist, rhos, cfg, k)
+        means.append(jnp.mean(_warm(resp, cfg), axis=-1))
+    return jnp.mean(jnp.stack(means), axis=0)
+
+
+def replication_gain(key: Array, dist: ServiceDist, rhos: Array,
+                     cfg: SimConfig, k: int = 2, n_seeds: int = 2) -> Array:
+    """mean_k1(rho) - mean_k(rho), CRN-paired per seed. Positive = k helps."""
+    keys = jax.random.split(key, n_seeds)
+    gains = []
+    for s in range(n_seeds):
+        r1 = simulate_grid(keys[s], dist, rhos, cfg, 1)
+        rk = simulate_grid(keys[s], dist, rhos, cfg, k)
+        gains.append(jnp.mean(_warm(r1, cfg), -1) - jnp.mean(_warm(rk, cfg), -1))
+    return jnp.mean(jnp.stack(gains), axis=0)

@@ -1,0 +1,101 @@
+"""Service-time models for the paper's storage studies (§2.2 disk-backed DB,
+§2.3 memcached).
+
+These produce a unit-mean ``ServiceDist`` + a normalized client-side
+duplication overhead so they can be run straight through the §2.1 queueing
+simulator; `ms_scale` converts results back to milliseconds for reporting.
+
+Model: a request for a file of size s (KB) is
+  * a cache hit  w.p. h: service = mem_base + s / mem_bw
+  * a cache miss w.p. 1-h: service = seek (variable) + s / disk_bw
+and the client pays (client_base + s * client_per_kb) extra latency per
+duplicated request (NIC/kernel/CPU processing of the second copy), which is
+the §2.1 "client-side overhead" knob. With 4 KB files that overhead is ~1% of
+mean service (replication wins, Fig 5); with 400 KB files or an all-in-memory
+store it is a large fraction (replication stops helping, Figs 10-12).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributions import ServiceDist
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageConfig:
+    mean_file_kb: float = 4.0
+    file_dist: str = "deterministic"     # deterministic | pareto
+    file_pareto_alpha: float = 2.1
+    cache_disk_ratio: float = 0.1        # cache size / total data size
+    seek_ms: float = 8.0                 # mean disk seek+rotate
+    seek_cv: float = 0.5                 # coefficient of variation of seek
+    disk_kb_per_ms: float = 50.0         # ~50 MB/s sequential
+    mem_base_ms: float = 0.15
+    mem_kb_per_ms: float = 2000.0        # ~2 GB/s
+    client_base_ms: float = 0.02
+    client_ms_per_kb: float = 0.016      # gigabit NIC + kernel processing
+
+    @property
+    def hit_rate(self) -> float:
+        # cache:disk ratio r => cache holds r/(1) of the data when r < 1
+        # (uniform access => hit rate r); r >= 1 => everything fits.
+        return min(1.0, self.cache_disk_ratio)
+
+
+MEMCACHED = StorageConfig(
+    mean_file_kb=0.1, cache_disk_ratio=2.0, mem_base_ms=0.18,
+    mem_kb_per_ms=2000.0, client_base_ms=0.016, client_ms_per_kb=0.0)
+
+
+def _sample_ms(cfg: StorageConfig, key: Array, shape: tuple[int, ...]) -> Array:
+    k_size, k_hit, k_seek = jax.random.split(key, 3)
+    if cfg.file_dist == "deterministic":
+        size = jnp.full(shape, cfg.mean_file_kb)
+    elif cfg.file_dist == "pareto":
+        a = cfg.file_pareto_alpha
+        xm = (a - 1.0) / a * cfg.mean_file_kb
+        u = jax.random.uniform(k_size, shape, minval=jnp.finfo(jnp.float32).tiny)
+        size = xm * u ** (-1.0 / a)
+    else:  # pragma: no cover - config error
+        raise ValueError(f"unknown file_dist {cfg.file_dist}")
+    hit = jax.random.uniform(k_hit, shape) < cfg.hit_rate
+    # seek with mean seek_ms and CV seek_cv: seek = m*(1-cv) + Exp(m*cv)
+    seek = cfg.seek_ms * (1.0 - cfg.seek_cv) + \
+        cfg.seek_ms * cfg.seek_cv * jax.random.exponential(k_seek, shape)
+    t_mem = cfg.mem_base_ms + size / cfg.mem_kb_per_ms
+    t_disk = seek + size / cfg.disk_kb_per_ms
+    return jnp.where(hit, t_mem, t_disk)
+
+
+def mean_service_ms(cfg: StorageConfig) -> float:
+    h = cfg.hit_rate
+    t_mem = cfg.mem_base_ms + cfg.mean_file_kb / cfg.mem_kb_per_ms
+    t_disk = cfg.seek_ms + cfg.mean_file_kb / cfg.disk_kb_per_ms
+    return h * t_mem + (1.0 - h) * t_disk
+
+
+def client_overhead_ms(cfg: StorageConfig) -> float:
+    return cfg.client_base_ms + cfg.client_ms_per_kb * cfg.mean_file_kb
+
+
+def service_dist(cfg: StorageConfig) -> tuple[ServiceDist, float, float]:
+    """(unit-mean ServiceDist, ms_scale, normalized client overhead).
+
+    Feed the ServiceDist + overhead into `queueing.SimConfig`; multiply
+    simulated responses by ms_scale to get milliseconds.
+    """
+    scale = mean_service_ms(cfg)
+
+    def sample(key: Array, shape: tuple[int, ...]) -> Array:
+        return _sample_ms(cfg, key, shape) / scale
+
+    name = (f"storage(file={cfg.mean_file_kb:g}KB,{cfg.file_dist},"
+            f"cache={cfg.cache_disk_ratio:g})")
+    dist = ServiceDist(name, sample)
+    overhead = client_overhead_ms(cfg) / scale
+    return dist, scale, overhead

@@ -1,0 +1,71 @@
+"""Threshold-load estimation (paper §2.1).
+
+The threshold load is "the largest utilization below which replication always
+helps mean response time". The paper's results: 1/3 for exponential service
+(Theorem 1), ~25.82% for deterministic service (conjectured global worst
+case), approaching 50% for sufficiently heavy-tailed service.
+
+Two estimators:
+  * ``threshold_bisect`` — bisection on the sign of the CRN-paired gain
+    mean_k1(rho) - mean_k2(rho). Precise; used by tests.
+  * ``threshold_grid``  — one coupled grid sweep + crossing interpolation.
+    Cheap; used by the Figure 2/3 benchmarks which need dozens of thresholds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributions import ServiceDist
+from repro.core.queueing import SimConfig, replication_gain
+
+Array = jax.Array
+
+
+def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
+                     k: int = 2, lo: float = 0.02, hi: float = 0.499,
+                     iters: int = 10, n_seeds: int = 3) -> float:
+    """Bisection on the CRN-paired replication gain.
+
+    Assumes the gain changes sign once on [lo, hi] (true for every family the
+    paper studies). Returns the estimated crossing point; if replication
+    helps on the whole interval, returns ``hi`` (threshold >= hi).
+    """
+    def gain_at(rho: float, skey: Array) -> float:
+        g = replication_gain(skey, dist, jnp.asarray([rho]), cfg, k=k,
+                             n_seeds=n_seeds)
+        return float(g[0])
+
+    keys = jax.random.split(key, iters + 2)
+    if gain_at(hi, keys[-1]) > 0.0:
+        return hi
+    if gain_at(lo, keys[-2]) < 0.0:
+        return lo
+    a, b = lo, hi
+    for i in range(iters):
+        mid = 0.5 * (a + b)
+        if gain_at(mid, keys[i]) > 0.0:
+            a = mid
+        else:
+            b = mid
+    return 0.5 * (a + b)
+
+
+def threshold_grid(key: Array, dist: ServiceDist, cfg: SimConfig, *,
+                   k: int = 2, rhos: Array | None = None,
+                   n_seeds: int = 2) -> float:
+    """Grid sweep + linear interpolation of the first sign change."""
+    if rhos is None:
+        rhos = jnp.linspace(0.05, 0.495, 24)
+    g = replication_gain(key, dist, rhos, cfg, k=k, n_seeds=n_seeds)
+    g = jnp.asarray(g)
+    neg = jnp.where(g < 0.0)[0]
+    if neg.size == 0:
+        return float(rhos[-1])  # helps everywhere we looked: threshold >= max
+    i = int(neg[0])
+    if i == 0:
+        return float(rhos[0])
+    # linear interpolation between the last positive and first negative point
+    x0, x1 = float(rhos[i - 1]), float(rhos[i])
+    y0, y1 = float(g[i - 1]), float(g[i])
+    return x0 + (x1 - x0) * y0 / (y0 - y1)

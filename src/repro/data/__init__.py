@@ -1,0 +1,1 @@
+"""Deterministic data pipeline + hedged (first-of-k) prefetcher."""

@@ -1,0 +1,2 @@
+"""Distribution: sharding rules + layouts, ShardCtx activation constraints,
+hierarchical collectives, elastic replanning, experimental pipeline PP."""

@@ -1,0 +1,65 @@
+"""Activation-sharding context threaded through the model code.
+
+``ShardCtx`` names which mesh axes shard each logical activation dimension.
+``constrain`` is a no-op when no context is set (single-device tests), so
+model code can sprinkle constraints freely.
+
+Axis assignments per (recipe x step kind) are produced by
+``repro.distributed.sharding.make_layout``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+AxisSpec = tuple[str, ...] | None  # mesh axes for one logical dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    batch: AxisSpec = None        # batch dim of activations
+    seq: AxisSpec = None          # sequence dim (SP/CP)
+    kv_seq: AxisSpec = None       # KV-cache sequence dim (decode)
+    heads: AxisSpec = None        # attention heads / d_inner (TP)
+    model_axis: str = "model"     # the TP/EP axis name
+    ep_axes: tuple[str, ...] = ("model",)  # expert-parallel axes
+    recipe: str = "tp"
+
+    def spec(self, *dims: AxisSpec) -> P:
+        return P(*[d if d else None for d in dims])
+
+
+def _norm(axes: AxisSpec) -> AxisSpec:
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes) or None
+
+
+def constrain(x: Array, ctx: ShardCtx | None, *dims: AxisSpec) -> Array:
+    """with_sharding_constraint if ctx is set; identity otherwise."""
+    if ctx is None:
+        return x
+    spec = P(*[_norm(d) for d in dims])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def constrain_tree(tree: Any, ctx: ShardCtx | None,
+                   spec_fn) -> Any:
+    """Constrain every leaf; ``spec_fn(path, leaf) -> tuple of AxisSpec``."""
+    if ctx is None:
+        return tree
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        dims = spec_fn(path, leaf)
+        out.append(constrain(leaf, ctx, *dims) if dims is not None else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

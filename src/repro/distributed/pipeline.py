@@ -1,0 +1,75 @@
+"""Experimental 2-stage pipeline parallelism over the ``pod`` axis.
+
+GPipe-style: the layer stack is split into one stage per pod; microbatches
+flow stage-to-stage via ``collective_permute`` under ``shard_map``. With S
+stages and M microbatches the bubble fraction is (S-1)/(M+S-1) — at S=2,
+M=8 that is 11%.
+
+This exists as the scale-out alternative to pod-as-DP when the per-pod
+batch would otherwise shrink below efficiency (DESIGN.md §5). The dry-run's
+default multi-pod layouts use pod-as-DP; this module is exercised by its
+own unit test on fake devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+
+def pipeline_apply(stage_fn: Callable[[PyTree, jax.Array], jax.Array],
+                   stage_params: PyTree, x: jax.Array, mesh: Mesh,
+                   axis: str = "pod") -> jax.Array:
+    """Run ``n_stages`` sequential stages over microbatches of ``x``.
+
+    stage_params: pytree whose leaves have a leading n_stages dim (stage s
+    uses slice s). x: (n_micro, mb, ...) microbatched input, sharded over
+    ``axis`` on dim 0 is NOT required — x is passed replicated; outputs are
+    returned replicated from the last stage.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x.shape[0]
+    ticks = n_micro + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    p_specs = jax.tree.map(lambda _: P(axis), stage_params)
+
+    def run(p_local, x_all):
+        stage = jax.lax.axis_index(axis)
+        p_stage = jax.tree.map(lambda a: a[0], p_local)
+        buf = jnp.zeros_like(x_all[0])          # current activation
+        outs = jnp.zeros_like(x_all)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (when valid)
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            inject = jnp.where(t < n_micro, x_all[mb_idx], jnp.zeros_like(buf))
+            cur_in = jnp.where(stage == 0, inject, buf)
+            y = stage_fn(p_stage, cur_in)
+            # pass to the next stage
+            nxt = jax.lax.ppermute(y, axis, perm) if n_stages > 1 else y
+            # last stage emits microbatch t - (n_stages - 1)
+            out_idx = t - (n_stages - 1)
+            valid = jnp.logical_and(out_idx >= 0, stage == n_stages - 1)
+            outs = jnp.where(
+                valid,
+                jax.lax.dynamic_update_index_in_dim(
+                    outs, y, jnp.clip(out_idx, 0, n_micro - 1), 0),
+                outs)
+            return (nxt, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(ticks))
+        # broadcast the last stage's outputs to every pod
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)),
+            axis)
+        return outs
+
+    return jax.shard_map(
+        run, mesh=mesh, in_specs=(p_specs, P()), out_specs=P(),
+        check_vma=False)(stage_params, x)

@@ -1,0 +1,471 @@
+"""Sharding rules: map (param/cache path, shape) -> PartitionSpec, and build
+activation layouts per (recipe x step kind).
+
+Two recipes (chosen per arch in its config):
+  * ``tp``   — Megatron-style: attention heads / d_ff / experts / vocab over
+    the 16-way ``model`` axis; batch over ``data`` (and ``pod``); large
+    params additionally ZeRO-sharded over ``data`` on a free dimension.
+  * ``fsdp`` — for archs whose head count does not divide 16 (gemma2 8H,
+    granite 24H, llava 56H): batch over ``data x model``; every large param
+    sharded over ("data","model") on its largest divisible dim and gathered
+    at use (ZeRO-3); MoE experts still EP over ``model``.
+
+Decode always shards the KV-cache SEQUENCE over ``model`` (plus ``data`` and
+``pod`` for long_500k) — divisibility-free w.r.t. head counts, and the
+natural layout for flash-decoding-style distributed attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed.ctx import ShardCtx
+
+PyTree = Any
+
+ZERO_MIN_SIZE = 1 << 20  # leaves smaller than 1 MiB-ish stay replicated
+
+
+# ---------------------------------------------------------------------------
+# Path utilities
+# ---------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path_str(fn, tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fn(_path_str(path), leaf) for path, leaf in flat])
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+
+def _tp_base_spec(path: str, shape: tuple[int, ...],
+                  cfg: ModelConfig) -> list:
+    """Base spec (no stacking, no ZeRO) for the tp recipe."""
+    m = "model"
+    heads_ok = cfg.n_heads % 16 == 0
+    kv_ok = cfg.n_kv_heads % 16 == 0
+    spec: list = [None] * len(shape)
+    if "embed/table" in path:
+        # vocab-sharded: local logits + tiny logsumexp psum in the CE;
+        # fall back to d_model sharding when the vocab is not divisible
+        # (mamba2's 50280).
+        if shape[-2] % 16 == 0:
+            spec[-2] = m
+        elif shape[-1] % 16 == 0:
+            spec[-1] = m
+        return spec
+    if "lm_head/w" in path:
+        if shape[-1] % 16 == 0:
+            spec[-1] = m
+        elif shape[-2] % 16 == 0:
+            spec[-2] = m
+        return spec
+    if path.endswith("mixer/wq/w") or path.endswith("mixer/wq/b"):
+        if heads_ok:
+            spec[-2 if path.endswith("w") else -2] = m
+        return spec
+    if any(path.endswith(s) for s in ("mixer/wk/w", "mixer/wv/w",
+                                      "mixer/wk/b", "mixer/wv/b")):
+        if kv_ok:
+            spec[-2] = m
+        return spec
+    if path.endswith("mixer/wo/w"):
+        if heads_ok:
+            spec[-3] = m
+        return spec
+    # MLA
+    if any(s in path for s in ("wuq/w", "wuk/w", "wuv/w")):
+        spec[-2] = m  # head dim (deepseek: 128 heads)
+        return spec
+    if "mixer/wo/w" in path:
+        spec[-3] = m
+        return spec
+    # dense MLP (gate/up column-parallel, out row-parallel)
+    if any(path.endswith(s) for s in ("mlp/gate/w", "mlp/up/w",
+                                      "shared/gate/w", "shared/up/w")):
+        spec[-1] = m
+        return spec
+    if any(path.endswith(s) for s in ("mlp/gate/b", "mlp/up/b",
+                                      "shared/gate/b", "shared/up/b")):
+        spec[-1] = m
+        return spec
+    if path.endswith("mlp/out/w") or path.endswith("shared/out/w"):
+        spec[-2] = m
+        return spec
+    # MoE experts (E leading dim)
+    if any(s in path for s in ("mlp/w_up", "mlp/w_gate", "mlp/w_out")):
+        spec[-3] = m
+        return spec
+    # SSD
+    if any(path.endswith(s) for s in ("z_proj/w", "x_proj/w", "dt_proj/w")):
+        spec[-1] = m
+        return spec
+    if path.endswith("conv_x_w"):
+        spec[-1] = m
+        return spec
+    if any(path.endswith(s) for s in ("conv_x_b", "dt_bias", "a_log",
+                                      "d_skip")):
+        spec[-1] = m
+        return spec
+    if "mixer/norm/scale" in path:  # SSD gated-norm over d_inner
+        spec[-1] = m
+        return spec
+    if path.endswith("out_proj/w"):
+        spec[-2] = m
+        return spec
+    # RG-LRU
+    if any(path.endswith(s) for s in ("in_gate/w", "in_rec/w")):
+        spec[-1] = m
+        return spec
+    if path.endswith("conv_w"):
+        spec[-1] = m
+        return spec
+    if path.endswith("conv_b") or path.endswith("lam"):
+        spec[-1] = m
+        return spec
+    if path.endswith("wa") or path.endswith("wx"):
+        spec[-3] = m
+        return spec
+    if path.endswith("ba") or path.endswith("bx"):
+        spec[-2] = m
+        return spec
+    if path.endswith("mixer/out/w"):
+        spec[-2] = m
+        return spec
+    return spec  # norms, router, biases, small projections: replicated
+
+
+def _fsdp_base_spec(path: str, shape: tuple[int, ...],
+                    cfg: ModelConfig) -> list:
+    """fsdp recipe: largest divisible dim over ('data','model')."""
+    spec: list = [None] * len(shape)
+    if any(s in path for s in ("mlp/w_up", "mlp/w_gate", "mlp/w_out")):
+        spec[-3] = "model"  # EP for experts
+        if shape[-2] % 16 == 0 and _size(shape) >= ZERO_MIN_SIZE:
+            spec[-2] = "data"
+        return spec
+    if "router" in path or _size(shape) < ZERO_MIN_SIZE:
+        return spec
+    # pick the largest dim divisible by |data|*|model| = 256, else by 16
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] % 256 == 0:
+            spec[i] = ("data", "model")
+            return spec
+    for i in order:
+        if shape[i] % 16 == 0:
+            spec[i] = "data"
+            return spec
+    return spec
+
+
+def _size(shape: tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def _zero_over_data(spec: list, shape: tuple[int, ...],
+                    path: str = "") -> list:
+    """tp recipe: additionally shard one free dim of large params over
+    ``data`` (ZeRO-style; gathered at use). Embedding tables are exempt:
+    ZeRO-sharding the gather's embedding dim forces SPMD into an
+    "involuntary full rematerialization" of the gathered activations
+    (observed in the nemotron dry-run) — far costlier than the memory it
+    saves."""
+    if _size(shape) < ZERO_MIN_SIZE:
+        return spec
+    if "embed/table" in path or "lm_head" in path:
+        return spec
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and shape[i] % 16 == 0:
+            spec[i] = "data"
+            return spec
+    return spec
+
+
+def _inference_base_spec(path: str, shape: tuple[int, ...],
+                         cfg: ModelConfig,
+                         ep_axes: tuple[str, ...]) -> list:
+    """Decode-time rule: weights are read once per TOKEN, so ZeRO-style
+    gather-at-use is catastrophic (it re-gathers the model every step).
+    Instead: experts sharded over all EP axes (tokens move, not weights);
+    every other matrix sharded on its largest model-divisible dim (the
+    per-layer psum of a (B, 1, D) activation is tiny); no data-axis
+    sharding (replicas of the non-expert weights across `data` serve the
+    batch in parallel)."""
+    spec: list = [None] * len(shape)
+    if any(s in path for s in ("mlp/w_up", "mlp/w_gate", "mlp/w_out")):
+        # fall back to model-only EP if the expert count doesn't divide
+        ep = ep_axes
+        size = 1
+        for a in ep:
+            size *= {"pod": 2, "data": 16, "model": 16}[a]
+        if shape[-3] % size != 0:
+            ep = ("model",)
+        spec[-3] = ep[0] if len(ep) == 1 else ep
+        return spec
+    if "embed/table" in path:
+        if shape[-2] % 16 == 0:
+            spec[-2] = "model"
+        elif shape[-1] % 16 == 0:
+            spec[-1] = "model"
+        return spec
+    if "lm_head/w" in path:
+        if shape[-1] % 16 == 0:
+            spec[-1] = "model"
+        elif shape[-2] % 16 == 0:
+            spec[-2] = "model"
+        return spec
+    if "router" in path or _size(shape) < (1 << 16):
+        return spec
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] % 16 == 0:
+            spec[i] = "model"
+            return spec
+    return spec
+
+
+def param_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig, *,
+               inference: bool = False,
+               ep_axes: tuple[str, ...] = ("model",)) -> P:
+    stacked = path.startswith("blocks/")
+    base_shape = shape[1:] if stacked else shape
+    if inference:
+        spec = _inference_base_spec(path, base_shape, cfg, ep_axes)
+    elif cfg.recipe == "fsdp":
+        spec = _fsdp_base_spec(path, base_shape, cfg)
+    else:
+        spec = _tp_base_spec(path, base_shape, cfg)
+        spec = _zero_over_data(spec, base_shape, path)
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh,
+                    params_shapes: PyTree, *, inference: bool = False,
+                    ep_axes: tuple[str, ...] = ("model",)) -> PyTree:
+    return tree_map_with_path_str(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf.shape, cfg, inference=inference,
+                             ep_axes=ep_axes)),
+        params_shapes)
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, opt_shapes: PyTree,
+                  params_shapes: PyTree) -> PyTree:
+    """Optimizer state mirrors params; Adafactor's factored leaves drop the
+    corresponding trailing dims of the param spec."""
+    param_specs = tree_map_with_path_str(
+        lambda path, leaf: param_spec(path, leaf.shape, cfg), params_shapes)
+
+    def spec_for(path: str, leaf) -> NamedSharding:
+        # path looks like "m/<param path>" / "v_row/<param path>" etc.
+        head, _, rest = path.partition("/")
+        sub = _lookup(param_specs, rest)
+        if sub is None:
+            return NamedSharding(mesh, P())
+        base = list(sub)
+        nd = len(leaf.shape)
+        if head == "v_row" and len(base) == nd + 1:
+            spec = base[:-1]            # param shape minus last dim
+        elif head == "v_col" and len(base) == nd + 1:
+            spec = base[:-2] + base[-1:]  # minus second-to-last dim
+        elif len(base) == nd:           # m / v / master / unfactored v_col
+            spec = base
+        else:                           # unfactored v_row placeholder (1,)
+            spec = [None] * nd
+        return NamedSharding(mesh, P(*spec))
+
+    return tree_map_with_path_str(spec_for, opt_shapes)
+
+
+def _lookup(tree: PyTree, path: str):
+    cur = tree
+    for part in path.split("/"):
+        if isinstance(cur, dict):
+            if part not in cur:
+                return None
+            cur = cur[part]
+        elif isinstance(cur, (list, tuple)):
+            try:
+                cur = cur[int(part)]
+            except (ValueError, IndexError):
+                return None
+        else:
+            return cur
+    return cur
+
+
+# ---------------------------------------------------------------------------
+# Activation layouts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    batch: tuple[str, ...] | None
+    seq: tuple[str, ...] | None
+    kv_seq: tuple[str, ...] | None
+    ep_axes: tuple[str, ...] = ("model",)
+    inference: bool = False
+
+
+def _decode_ep_axes(cfg: ModelConfig, multi_pod: bool) -> tuple[str, ...]:
+    """Decode EP: spread experts over every axis that divides them —
+    deepseek's 256 experts cover the full (model x data) 256 chips."""
+    if cfg.moe is None:
+        return ("model",)
+    e = cfg.moe.padded_experts
+    axes: tuple[str, ...] = ("model",)
+    if e % 256 == 0:
+        axes = ("model", "data")
+    if multi_pod and e % 512 == 0:
+        axes = ("model", "data", "pod")
+    return axes
+
+
+def make_layout(cfg: ModelConfig, kind: str, multi_pod: bool,
+                global_batch: int) -> Layout:
+    pod = ("pod",) if multi_pod else ()
+    if cfg.recipe == "fsdp":
+        if kind == "train":
+            return Layout(batch=("data", "model"), seq=pod or None,
+                          kv_seq=None)
+        if kind == "prefill":
+            return Layout(batch=("data",), seq=(*pod, "model"), kv_seq=None)
+        # decode
+        ep = _decode_ep_axes(cfg, multi_pod)
+        if global_batch == 1:
+            return Layout(batch=None, seq=None,
+                          kv_seq=(*pod, "data", "model"), ep_axes=ep,
+                          inference=True)
+        return Layout(batch=(*pod, "data"), seq=None, kv_seq=("model",),
+                      ep_axes=ep, inference=True)
+    # tp
+    if kind in ("train", "prefill"):
+        batch = (*pod, "data")
+        if global_batch % _axes_size_guess(batch) != 0:
+            batch = ("data",)
+        return Layout(batch=batch, seq=None, kv_seq=None)
+    ep = _decode_ep_axes(cfg, multi_pod)
+    if global_batch == 1:
+        return Layout(batch=None, seq=None, kv_seq=(*pod, "data", "model"),
+                      ep_axes=ep, inference=True)
+    return Layout(batch=(*pod, "data"), seq=None, kv_seq=("model",),
+                  ep_axes=ep, inference=True)
+
+
+def _axes_size_guess(axes: tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= {"pod": 2, "data": 16, "model": 16}[a]
+    return size
+
+
+def make_ctx(cfg: ModelConfig, mesh: Mesh, layout: Layout) -> ShardCtx:
+    return ShardCtx(mesh=mesh, batch=layout.batch, seq=layout.seq,
+                    kv_seq=layout.kv_seq, model_axis="model",
+                    ep_axes=layout.ep_axes, recipe=cfg.recipe)
+
+
+# ---------------------------------------------------------------------------
+# Cache + batch shardings
+# ---------------------------------------------------------------------------
+
+
+def _divides(axes: tuple[str, ...] | None, mesh: Mesh, dim: int) -> bool:
+    if not axes:
+        return False
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim % size == 0
+
+
+def cache_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig,
+               mesh: Mesh, layout: Layout) -> P:
+    stacked = path.startswith("blocks/")
+    base = shape[1:] if stacked else shape
+    spec: list = [None] * len(base)
+    b_axes = layout.batch if _divides(layout.batch, mesh, base[0]) else None
+    kv = layout.kv_seq
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in ("k", "v"):
+        spec[0] = b_axes
+        if _divides(kv, mesh, base[1]):
+            spec[1] = kv
+        elif kv and base[1] % mesh.shape["model"] == 0:
+            spec[1] = ("model",)
+    elif leaf in ("c_kv", "k_rope"):
+        spec[0] = b_axes
+        if _divides(kv, mesh, base[1]):
+            spec[1] = kv
+        elif kv and base[1] % mesh.shape["model"] == 0:
+            spec[1] = ("model",)
+    elif leaf == "pos":
+        pass  # replicated slot-position vectors
+    elif leaf == "h" and len(base) == 4:   # ssd state (B, H, P, N)
+        spec[0] = b_axes
+        if base[1] % mesh.shape["model"] == 0:
+            spec[1] = ("model",)
+    elif leaf == "h":                       # rglru state (B, W)
+        spec[0] = b_axes
+        if base[-1] % mesh.shape["model"] == 0:
+            spec[-1] = ("model",)
+    elif leaf in ("x", "conv"):             # conv states (B, cw-1, C)
+        spec[0] = b_axes
+        if base[-1] % mesh.shape["model"] == 0:
+            spec[-1] = ("model",)
+    elif leaf == "bc":
+        spec[0] = b_axes
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, layout: Layout,
+                    cache_shapes: PyTree) -> PyTree:
+    return tree_map_with_path_str(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf.shape, cfg, mesh, layout)),
+        cache_shapes)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, layout: Layout,
+                    batch_shapes: PyTree) -> PyTree:
+    def spec(path: str, leaf) -> NamedSharding:
+        dims: list = [None] * len(leaf.shape)
+        if _divides(layout.batch, mesh, leaf.shape[0]):
+            dims[0] = layout.batch
+        if "tokens" in path and len(leaf.shape) >= 2 and \
+                _divides(layout.seq, mesh, leaf.shape[1]):
+            dims[1] = layout.seq
+        return NamedSharding(mesh, P(*dims))
+
+    return tree_map_with_path_str(spec, batch_shapes)

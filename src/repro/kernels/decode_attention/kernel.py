@@ -1,0 +1,108 @@
+"""Pallas TPU decode-attention (flash-decoding style) kernel.
+
+One new token attends to a (possibly ring-buffered) KV cache. The grid is
+(batch, kv_heads, kv_blocks) with kv_blocks innermost-sequential; the online
+softmax state for the G = H/KV grouped query heads lives in VMEM scratch.
+All G heads of a KV group are processed per instance as one (G, block_kv)
+MXU matmul — for GQA decode this is what keeps the MXU busy (G x hd tiles)
+while the KV cache streams HBM->VMEM once, which is the roofline-limiting
+stream of decode.
+
+Validity masking is slot-based (ring buffers): a slot participates iff its
+recorded position is in [max(0, pos-window+1), pos].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _decode_kernel(pos_ref, slots_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float,
+                   window: int | None, softcap: float | None):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0, 0]
+    slots = slots_ref[0]                                # (bk,)
+    q = q_ref[0, 0].astype(jnp.float32)                 # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.logical_and(slots >= 0, slots <= pos)
+    if window is not None:
+        valid = jnp.logical_and(valid, slots > pos - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_kv", "interpret"))
+def decode_attention_grouped(q: jax.Array, k: jax.Array, v: jax.Array,
+                             slot_pos: jax.Array, pos: jax.Array, *,
+                             window: int | None = None,
+                             softcap: float | None = None,
+                             block_kv: int = 256,
+                             interpret: bool = False) -> jax.Array:
+    """q (B, KV, G, hd); k/v (B, KV, L, hd); slot_pos (1, L) -> like q."""
+    b, n_kv, g, hd = q.shape
+    length = k.shape[2]
+    block_kv = min(block_kv, length)
+    assert length % block_kv == 0, (length, block_kv)
+    grid = (b, n_kv, length // block_kv)
+
+    kernel = functools.partial(_decode_kernel, scale=hd**-0.5, window=window,
+                               softcap=softcap)
+    pos_arr = jnp.asarray(pos, dtype=jnp.int32).reshape(1, 1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h_, ik: (0, 0)),
+            pl.BlockSpec((1, block_kv), lambda b_, h_, ik: (0, ik)),
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b_, h_, ik: (b_, h_, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b_, h_, ik: (b_, h_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, slot_pos.reshape(1, -1), q, k, v)

@@ -1,0 +1,35 @@
+"""Jitted public wrapper for decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_grouped
+
+
+def _interpret_default() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     slot_pos: jax.Array, pos: jax.Array, *,
+                     window: int | None = None,
+                     softcap: float | None = None,
+                     block_kv: int = 256,
+                     interpret: bool | None = None) -> jax.Array:
+    """q (B, 1, H, hd); k/v (B, L, KV, hd); slot_pos (L,) -> (B, 1, H, hd)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, _, h, hd = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    length = k.shape[1]
+    bk = next(bb for bb in (block_kv, 128, 64, 32, 16, 8, 4, 2, 1)
+              if length % bb == 0)
+    qg = q.reshape(b, n_kv, g, hd)
+    kt = jnp.swapaxes(k, 1, 2)  # (B, KV, L, hd)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = decode_attention_grouped(qg, kt, vt, slot_pos, pos, window=window,
+                                   softcap=softcap, block_kv=bk,
+                                   interpret=interpret)
+    return out.reshape(b, 1, h, hd)

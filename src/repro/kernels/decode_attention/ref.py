@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         slot_pos: jax.Array, pos: jax.Array, *,
+                         window: int | None = None,
+                         softcap: float | None = None) -> jax.Array:
+    """q (B, 1, H, hd); k/v (B, L, KV, hd); slot_pos (L,) -> (B, 1, H, hd)."""
+    b, _, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= slot_pos > pos - window
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v)
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,131 @@
+"""Pallas TPU flash-attention kernel (causal GQA, sliding window, softcap).
+
+TPU adaptation of FlashAttention: the grid is (batch, q_heads, q_blocks,
+kv_blocks) with the kv dimension innermost — on TPU the innermost grid
+dimension executes sequentially on a core, so the online-softmax
+accumulators live in VMEM scratch and persist across kv steps. Block shapes
+are (block_q, head_dim) / (block_kv, head_dim) tiles staged HBM->VMEM by
+``pl.BlockSpec``; head_dim is the MXU lane dimension (128-aligned for every
+assigned arch: hd in {64, 128, 256}).
+
+Fully-masked (q_block, kv_block) pairs (above the causal diagonal or outside
+the sliding window) are skipped with ``pl.when`` — no MXU work is issued for
+them, which for long sequences halves the FLOPs vs dense attention (and for
+window w << S makes the kernel O(S*w)).
+
+GQA is expressed in the index_map: query head h reads kv head h * KV // H,
+so no KV replication is materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, block_q: int, block_kv: int, n_kv: int,
+                 window: int | None, softcap: float | None, seq_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+    # causal: this kv block intersects rows only if k_start <= q_end;
+    # window: only if the newest kv in block is within the window of the
+    # oldest q row.
+    needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bkv, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (bq, bkv)
+        alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_q", "block_kv", "interpret"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         window: int | None = None,
+                         softcap: float | None = None, block_q: int = 128,
+                         block_kv: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q (B, H, S, hd); k/v (B, KV, S, hd) -> (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    n_kv = k.shape[1]
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    grid = (b, h, s // block_q, s // block_kv)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=hd**-0.5, block_q=block_q, block_kv=block_kv,
+        n_kv=n_kv, window=window, softcap=softcap, seq_len=s)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b_, h_, iq, ik, n_kv=n_kv, h_tot=h:
+                         (b_, h_ * n_kv // h_tot, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b_, h_, iq, ik, n_kv=n_kv, h_tot=h:
+                         (b_, h_ * n_kv // h_tot, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,37 @@
+"""Jitted public wrapper: (B, S, H, hd) layout -> kernel's (B, H, S, hd)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+_ON_TPU = None
+
+
+def _interpret_default() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.devices()[0].platform == "tpu"
+    return not _ON_TPU
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int | None = None, softcap: float | None = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q (B, S, H, hd); k/v (B, S, KV, hd) -> (B, S, H, hd).
+
+    On non-TPU backends the kernel runs in interpret mode (CPU validation).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    s = q.shape[1]
+    bq = next(bb for bb in (block_q, 64, 32, 16, 8, 4, 2, 1) if s % bb == 0)
+    bk = next(bb for bb in (block_kv, 64, 32, 16, 8, 4, 2, 1) if s % bb == 0)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, window=window, softcap=softcap,
+                               block_q=bq, block_kv=bk, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

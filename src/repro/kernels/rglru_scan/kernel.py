@@ -1,0 +1,60 @@
+"""Pallas TPU kernel for the RG-LRU elementwise linear recurrence.
+
+h_t = a_t * h_{t-1} + b_t over (batch, time, width). The grid is
+(batch, width_blocks, time_blocks) with time innermost-sequential: the
+(1, block_w) carry lives in VMEM scratch and flows across time blocks, so
+HBM traffic is exactly one read of a/b and one write of h (the recurrence is
+bandwidth-bound; there is no MXU work). Within a block the time loop is a
+``fori_loop`` over VREG-resident (block_w,) lanes — the VPU parallelism is
+across the width lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, h_ref, carry_ref, *, block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    def step(t, carry):
+        h = a_ref[0, t, :] * carry + b_ref[0, t, :]
+        h_ref[0, t, :] = h
+        return h
+
+    carry = carry_ref[0]
+    carry = jax.lax.fori_loop(0, block_t, step, carry)
+    carry_ref[0] = carry
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_w",
+                                             "interpret"))
+def chunked_linear_scan_raw(a: jax.Array, b: jax.Array, *, block_t: int,
+                            block_w: int, interpret: bool = False):
+    bsz, length, width = a.shape
+    assert length % block_t == 0 and width % block_w == 0
+    grid = (bsz, width // block_w, length // block_t)
+    kernel = functools.partial(_scan_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_w),
+                         lambda ib, iw, it: (ib, it, iw)),
+            pl.BlockSpec((1, block_t, block_w),
+                         lambda ib, iw, it: (ib, it, iw)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_w),
+                               lambda ib, iw, it: (ib, it, iw)),
+        out_shape=jax.ShapeDtypeStruct((bsz, length, width), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

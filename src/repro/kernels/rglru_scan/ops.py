@@ -1,0 +1,27 @@
+"""Jitted public wrapper for the RG-LRU chunked linear scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import chunked_linear_scan_raw
+
+
+def _interpret_default() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def chunked_linear_scan(a: jax.Array, b: jax.Array, *,
+                        block_t: int = 64, block_w: int = 512,
+                        interpret: bool | None = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t along axis 1. a/b (B, L, W) -> h (B, L, W)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    _, length, width = a.shape
+    bt = next(t for t in (block_t, 32, 16, 8, 4, 2, 1) if length % t == 0)
+    bw = next(w for w in (block_w, 256, 128, 64, 32, 16, 8, 4, 2, 1)
+              if width % w == 0)
+    return chunked_linear_scan_raw(a.astype(jnp.float32),
+                                   b.astype(jnp.float32),
+                                   block_t=bt, block_w=bw,
+                                   interpret=interpret)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the RG-LRU linear scan kernel."""
+from __future__ import annotations
+
+import jax
+
+
+def linear_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 (h_{-1} = 0). a/b (B, L, W)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

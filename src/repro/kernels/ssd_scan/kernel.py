@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for the SSD (Mamba-2) intra-chunk computation.
+
+The chunked SSD algorithm's hot spot is the per-chunk quadratic term
+("state-space duality" — attention-like (Q, Q) weights per head) plus the
+per-chunk contributed state. Both are computed here per (batch x chunk,
+head) grid cell with the whole chunk resident in VMEM:
+
+    scores  = C B^T                      (Q, Q)   MXU
+    w[q,s]  = scores * exp(cum_q - cum_s) * dt_s  (causal-masked)
+    y_intra = w X                        (Q, P)   MXU
+    state   = (X * exp(total-cum) dt)^T B -> (P, N)  MXU
+
+Chunk sizes Q in {64, 128, 256} with P in {32, 64}, N 128 keep the working
+set << VMEM (Q*Q + 2*Q*N + Q*P floats ~ 0.5 MB at Q=256). The inter-chunk
+recurrence (tiny (H, P, N) state scan) stays in plain JAX.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, cum_ref, y_ref, st_ref):
+    x = x_ref[0, :, 0, :]                                   # (Q, P)
+    bmat = b_ref[0]                                         # (Q, N)
+    cmat = c_ref[0]                                         # (Q, N)
+    dt = dt_ref[0, :, 0]                                    # (Q,)
+    cum = cum_ref[0, :, 0]                                  # (Q,)
+    q = x.shape[0]
+
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    rel = cum[:, None] - cum[None, :]                       # (Q, Q)
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    gate = jnp.where(col <= row, jnp.exp(rel), 0.0)
+    w = scores * gate * dt[None, :]
+    y_ref[0, :, 0, :] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    total = cum[q - 1]
+    sgate = jnp.exp(total - cum) * dt                       # (Q,)
+    xs = x * sgate[:, None]                                 # (Q, P)
+    st_ref[0, 0] = jax.lax.dot_general(
+        xs, bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (P, N)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk_flat(xc, bc, cc, dtc, cum, *, interpret: bool = False):
+    """xc (BC, Q, H, P); bc/cc (BC, Q, N); dtc/cum (BC, Q, H).
+
+    Returns y (BC, Q, H, P) and states (BC, H, P, N), fp32.
+    """
+    bcn, q, h, p = xc.shape
+    n = bc.shape[-1]
+    grid = (bcn, h)
+
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, q, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, q, 1), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bcn, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bcn, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, bc, cc, dtc, cum)

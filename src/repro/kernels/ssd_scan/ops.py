@@ -1,0 +1,31 @@
+"""Jitted public wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_flat
+
+
+def _interpret_default() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def ssd_intra_chunk(xc, bc, cc, dtc, cum, *, interpret: bool | None = None):
+    """xc (B,NC,Q,H,P) f32; bc/cc (B,NC,Q,N); dtc/cum (B,NC,Q,H).
+
+    Returns y_intra (B,NC,Q,H,P), states (B,NC,H,P,N) — matches ref.py.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    b, nc, q, h, p = xc.shape
+    n = bc.shape[-1]
+    flat = lambda t, s: t.reshape(b * nc, *s)
+    y, st = ssd_intra_chunk_flat(
+        flat(xc.astype(jnp.float32), (q, h, p)),
+        flat(bc.astype(jnp.float32), (q, n)),
+        flat(cc.astype(jnp.float32), (q, n)),
+        flat(dtc.astype(jnp.float32), (q, h)),
+        flat(cum.astype(jnp.float32), (q, h)),
+        interpret=interpret)
+    return y.reshape(b, nc, q, h, p), st.reshape(b, nc, h, p, n)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(xc, bc, cc, dtc, cum):
+    """Intra-chunk SSD term + per-chunk state contributions.
+
+    xc (B,NC,Q,H,P) f32; bc/cc (B,NC,Q,N); dtc/cum (B,NC,Q,H).
+    Returns y_intra (B,NC,Q,H,P), states (B,NC,H,P,N).
+    """
+    q = xc.shape[2]
+    total = cum[:, :, -1:]                                  # (B,NC,1,H)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,NC,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    gate = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cc, bc)
+    w = scores[..., None] * gate * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", w, xc)
+    sgate = jnp.exp(total - cum) * dtc                      # (B,NC,Q,H)
+    states = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", sgate, xc, bc)
+    return y_intra, states

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+against the production mesh, and extract the roofline inputs.
+
+For each cell this produces a JSON record with:
+  * memory_analysis (bytes per device: args / outputs / temps / code),
+  * cost_analysis (HLO flops / bytes accessed, per-device),
+  * collective_bytes per collective kind, parsed from the optimized HLO
+    (while-loop bodies are multiplied by their inferred trip counts),
+so the roofline table (EXPERIMENTS.md §Roofline) is derived entirely from
+compiled artifacts, not estimates.
+
+Usage:
+  python -m repro.launch.dryrun --arch nemotron-4-15b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.configs.base import SHAPES
+from repro.distributed import sharding
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode as dec
+from repro.models import lm
+from repro.training.optimizer import make_optimizer
+from repro.training.step import make_train_step
+
+def _with_sharding(shapes, shardings):
+    return jax.tree.map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+        shapes, shardings)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = cfgbase.get_config(arch)
+    shape = SHAPES[shape_name]
+    layout = sharding.make_layout(cfg, shape.kind, multi_pod,
+                                  shape.global_batch)
+    ctx = sharding.make_ctx(cfg, mesh, layout)
+
+    params = sp.param_specs(cfg)
+    p_sh = sharding.param_shardings(cfg, mesh, params,
+                                    inference=layout.inference,
+                                    ep_axes=layout.ep_axes)
+    params_in = _with_sharding(params, p_sh)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        opt_shapes = sp.opt_state_specs(cfg, params)
+        o_sh = sharding.opt_shardings(cfg, mesh, opt_shapes, params)
+        batch = sp.batch_specs(cfg, shape)
+        b_sh = sharding.batch_shardings(cfg, mesh, layout, batch)
+        step_fn = make_train_step(cfg, opt, ctx=ctx)
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1),
+                         out_shardings=(p_sh, o_sh, None))
+        lowered = jitted.lower(params_in, _with_sharding(opt_shapes, o_sh),
+                               _with_sharding(batch, b_sh),
+                               jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.kind == "prefill":
+        batch = sp.batch_specs(cfg, shape)
+        b_sh = sharding.batch_shardings(cfg, mesh, layout, batch)
+
+        def prefill_fn(params, batch):
+            return dec.prefill(params, cfg, batch, shape.seq_len, ctx=ctx)
+
+        jitted = jax.jit(prefill_fn)
+        lowered = jitted.lower(params_in, _with_sharding(batch, b_sh))
+    else:  # decode
+        d = sp.decode_specs(cfg, shape)
+        c_sh = sharding.cache_shardings(cfg, mesh, layout, d["cache"])
+        t_sh = sharding.batch_shardings(cfg, mesh, layout,
+                                        {"tokens": d["tokens"]})["tokens"]
+
+        def serve_step(params, cache, tokens, pos):
+            return dec.decode_step(params, cfg, cache, tokens, pos, ctx=ctx)
+
+        jitted = jax.jit(serve_step, donate_argnums=(1,),
+                         out_shardings=(None, c_sh))
+        lowered = jitted.lower(
+            params_in, _with_sharding(d["cache"], c_sh),
+            jax.ShapeDtypeStruct(d["tokens"].shape, d["tokens"].dtype,
+                                 sharding=t_sh),
+            d["pos"])
+    return lowered, cfg, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path) -> dict:
+    t0 = time.time()
+    record: dict = {"arch": arch, "shape": shape_name,
+                    "mesh": "multi" if multi_pod else "single"}
+    try:
+        lowered, cfg, mesh = lower_cell(arch, shape_name, multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        record["ok"] = True
+        record["lower_s"] = round(t_lower, 1)
+        record["compile_s"] = round(t_compile, 1)
+        record["devices"] = mesh.size
+        try:
+            ma = compiled.memory_analysis()
+            for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes"):
+                record[field] = int(getattr(ma, field, 0) or 0)
+        except Exception as e:  # pragma: no cover
+            record["memory_analysis_error"] = str(e)
+        try:
+            ca = compiled.cost_analysis()
+            if ca:
+                record["flops"] = float(ca.get("flops", 0.0))
+                record["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+                record["transcendentals"] = float(
+                    ca.get("transcendentals", 0.0))
+        except Exception as e:  # pragma: no cover
+            record["cost_analysis_error"] = str(e)
+        try:
+            from repro.launch import hlo_analysis
+            hlo = compiled.as_text()
+            scaled = hlo_analysis.analyze(hlo)
+            record["scaled_flops"] = scaled["flops"]
+            record["scaled_io_bytes"] = scaled["io_bytes"]
+            record["collective_bytes"] = scaled["collective_bytes"]
+            record["hlo_bytes"] = len(hlo)
+        except Exception as e:  # pragma: no cover
+            record["hlo_error"] = str(e)
+    except Exception as e:
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["total_s"] = round(time.time() - t0, 1)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{record['mesh']}"
+    (out_dir / f"{tag}.json").write_text(json.dumps(record, indent=1))
+    status = "OK" if record.get("ok") else f"FAIL ({record.get('error')})"
+    print(f"[dryrun] {tag}: {status} in {record['total_s']}s", flush=True)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.all:
+        cells = [(a, s.name) for a in cfgbase.list_architectures()
+                 for s in cfgbase.cells(a)]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape_name}_{'multi' if mp else 'single'}"
+            if args.skip_existing and (out_dir / f"{tag}.json").exists():
+                existing = json.loads((out_dir / f"{tag}.json").read_text())
+                if existing.get("ok"):
+                    print(f"[dryrun] {tag}: cached OK", flush=True)
+                    continue
+            rec = run_cell(arch, shape_name, mp, out_dir)
+            n_fail += 0 if rec.get("ok") else 1
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Static analysis of optimized HLO text: FLOPs, HBM traffic, collective
+bytes — with while-loop bodies scaled by their known trip counts.
+
+XLA's ``compiled.cost_analysis()`` counts a while body ONCE regardless of
+trip count (verified empirically), which under-reports a scanned-layer model
+by ~n_layers x. This module re-derives the roofline terms from the HLO text:
+
+  * flops: 2 * |result| * |contracting dims| for every ``dot`` (including
+    dots wrapped inside fusion computations), scaled by loop trip counts
+    (read from ``backend_config={"known_trip_count":{"n":...}}``).
+  * io_bytes: sum over top-level materializing ops (fusion, dot, copy,
+    reduce, scatter/gather, dynamic-slice/update, collectives, convert...)
+    of result + operand buffer sizes — post-fusion buffers approximate HBM
+    traffic. An approximation (aliasing/fusion internals ignored), stated as
+    such in EXPERIMENTS.md.
+  * collective_bytes: result-shape bytes per collective kind.
+
+All values are PER DEVICE for an SPMD executable (the HLO is the per-device
+partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# NOTE: tuple result types contain `/*index=N*/` comments, so the type part
+# must be matched lazily up to the op name's opening paren (not `[^=]*`).
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[a-z0-9]+\[.*?)\s*"
+    r"([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_PARAM_RE = re.compile(
+    r"%?([\w\.\-]+):\s*([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)")
+_TRIP_RE = re.compile(r"known_trip_count[^}]*?\"n\":\"(\d+)\"")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+IO_OPS = {
+    "fusion", "dot", "convolution", "custom-call", "copy", "reduce",
+    "sort", "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+    "transpose", "convert", "reduce-window", "select-and-scatter", "pad",
+    "concatenate", "slice", "reverse", "cbrt", "rsqrt", "exponential",
+    "iota", "broadcast", "compare", "add", "multiply", "subtract", "divide",
+    "tanh", "select",
+} | set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(text: str) -> list[list[int]]:
+    return [[int(d) for d in dims.split(",") if d]
+            for _, dims in _SHAPE_RE.findall(text)]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict[str, str]
+    instrs: list[Instr]
+
+
+def parse_hlo(hlo: str) -> dict[str, Computation]:
+    """Computation headers are non-indented lines `%name (params) -> T {`
+    (optionally prefixed with ENTRY); params may contain nested tuple types,
+    so the name is taken from the first token and scalar-typed params are
+    regex-scanned (tuple-typed loop-carry params are resolved through their
+    get-tuple-element result types instead)."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        is_header = (line and not line[0].isspace() and ") -> " in line
+                     and line.rstrip().endswith("{"))
+        if is_header:
+            head = line.split("(", 1)[0].strip()
+            if head.startswith("ENTRY"):
+                head = head[len("ENTRY"):].strip()
+            name = head.lstrip("%").strip()
+            params = {p: t for p, t in _PARAM_RE.findall(
+                line.rsplit(") -> ", 1)[0])}
+            cur = Computation(name, params, [])
+            comps[name] = cur
+            continue
+        if cur is None:
+            continue
+        mi = _DEF_RE.match(line)
+        if mi:
+            cur.instrs.append(Instr(mi.group(1), mi.group(2), mi.group(3),
+                                    mi.group(4)))
+    return comps
+
+
+def _symbols(comp: Computation) -> dict[str, str]:
+    syms = dict(comp.params)
+    for ins in comp.instrs:
+        syms[ins.name] = ins.result_type
+    return syms
+
+
+def _dot_flops(ins: Instr, syms: dict[str, str]) -> float:
+    result_elems = 1
+    dims_list = _shape_dims(ins.result_type)
+    if dims_list:
+        for d in dims_list[0]:
+            result_elems *= d
+    # lhs operand name = first %ref in the parens
+    m = re.match(r"%?([\w\.\-]+)", ins.rest)
+    contract = 1
+    if m:
+        lhs_type = syms.get(m.group(1), "")
+        lhs_dims_list = _shape_dims(lhs_type)
+        mcd = _CDIMS_RE.search(ins.rest)
+        if lhs_dims_list and mcd:
+            lhs_dims = lhs_dims_list[0]
+            for ds in mcd.group(1).split(","):
+                if ds:
+                    idx = int(ds)
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+    return 2.0 * result_elems * contract
+
+
+def _operand_bytes(ins: Instr, syms: dict[str, str]) -> int:
+    total = 0
+    for name in re.findall(r"%([\w\.\-]+)", ins.rest.split(")", 1)[0]):
+        t = syms.get(name)
+        if t:
+            total += _shape_bytes(t)
+    return total
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    io_bytes: float = 0.0
+    collective_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def scaled(self, k: float) -> "Analysis":
+        out = Analysis(self.flops * k, self.io_bytes * k)
+        for key, v in self.collective_bytes.items():
+            out.collective_bytes[key] = v * k
+        return out
+
+    def add(self, other: "Analysis") -> None:
+        self.flops += other.flops
+        self.io_bytes += other.io_bytes
+        for key, v in other.collective_bytes.items():
+            self.collective_bytes[key] += v
+
+
+def _fusion_dot_flops(comp_name: str, comps: dict[str, Computation],
+                      seen: set[str]) -> float:
+    """dots nested inside fusion computations (flops only, no io)."""
+    if comp_name not in comps or comp_name in seen:
+        return 0.0
+    seen.add(comp_name)
+    comp = comps[comp_name]
+    syms = _symbols(comp)
+    total = 0.0
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            total += _dot_flops(ins, syms)
+        mcall = _CALLS_RE.search(ins.rest)
+        if mcall:
+            total += _fusion_dot_flops(mcall.group(1), comps, seen)
+    return total
+
+
+def analyze_computation(comp: Computation, comps: dict[str, Computation],
+                        memo: dict[str, Analysis]) -> Analysis:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = Analysis()  # cycle guard
+    syms = _symbols(comp)
+    total = Analysis()
+    for ins in comp.instrs:
+        if ins.op == "while":
+            trip = 1
+            mt = _TRIP_RE.search(ins.rest)
+            if mt:
+                trip = int(mt.group(1))
+            mb = _BODY_RE.search(ins.rest)
+            if mb and mb.group(1) in comps:
+                body = analyze_computation(comps[mb.group(1)], comps, memo)
+                total.add(body.scaled(trip))
+            mcnd = _COND_RE.search(ins.rest)
+            if mcnd and mcnd.group(1) in comps:
+                cond = analyze_computation(comps[mcnd.group(1)], comps, memo)
+                total.add(cond.scaled(trip))
+            continue
+        if ins.op in ("call", "conditional"):
+            for cname in re.findall(r"(?:to_apply|calls)=%?([\w\.\-]+)",
+                                    ins.rest):
+                if cname in comps:
+                    total.add(analyze_computation(comps[cname], comps, memo))
+            continue
+        if ins.op == "dot":
+            total.flops += _dot_flops(ins, syms)
+        elif ins.op == "fusion":
+            mcall = _CALLS_RE.search(ins.rest)
+            if mcall:
+                total.flops += _fusion_dot_flops(mcall.group(1), comps, set())
+        base_op = ins.op.replace("-done", "-start")
+        for kind in COLLECTIVES:
+            if base_op in (kind, kind + "-start"):
+                if ins.op.endswith("-done"):
+                    break
+                total.collective_bytes[kind] += _shape_bytes(ins.result_type)
+                break
+        if ins.op in IO_OPS:
+            if "dynamic-update-slice" in ins.name or \
+                    ins.op == "dynamic-update-slice":
+                # in-place aliased update (scan accumulators, cache writes):
+                # real traffic is the updated slice, approximated by the
+                # smallest operand, not the full buffer.
+                ops = [_shape_bytes(t) for t in
+                       (syms.get(nm) for nm in re.findall(
+                           r"%([\w\.\-]+)", ins.rest.split(")", 1)[0]))
+                       if t]
+                total.io_bytes += min(ops) if ops else 0
+                continue
+            total.io_bytes += _shape_bytes(ins.result_type)
+            total.io_bytes += _operand_bytes(ins, syms)
+    memo[comp.name] = total
+    return total
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_hlo(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m2 = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m2:
+                entry = m2.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation with the most instructions
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    res = analyze_computation(comps[entry], comps, {})
+    return {
+        "flops": res.flops,
+        "io_bytes": res.io_bytes,
+        "collective_bytes": {k: int(v)
+                             for k, v in res.collective_bytes.items()},
+    }

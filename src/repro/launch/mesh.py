@@ -1,0 +1,21 @@
+"""Production mesh definition.
+
+A function (not a module-level constant) so importing never touches jax
+device state. Single pod = 16 x 16 = 256 chips (v5e pod); multi-pod adds a
+leading "pod" axis (2 x 16 x 16 = 512 chips) — the pod axis is the
+data-center-network tier (gradient reduction across pods is hierarchical).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4) -> jax.sharding.Mesh:
+    """Small mesh for CI tests (requires XLA host-device override)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) cell.
+
+``input_specs`` gives the model inputs (token grids, patch embeddings,
+decode caches) as ShapeDtypeStructs — weak-type-correct, shardable, no
+device allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import decode as dec
+from repro.models import lm
+
+PyTree = Any
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    """Training / prefill batch. Training batches carry S+1 tokens (shifted
+    inside loss_fn); prefill batches carry the raw S-token prompt."""
+    b, s = shape.global_batch, shape.seq_len
+    extra = 1 if shape.kind == "train" else 0
+    if cfg.family == "audio":
+        return {"tokens": sds((b, s + extra, cfg.n_codebooks), jnp.int32)}
+    if cfg.patch_stub is not None:
+        n_p = cfg.patch_stub.n_patches
+        text = s - n_p
+        assert text > 0, f"{cfg.name}: seq {s} <= n_patches {n_p}"
+        return {
+            "tokens": sds((b, text + extra), jnp.int32),
+            "patches": sds((b, n_p, cfg.patch_stub.embed_dim), jnp.float32),
+        }
+    return {"tokens": sds((b, s + extra), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    """Decode step inputs: one new token + a cache of seq_len positions."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(partial(dec.init_cache, cfg, b, s))
+    if cfg.family == "audio":
+        tokens = sds((b, 1, cfg.n_codebooks), jnp.int32)
+    else:
+        tokens = sds((b, 1), jnp.int32)
+    return {"cache": cache, "tokens": tokens,
+            "pos": sds((), jnp.int32)}
+
+
+def param_specs(cfg: ModelConfig) -> PyTree:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(partial(lm.init, cfg=cfg), key)
+
+
+def opt_state_specs(cfg: ModelConfig, params: PyTree) -> PyTree:
+    from repro.training.optimizer import make_optimizer
+    opt = make_optimizer(cfg.optimizer)
+    return jax.eval_shape(opt.init, params)

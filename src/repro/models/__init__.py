@@ -1,0 +1,2 @@
+"""Model zoo: blocks (attention/MLA/MoE/RG-LRU/SSD) + the LM assembler
+(`lm` for training, `decode` for serving)."""

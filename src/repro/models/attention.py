@@ -1,0 +1,168 @@
+"""GQA attention: global and sliding-window variants, softcap, qk-norm.
+
+Two implementations:
+  * ``impl="ref"``   — pure jnp (used by CPU tests and the dry-run; the
+    dry-run targets the XLA TPU attention fusion path).
+  * ``impl="pallas"`` — the Pallas flash kernel in ``repro.kernels`` (TPU
+    target; validated on CPU in interpret mode by the kernel tests).
+
+Decode uses either a dense cache (global layers: (B, S_max, KV, hd), masked
+by current position) or a ring-buffer cache (local layers: (B, window, KV,
+hd) + slot-position vector).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import apply_rope, init_linear, linear, rmsnorm, softcap
+
+Array = jax.Array
+PyTree = Any
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key: Array, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: int, use_bias: bool = False, qk_norm: bool = False,
+                   dtype=layers.DEFAULT_PARAM_DTYPE) -> PyTree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(k1, d_model, (n_heads, head_dim), use_bias, dtype),
+        "wk": init_linear(k2, d_model, (n_kv, head_dim), use_bias, dtype),
+        "wv": init_linear(k3, d_model, (n_kv, head_dim), use_bias, dtype),
+        "wo": {"w": layers.truncated_normal(
+            k4, (n_heads, head_dim, d_model),
+            scale=(n_heads * head_dim) ** -0.5, dtype=dtype)},
+    }
+    if qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(head_dim)
+        p["k_norm"] = layers.init_rmsnorm(head_dim)
+    return p
+
+
+def _project_qkv(p: PyTree, x: Array, positions: Array, rope_theta: float,
+                 qk_norm: bool, eps: float):
+    q = linear(p["wq"], x)            # (B, S, H, hd)
+    k = linear(p["wk"], x)            # (B, S, KV, hd)
+    v = linear(p["wv"], x)
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q, eps)
+        k = rmsnorm(p["k_norm"], k, eps)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Array, cap: float | None) -> Array:
+    """Grouped scaled-dot-product attention, fp32 softmax.
+
+    q (B, Sq, H, hd), k/v (B, Sk, KV, hd), mask (B|1, Sq, Sk) bool.
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = softcap(scores, cap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def causal_mask(sq: int, window: int | None = None) -> Array:
+    """(1, sq, sq) causal (optionally banded) mask."""
+    i = jnp.arange(sq)[:, None]
+    j = jnp.arange(sq)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= j > i - window
+    return m[None]
+
+
+def attention(p: PyTree, x: Array, positions: Array, *, kind: str,
+              n_heads: int, n_kv: int, head_dim: int, window: int,
+              rope_theta: float, attn_softcap: float | None = None,
+              qk_norm: bool = False, eps: float = 1e-6,
+              impl: str = "ref", return_kv: bool = False, ctx=None):
+    """Causal self-attention over a full sequence (training / prefill)."""
+    q, k, v = _project_qkv(p, x, positions, rope_theta, qk_norm, eps)
+    if ctx is not None and ctx.seq:
+        # sequence-parallel prefill/train: Q stays seq-sharded, K/V are
+        # all-gathered over the seq axes (expressed as a constraint; XLA
+        # emits the all-gather).
+        from repro.distributed.ctx import constrain
+        k = constrain(k, ctx, ctx.batch, None, None, None)
+        v = constrain(v, ctx, ctx.batch, None, None, None)
+    w = window if kind == "local" else None
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, window=w, softcap=attn_softcap)
+    else:
+        mask = causal_mask(x.shape[1], w)
+        out = _sdpa(q, k, v, mask, attn_softcap)
+    y = jnp.einsum("bqhd,hdm->bqm", out, p["wo"]["w"].astype(out.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch: int, kind: str, max_len: int, window: int, n_kv: int,
+               head_dim: int, dtype=jnp.bfloat16) -> PyTree:
+    """Dense cache for global layers, ring buffer for local layers."""
+    length = window if kind == "local" else max_len
+    return {
+        "k": jnp.zeros((batch, length, n_kv, head_dim), dtype=dtype),
+        "v": jnp.zeros((batch, length, n_kv, head_dim), dtype=dtype),
+        # position stored in each slot; -1 = empty. Ring for local layers.
+        "pos": jnp.full((length,), -1, dtype=jnp.int32),
+    }
+
+
+def decode_attention(p: PyTree, x: Array, cache: PyTree, pos: Array, *,
+                     kind: str, n_heads: int, n_kv: int, head_dim: int,
+                     window: int, rope_theta: float,
+                     attn_softcap: float | None = None, qk_norm: bool = False,
+                     eps: float = 1e-6, impl: str = "ref"
+                     ) -> tuple[Array, PyTree]:
+    """One decode step. x (B, 1, D); pos scalar int32 (current position)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, positions, rope_theta, qk_norm, eps)
+
+    length = cache["k"].shape[1]
+    # dense caches have length >= pos so the modulo is the identity there;
+    # ring buffers (local layers) wrap.
+    slot = pos % length
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    slot_pos = cache["pos"].at[slot].set(pos)
+    new_cache = {"k": k, "v": v, "pos": slot_pos}
+
+    valid = slot_pos >= 0
+    if kind == "local":
+        valid &= slot_pos > pos - window
+    mask = valid[None, None, :]  # (1, 1, length)
+
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention(q, k, v, slot_pos, pos,
+                                      window=window if kind == "local" else None,
+                                      softcap=attn_softcap)
+    else:
+        out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), mask, attn_softcap)
+    y = jnp.einsum("bqhd,hdm->bqm", out, p["wo"]["w"].astype(out.dtype))
+    return y, new_cache

@@ -1,0 +1,340 @@
+"""Serving paths: cache init, prefill (cache building), single-token decode.
+
+Cache layouts (per block kind):
+  global / global_moe : dense KV cache (B, max_len, KV, hd) + slot positions
+  local               : ring-buffer KV cache (B, window, KV, hd) + slots
+  mla / mla_moe       : compressed latent cache (B, max_len, kv_lora + rope)
+  rec                 : {conv (B, cw-1, W), h (B, W)}
+  ssd                 : {conv {x, bc}, h (B, H, P, N)}
+
+Decode shapes are what the dry-run lowers for ``decode_32k``/``long_500k``:
+``decode_step`` with a cache of ShapeDtypeStructs at max_len = seq_len.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import ShardCtx, constrain
+from repro.models import attention as attn
+from repro.models import layers, lm, mla, rglru, ssd
+from repro.models.layers import linear, mlp, rmsnorm
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int,
+                     max_len: int) -> PyTree:
+    mixer, _ = lm._mixer_mlp(kind)
+    if mixer in ("global", "local"):
+        return attn.init_cache(batch, mixer, max_len, cfg.window,
+                               cfg.n_kv_heads, cfg.head_dim)
+    if mixer == "mla":
+        return mla.init_mla_cache(batch, max_len, cfg.mla)
+    if mixer == "rec":
+        return rglru.init_rglru_cache(batch, cfg.d_model, cfg.rglru)
+    if mixer == "ssd":
+        return ssd.init_ssd_cache(batch, cfg.d_model, cfg.ssm)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    cache: dict[str, Any] = {
+        "prefix": [init_block_cache(cfg, k, batch, max_len)
+                   for k in cfg.prefix],
+        "suffix": [init_block_cache(cfg, k, batch, max_len)
+                   for k in cfg.suffix],
+        "blocks": {},
+    }
+    for i, kind in enumerate(cfg.pattern):
+        one = init_block_cache(cfg, kind, batch, max_len)
+        cache["blocks"][f"pos{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.repeats, *a.shape)
+                                       ).copy(), one)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Per-block decode
+# ---------------------------------------------------------------------------
+
+
+def _theta(cfg: ModelConfig, mixer: str) -> float:
+    if mixer == "local" and cfg.rope_local_theta:
+        return cfg.rope_local_theta
+    return cfg.rope_theta
+
+
+def block_decode(p: PyTree, cache: PyTree, x: Array, cfg: ModelConfig,
+                 kind: str, pos: Array, ctx: ShardCtx | None,
+                 impl: str) -> tuple[Array, PyTree]:
+    mixer, mlp_kind = lm._mixer_mlp(kind)
+    h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+    if mixer in ("global", "local"):
+        h, new_cache = attn.decode_attention(
+            p["mixer"], h, cache, pos, kind=mixer, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim, window=cfg.window,
+            rope_theta=_theta(cfg, mixer), attn_softcap=cfg.attn_softcap,
+            qk_norm=cfg.qk_norm, eps=cfg.norm_eps, impl=impl)
+    elif mixer == "mla":
+        h, new_cache = mla.mla_decode(p["mixer"], h, cache, pos,
+                                      n_heads=cfg.n_heads, cfg=cfg.mla,
+                                      rope_theta=cfg.rope_theta,
+                                      eps=cfg.norm_eps)
+    elif mixer == "rec":
+        h, new_cache = rglru.rglru_decode(p["mixer"], h, cache, cfg.rglru)
+    elif mixer == "ssd":
+        h, new_cache = ssd.ssd_decode(p["mixer"], h, cache, cfg.ssm)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if cfg.post_norm:
+        h = rmsnorm(p["post_mixer_norm"], h, cfg.norm_eps)
+    x = x + h
+    if mlp_kind != "none":
+        h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        if mlp_kind == "moe":
+            h, _ = lm._run_moe(p["mlp"], h, cfg, ctx,
+                               capacity=x.shape[0])  # no decode drops
+        else:
+            h = mlp(p["mlp"], h, cfg.mlp_act)
+        if cfg.post_norm:
+            h = rmsnorm(p["post_mlp_norm"], h, cfg.norm_eps)
+        x = x + h
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def _embed_step(params: PyTree, cfg: ModelConfig, tokens: Array) -> Array:
+    compute = jnp.bfloat16
+    if cfg.family == "audio":
+        tables = params["embed"]["table"]        # (K, V, D)
+        x = jnp.zeros((tokens.shape[0], 1, cfg.d_model), dtype=compute)
+        for k in range(cfg.n_codebooks):
+            x = x + tables[k][tokens[..., k]].astype(compute)
+    else:
+        x = params["embed"]["table"][tokens].astype(compute)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype=compute)
+    return x
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, cache: PyTree,
+                tokens: Array, pos: Array, *, ctx: ShardCtx | None = None,
+                impl: str = "ref") -> tuple[Array, PyTree]:
+    """One token for every sequence in the batch.
+
+    tokens: (B, 1) int32 (audio: (B, 1, K)); pos: scalar int32.
+    Returns (logits (B, V) — audio (B, K, V) — , new cache).
+    """
+    x = _embed_step(params, cfg, tokens)
+    new_cache: dict[str, Any] = {"prefix": [], "suffix": [], "blocks": {}}
+    for p_blk, kind, c_blk in zip(params["prefix"], cfg.prefix,
+                                  cache["prefix"]):
+        x, nc = block_decode(p_blk, c_blk, x, cfg, kind, pos, ctx, impl)
+        new_cache["prefix"].append(nc)
+
+    pattern = cfg.pattern
+
+    def body(carry, blk_and_cache):
+        h = carry
+        blk, c = blk_and_cache
+        ncs = {}
+        for i, kind in enumerate(pattern):
+            h, nc = block_decode(blk[f"pos{i}"], c[f"pos{i}"], h, cfg, kind,
+                                 pos, ctx, impl)
+            ncs[f"pos{i}"] = nc
+        return h, ncs
+
+    if cfg.scan_layers and cfg.repeats > 1:
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = new_blocks
+    else:
+        new_blocks = {}
+        for r in range(cfg.repeats):
+            blk = jax.tree.map(lambda a, r=r: a[r], params["blocks"])
+            c = jax.tree.map(lambda a, r=r: a[r], cache["blocks"])
+            x, ncs = body(x, (blk, c))
+            for k, v in ncs.items():
+                new_blocks.setdefault(k, []).append(v)
+        new_cache["blocks"] = {
+            k: jax.tree.map(lambda *xs: jnp.stack(xs), *v)
+            for k, v in new_blocks.items()}
+
+    for p_blk, kind, c_blk in zip(params["suffix"], cfg.suffix,
+                                  cache["suffix"]):
+        x, nc = block_decode(p_blk, c_blk, x, cfg, kind, pos, ctx, impl)
+        new_cache["suffix"].append(nc)
+
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)  # (B, 1, D)
+    table = lm._head_table(params, cfg)
+    if cfg.family == "audio":
+        logits = jnp.stack(
+            [layers.logits_from_hidden(table[k], h[:, 0], cfg.final_softcap)
+             for k in range(cfg.n_codebooks)], axis=1)  # (B, K, V)
+    else:
+        logits = layers.logits_from_hidden(table, h[:, 0], cfg.final_softcap)
+    logits = logits[..., :cfg.vocab_size]  # drop sharding-pad columns
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence pass that also builds the cache
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_from_kv(k: Array, v: Array, mixer: str, window: int,
+                        max_len: int) -> PyTree:
+    b, s = k.shape[:2]
+    if mixer == "local":
+        w = window
+        n = min(s, w)
+        slots = (jnp.arange(s - n, s)) % w
+        ck = jnp.zeros((b, w, *k.shape[2:]), dtype=k.dtype)
+        cv = jnp.zeros((b, w, *v.shape[2:]), dtype=v.dtype)
+        ck = ck.at[:, slots].set(k[:, s - n:])
+        cv = cv.at[:, slots].set(v[:, s - n:])
+        pos = jnp.full((w,), -1, jnp.int32).at[slots].set(
+            jnp.arange(s - n, s, dtype=jnp.int32))
+        return {"k": ck, "v": cv, "pos": pos}
+    ck = jnp.zeros((b, max_len, *k.shape[2:]), dtype=k.dtype)
+    cv = jnp.zeros((b, max_len, *v.shape[2:]), dtype=v.dtype)
+    ck = ck.at[:, :s].set(k)
+    cv = cv.at[:, :s].set(v)
+    pos = jnp.full((max_len,), -1, jnp.int32).at[:s].set(
+        jnp.arange(s, dtype=jnp.int32))
+    return {"k": ck, "v": cv, "pos": pos}
+
+
+def block_prefill(p: PyTree, x: Array, cfg: ModelConfig, kind: str,
+                  positions: Array, max_len: int, ctx: ShardCtx | None,
+                  impl: str) -> tuple[Array, PyTree]:
+    mixer, mlp_kind = lm._mixer_mlp(kind)
+    h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+    if mixer in ("global", "local"):
+        h, (k, v) = attn.attention(
+            p["mixer"], h, positions, kind=mixer, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim, window=cfg.window,
+            rope_theta=_theta(cfg, mixer), attn_softcap=cfg.attn_softcap,
+            qk_norm=cfg.qk_norm, eps=cfg.norm_eps, impl=impl, return_kv=True)
+        new_cache = _attn_cache_from_kv(k, v, mixer, cfg.window, max_len)
+    elif mixer == "mla":
+        h, (c_kv, k_rope) = mla.mla_attention(
+            p["mixer"], h, positions, n_heads=cfg.n_heads, cfg=cfg.mla,
+            rope_theta=cfg.rope_theta, eps=cfg.norm_eps, impl=impl,
+            return_kv=True)
+        b, s = c_kv.shape[:2]
+        cc = jnp.zeros((b, max_len, c_kv.shape[-1]), jnp.bfloat16
+                       ).at[:, :s].set(c_kv.astype(jnp.bfloat16))
+        cr = jnp.zeros((b, max_len, k_rope.shape[-1]), jnp.bfloat16
+                       ).at[:, :s].set(k_rope.astype(jnp.bfloat16))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+    elif mixer == "rec":
+        h, new_cache = rglru.rglru_block(p["mixer"], h, cfg.rglru, impl=impl,
+                                         return_state=True)
+    elif mixer == "ssd":
+        h, new_cache = ssd.ssd_block(p["mixer"], h, cfg.ssm, impl=impl,
+                                     return_state=True)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if cfg.post_norm:
+        h = rmsnorm(p["post_mixer_norm"], h, cfg.norm_eps)
+    x = x + h
+    if mlp_kind != "none":
+        h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        if mlp_kind == "moe":
+            h, _ = lm._run_moe(p["mlp"], h, cfg, ctx)
+        else:
+            h = mlp(p["mlp"], h, cfg.mlp_act)
+        if cfg.post_norm:
+            h = rmsnorm(p["post_mlp_norm"], h, cfg.norm_eps)
+        x = x + h
+    return x, new_cache
+
+
+def prefill(params: PyTree, cfg: ModelConfig, batch: dict[str, Array],
+            max_len: int, *, ctx: ShardCtx | None = None,
+            impl: str = "ref") -> tuple[Array, PyTree]:
+    """Run the prompt, build the cache. Returns (last-position logits, cache).
+
+    For prefill, batch["tokens"] is the raw prompt (B, S) — NOT shifted.
+    """
+    compute = jnp.bfloat16
+    if cfg.family == "audio":
+        toks = batch["tokens"]
+        tables = params["embed"]["table"]
+        x = jnp.zeros((*toks.shape[:2], cfg.d_model), dtype=compute)
+        for k in range(cfg.n_codebooks):
+            x = x + tables[k][toks[..., k]].astype(compute)
+    elif cfg.patch_stub is not None:
+        x_text = params["embed"]["table"][batch["tokens"]].astype(compute)
+        x_patch = linear(params["patch_proj"],
+                         batch["patches"].astype(compute))
+        x = jnp.concatenate([x_patch, x_text], axis=1)
+    else:
+        x = params["embed"]["table"][batch["tokens"]].astype(compute)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype=compute)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(x, ctx, ctx.batch if ctx else None,
+                  ctx.seq if ctx else None, None)
+
+    cache: dict[str, Any] = {"prefix": [], "suffix": [], "blocks": {}}
+    for p_blk, kind in zip(params["prefix"], cfg.prefix):
+        x, nc = block_prefill(p_blk, x, cfg, kind, positions, max_len, ctx,
+                              impl)
+        cache["prefix"].append(nc)
+
+    pattern = cfg.pattern
+
+    def body(carry, blk):
+        h = carry
+        ncs = {}
+        for i, kind in enumerate(pattern):
+            h, nc = block_prefill(blk[f"pos{i}"], h, cfg, kind, positions,
+                                  max_len, ctx, impl)
+            ncs[f"pos{i}"] = nc
+        return h, ncs
+
+    if cfg.scan_layers and cfg.repeats > 1:
+        x, new_blocks = jax.lax.scan(body, x, params["blocks"])
+        cache["blocks"] = new_blocks
+    else:
+        acc: dict[str, list] = {}
+        for r in range(cfg.repeats):
+            blk = jax.tree.map(lambda a, r=r: a[r], params["blocks"])
+            x, ncs = body(x, blk)
+            for kk, vv in ncs.items():
+                acc.setdefault(kk, []).append(vv)
+        cache["blocks"] = {kk: jax.tree.map(lambda *xs: jnp.stack(xs), *vv)
+                           for kk, vv in acc.items()}
+
+    for p_blk, kind in zip(params["suffix"], cfg.suffix):
+        x, nc = block_prefill(p_blk, x, cfg, kind, positions, max_len, ctx,
+                              impl)
+        cache["suffix"].append(nc)
+
+    h = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    table = lm._head_table(params, cfg)
+    if cfg.family == "audio":
+        logits = jnp.stack(
+            [layers.logits_from_hidden(table[k], h[:, 0], cfg.final_softcap)
+             for k in range(cfg.n_codebooks)], axis=1)
+    else:
+        logits = layers.logits_from_hidden(table, h[:, 0], cfg.final_softcap)
+    logits = logits[..., :cfg.vocab_size]  # drop sharding-pad columns
+    return logits, cache

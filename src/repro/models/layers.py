@@ -1,0 +1,191 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, softcap.
+
+Functional style: ``init_*`` returns a param pytree, ``apply`` fns are pure.
+Params are stored in ``param_dtype`` (bf16 by default) and compute happens
+in ``compute_dtype`` with fp32 accumulation where it matters (norms, softmax,
+logits).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+DEFAULT_PARAM_DTYPE = jnp.bfloat16
+
+
+def truncated_normal(key: Array, shape, scale: float,
+                     dtype=DEFAULT_PARAM_DTYPE) -> Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_linear(key: Array, d_in: int, d_out: int | tuple[int, ...],
+                use_bias: bool = False, dtype=DEFAULT_PARAM_DTYPE) -> PyTree:
+    out = d_out if isinstance(d_out, tuple) else (d_out,)
+    w = truncated_normal(key, (d_in, *out), scale=d_in**-0.5, dtype=dtype)
+    p = {"w": w}
+    if use_bias:
+        p["b"] = jnp.zeros(out, dtype=dtype)
+    return p
+
+
+def linear(p: PyTree, x: Array) -> Array:
+    """x (..., d_in) @ w (d_in, *out) -> (..., *out)."""
+    w = p["w"]
+    out_rank = w.ndim - 1
+    y = jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    del out_rank
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> PyTree:
+    return {"scale": jnp.zeros((d,), dtype=dtype)}  # gemma-style (1+scale)
+
+
+def rmsnorm(p: PyTree, x: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def activation(name: str, x: Array) -> Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":  # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name}")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, H, hd) rotated by per-position angles; positions (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: Array, d_model: int, d_ff: int, gated: bool,
+             use_bias: bool = False, dtype=DEFAULT_PARAM_DTYPE) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"out": init_linear(k2, d_ff, d_model, use_bias, dtype)}
+    if gated:
+        p["gate"] = init_linear(k1, d_model, d_ff, use_bias, dtype)
+        p["up"] = init_linear(k3, d_model, d_ff, use_bias, dtype)
+    else:
+        p["up"] = init_linear(k1, d_model, d_ff, use_bias, dtype)
+    return p
+
+
+def mlp(p: PyTree, x: Array, act: str) -> Array:
+    if "gate" in p:
+        h = activation(act, linear(p["gate"], x)) * linear(p["up"], x)
+    else:
+        h = activation(act, linear(p["up"], x))
+    return linear(p["out"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key: Array, vocab: int, d: int,
+                   dtype=DEFAULT_PARAM_DTYPE) -> PyTree:
+    return {"table": truncated_normal(key, (vocab, d), scale=1.0, dtype=dtype)}
+
+
+def embed(p: PyTree, tokens: Array, scale: bool, d_model: int,
+          compute_dtype=jnp.bfloat16) -> Array:
+    x = p["table"][tokens].astype(compute_dtype)
+    if scale:
+        x = x * jnp.asarray(d_model**0.5, dtype=compute_dtype)
+    return x
+
+
+def logits_from_hidden(table: Array, h: Array,
+                       final_cap: float | None = None) -> Array:
+    """h (..., D) @ table.T (V, D) -> (..., V), fp32 out."""
+    out = jnp.einsum("...d,vd->...v", h, table.astype(h.dtype),
+                     preferred_element_type=jnp.float32)
+    return softcap(out, final_cap)
+
+
+def chunked_cross_entropy(table: Array, h: Array, targets: Array,
+                          mask: Array | None = None, chunk: int = 512,
+                          final_cap: float | None = None,
+                          n_valid: int | None = None) -> Array:
+    """Next-token CE without materializing full (B, S, V) logits.
+
+    Scans over sequence chunks: each step computes (B, chunk, V) logits,
+    logsumexp, and the target log-prob. Memory-bounds the loss layer — with
+    256k vocabularies the full logit tensor would dominate activation memory.
+
+    ``n_valid``: real vocabulary size when the table is padded for sharding
+    (padded columns are masked to -inf before the logsumexp).
+    """
+    b, s, d = h.shape
+    v = table.shape[0]
+    n_chunks = s // chunk
+    assert s % chunk == 0, f"seq {s} not divisible by loss chunk {chunk}"
+    h_c = h.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    t_c = targets.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    if mask is None:
+        m_c = jnp.ones((n_chunks, b, chunk), dtype=jnp.float32)
+    else:
+        m_c = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1).astype(jnp.float32)
+    pad_mask = None
+    if n_valid is not None and n_valid < v:
+        pad_mask = jnp.arange(v) >= n_valid  # (V,)
+
+    def step(carry, inp):
+        hc, tc, mc = inp
+        logits = logits_from_hidden(table, hc, final_cap)  # (b, chunk, V) f32
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    (total, count), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)),
+                                     (h_c, t_c, m_c))
+    return total / jnp.maximum(count, 1.0)

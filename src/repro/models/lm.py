@@ -1,0 +1,420 @@
+"""The LM assembler: init / train loss / prefill / decode for every
+assigned architecture.
+
+A model is a stack of residual blocks described by ``cfg.layer_kinds``:
+    kind          mixer               mlp
+    "global"      full GQA attention  dense
+    "local"       windowed GQA        dense
+    "global_moe"  full GQA            mixture-of-experts
+    "mla"         DeepSeek MLA        dense
+    "mla_moe"     DeepSeek MLA        mixture-of-experts
+    "rec"         RG-LRU recurrence   dense
+    "ssd"         Mamba-2 SSD         (none)
+
+The repeating part of the stack (``cfg.pattern`` x ``cfg.repeats``) is
+``lax.scan``-ed over stacked per-superblock params (compact HLO, sane
+compile times at 48-61 layers) with per-superblock remat; ``cfg.prefix`` /
+``cfg.suffix`` layers run unscanned.
+
+Modality frontends are stubs per the assignment: musicgen consumes
+(B, S, n_codebooks) EnCodec token grids (sum of codebook embeddings, one
+output head per codebook); llava consumes precomputed patch embeddings
+(the backbone owns only the projector).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import ShardCtx, constrain
+from repro.models import attention as attn
+from repro.models import layers, mla, moe, rglru, ssd
+from repro.models.layers import (chunked_cross_entropy, init_linear,
+                                 init_mlp, linear, mlp, rmsnorm)
+
+Array = jax.Array
+PyTree = Any
+
+KIND_TABLE = {
+    "global": ("global", "dense"),
+    "local": ("local", "dense"),
+    "global_moe": ("global", "moe"),
+    "mla": ("mla", "dense"),
+    "mla_moe": ("mla", "moe"),
+    "rec": ("rec", "dense"),
+    "ssd": ("ssd", "none"),
+}
+
+
+def _mixer_mlp(kind: str) -> tuple[str, str]:
+    return KIND_TABLE[kind]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key: Array, cfg: ModelConfig, kind: str) -> PyTree:
+    mixer, mlp_kind = _mixer_mlp(kind)
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"pre_norm": layers.init_rmsnorm(cfg.d_model)}
+    if mixer in ("global", "local"):
+        p["mixer"] = attn.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            cfg.use_bias, cfg.qk_norm)
+    elif mixer == "mla":
+        assert cfg.mla is not None
+        p["mixer"] = mla.init_mla(k1, cfg.d_model, cfg.n_heads, cfg.mla)
+    elif mixer == "rec":
+        assert cfg.rglru is not None
+        p["mixer"] = rglru.init_rglru_block(k1, cfg.d_model, cfg.rglru)
+    elif mixer == "ssd":
+        assert cfg.ssm is not None
+        p["mixer"] = ssd.init_ssd_block(k1, cfg.d_model, cfg.ssm)
+    if cfg.post_norm:
+        p["post_mixer_norm"] = layers.init_rmsnorm(cfg.d_model)
+    if mlp_kind == "dense":
+        p["mlp_norm"] = layers.init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                            cfg.use_bias)
+        if cfg.post_norm:
+            p["post_mlp_norm"] = layers.init_rmsnorm(cfg.d_model)
+    elif mlp_kind == "moe":
+        assert cfg.moe is not None
+        p["mlp_norm"] = layers.init_rmsnorm(cfg.d_model)
+        p["mlp"] = moe.init_moe(k2, cfg.d_model, cfg.moe, cfg.gated_mlp)
+        if cfg.post_norm:
+            p["post_mlp_norm"] = layers.init_rmsnorm(cfg.d_model)
+    return p
+
+
+def init(key: Array, cfg: ModelConfig) -> PyTree:
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    params: dict[str, Any] = {}
+    vocab = cfg.vocab_padded  # padded to 16-divisible for vocab parallelism
+    if cfg.family == "audio":
+        tables = [layers.init_embedding(keys[-1 - i], vocab,
+                                        cfg.d_model)["table"]
+                  for i in range(cfg.n_codebooks)]
+        params["embed"] = {"table": jnp.stack(tables)}  # (K, V, D)
+    else:
+        params["embed"] = layers.init_embedding(keys[-1], vocab,
+                                                cfg.d_model)
+    if cfg.patch_stub is not None:
+        params["patch_proj"] = init_linear(keys[-6], cfg.patch_stub.embed_dim,
+                                           cfg.d_model)
+    ki = iter(range(cfg.n_layers))
+    params["prefix"] = [init_block(keys[next(ki)], cfg, k) for k in cfg.prefix]
+    blocks: dict[str, Any] = {}
+    per_pos: list[list[PyTree]] = [[] for _ in cfg.pattern]
+    for _ in range(cfg.repeats):
+        for i, kind in enumerate(cfg.pattern):
+            per_pos[i].append(init_block(keys[next(ki)], cfg, kind))
+    for i, plist in enumerate(per_pos):
+        blocks[f"pos{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+    params["blocks"] = blocks
+    params["suffix"] = [init_block(keys[next(ki)], cfg, k) for k in cfg.suffix]
+    params["final_norm"] = layers.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        if cfg.family == "audio":
+            heads = [init_linear(keys[-2 - i], cfg.d_model, vocab)
+                     for i in range(cfg.n_codebooks)]
+            params["lm_head"] = {"w": jnp.stack([h["w"] for h in heads])}
+        else:
+            params["lm_head"] = init_linear(keys[-2], cfg.d_model, vocab)
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": init_linear(keys[-3], 2 * cfg.d_model, cfg.d_model),
+            "h_norm": layers.init_rmsnorm(cfg.d_model),
+            "e_norm": layers.init_rmsnorm(cfg.d_model),
+            "block": init_block(keys[-4], cfg,
+                                "mla" if cfg.mla else "global"),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _run_mixer(p: PyTree, x: Array, cfg: ModelConfig, kind: str,
+               positions: Array, ctx: ShardCtx | None, impl: str) -> Array:
+    mixer, _ = _mixer_mlp(kind)
+    if mixer in ("global", "local"):
+        theta = (cfg.rope_local_theta
+                 if (mixer == "local" and cfg.rope_local_theta) else
+                 cfg.rope_theta)
+        return attn.attention(
+            p, x, positions, kind=mixer, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim, window=cfg.window,
+            rope_theta=theta, attn_softcap=cfg.attn_softcap,
+            qk_norm=cfg.qk_norm, eps=cfg.norm_eps, impl=impl, ctx=ctx)
+    if mixer == "mla":
+        return mla.mla_attention(p, x, positions, n_heads=cfg.n_heads,
+                                 cfg=cfg.mla, rope_theta=cfg.rope_theta,
+                                 eps=cfg.norm_eps, impl=impl, ctx=ctx)
+    if mixer == "rec":
+        return rglru.rglru_block(p, x, cfg.rglru, impl=impl)
+    if mixer == "ssd":
+        return ssd.ssd_block(p, x, cfg.ssm, impl=impl)
+    raise ValueError(kind)
+
+
+def block_forward(p: PyTree, x: Array, cfg: ModelConfig, kind: str,
+                  positions: Array, ctx: ShardCtx | None,
+                  impl: str) -> tuple[Array, Array]:
+    """One residual block. Returns (x, aux_loss)."""
+    _, mlp_kind = _mixer_mlp(kind)
+    aux = jnp.float32(0.0)
+    h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+    h = _run_mixer(p["mixer"], h, cfg, kind, positions, ctx, impl)
+    if cfg.post_norm:
+        h = rmsnorm(p["post_mixer_norm"], h, cfg.norm_eps)
+    x = x + h
+    x = constrain(x, ctx, ctx.batch if ctx else None,
+                  ctx.seq if ctx else None, None)
+    if mlp_kind != "none":
+        h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        if mlp_kind == "moe":
+            h, aux = _run_moe(p["mlp"], h, cfg, ctx)
+        else:
+            h = mlp(p["mlp"], h, cfg.mlp_act)
+        if cfg.post_norm:
+            h = rmsnorm(p["post_mlp_norm"], h, cfg.norm_eps)
+        x = x + h
+        x = constrain(x, ctx, ctx.batch if ctx else None,
+                      ctx.seq if ctx else None, None)
+    return x, aux
+
+
+def _run_moe(p: PyTree, x: Array, cfg: ModelConfig,
+             ctx: ShardCtx | None,
+             capacity: int | None = None) -> tuple[Array, Array]:
+    """MoE layer: plain path on one device; shard_map EP under a mesh."""
+    mcfg = cfg.moe
+    if ctx is None:
+        return moe.moe_mlp(p, x, mcfg, cfg.mlp_act, capacity=capacity)
+
+    from jax.sharding import PartitionSpec as P
+    mesh = ctx.mesh
+    ep_axes = tuple(ctx.ep_axes)
+    e = mcfg.padded_experts
+    ep_size = 1
+    for a in ep_axes:
+        ep_size *= mesh.shape[a]
+    e_local = e // ep_size
+    batch_axes = ctx.batch if isinstance(ctx.batch, tuple) else (
+        (ctx.batch,) if ctx.batch else ())
+    seq_axes = ctx.seq if isinstance(ctx.seq, tuple) else (
+        (ctx.seq,) if ctx.seq else ())
+    # EP axes along which tokens are sharded must be gathered (and the
+    # summed outputs scattered back); EP axes with replicated tokens just
+    # psum the partial expert outputs.
+    gather_axes = [(a, 0 if a in batch_axes else 1) for a in ep_axes
+                   if a in batch_axes or a in seq_axes]
+    psum_axes = [a for a in ep_axes
+                 if a not in batch_axes and a not in seq_axes]
+
+    # the shared (always-on) expert is a plain TP MLP computed OUTSIDE the
+    # shard_map — inside it the EP psum would multiply it |ep| x.
+    p_routed = {k: v for k, v in p.items() if k != "shared"}
+
+    ep_spec = ep_axes[0] if len(ep_axes) == 1 else ep_axes
+
+    def pspec(path, leaf):
+        name = path[0].key if hasattr(path[0], "key") else str(path[0])
+        return P() if name == "router" else P(ep_spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(p_routed)
+    in_p_specs = jax.tree_util.tree_unflatten(
+        treedef, [pspec(path, leaf) for path, leaf in flat])
+    x_spec = P(ctx.batch, ctx.seq, None)
+
+    def run(p_local, x_local):
+        # flattened EP rank (tuple specs split major-to-minor)
+        e_start = jnp.int32(0)
+        for a in ep_axes:
+            e_start = e_start * mesh.shape[a] + jax.lax.axis_index(a)
+        e_start = e_start * e_local
+        xg = x_local
+        for a, dim in gather_axes:
+            xg = jax.lax.all_gather(xg, a, axis=dim, tiled=True)
+        y, aux = moe.moe_mlp(p_local, xg, mcfg, cfg.mlp_act,
+                             e_start=e_start, e_local=e_local,
+                             capacity=capacity)
+        for a in psum_axes:
+            y = jax.lax.psum(y, a)
+        for a, dim in reversed(gather_axes):
+            y = jax.lax.psum_scatter(y, a, scatter_dimension=dim, tiled=True)
+        aux = jax.lax.psum(aux, ep_axes) / ep_size
+        return y, aux
+
+    y, aux = jax.shard_map(
+        run, mesh=mesh, in_specs=(in_p_specs, x_spec),
+        out_specs=(x_spec, P()), check_vma=False)(p_routed, x)
+    if "shared" in p:
+        from repro.models.layers import mlp as dense_mlp
+        y = y + dense_mlp(p["shared"], x, cfg.mlp_act)
+    return y, jnp.mean(aux)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(params: PyTree, cfg: ModelConfig, x: Array,
+                   positions: Array, *, ctx: ShardCtx | None = None,
+                   impl: str = "ref") -> tuple[Array, Array]:
+    """Embedded inputs -> final hidden states. Returns (h, aux_loss)."""
+    aux_total = jnp.float32(0.0)
+    for p_blk, kind in zip(params["prefix"], cfg.prefix):
+        x, aux = block_forward(p_blk, x, cfg, kind, positions, ctx, impl)
+        aux_total += aux
+
+    pattern = cfg.pattern
+
+    def body(carry, blk):
+        h = carry
+        aux_sb = jnp.float32(0.0)
+        for i, kind in enumerate(pattern):
+            h, aux = block_forward(blk[f"pos{i}"], h, cfg, kind, positions,
+                                   ctx, impl)
+            aux_sb += aux
+        return h, aux_sb
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else
+                  jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    if cfg.scan_layers and cfg.repeats > 1:
+        x, auxs = jax.lax.scan(body, x, params["blocks"])
+        aux_total += jnp.sum(auxs)
+    else:
+        blocks_list = [jax.tree.map(lambda a, r=r: a[r], params["blocks"])
+                       for r in range(cfg.repeats)]
+        for blk in blocks_list:
+            x, aux = body(x, blk)
+            aux_total += aux
+
+    for p_blk, kind in zip(params["suffix"], cfg.suffix):
+        x, aux = block_forward(p_blk, x, cfg, kind, positions, ctx, impl)
+        aux_total += aux
+    return x, aux_total
+
+
+def embed_inputs(params: PyTree, cfg: ModelConfig, batch: dict[str, Array],
+                 ctx: ShardCtx | None):
+    """-> (x (B,S,D), positions (B,S), targets, loss_mask)."""
+    compute = jnp.bfloat16
+    if cfg.family == "audio":
+        toks = batch["tokens"]                       # (B, S+1, K)
+        inp, tgt = toks[:, :-1], toks[:, 1:]
+        tables = params["embed"]["table"]            # (K, V, D)
+        x = jnp.zeros((*inp.shape[:2], cfg.d_model), dtype=compute)
+        for k in range(cfg.n_codebooks):
+            x = x + tables[k][inp[..., k]].astype(compute)
+        mask = jnp.ones(tgt.shape[:2], dtype=jnp.float32)
+    elif cfg.patch_stub is not None:
+        toks = batch["tokens"]                       # (B, S_text+1)
+        patches = batch["patches"]                   # (B, P, E)
+        inp, tgt_text = toks[:, :-1], toks[:, 1:]
+        x_text = params["embed"]["table"][inp].astype(compute)
+        x_patch = linear(params["patch_proj"], patches.astype(compute))
+        x = jnp.concatenate([x_patch, x_text], axis=1)
+        n_p = patches.shape[1]
+        tgt = jnp.concatenate(
+            [jnp.zeros((toks.shape[0], n_p), dtype=tgt_text.dtype), tgt_text],
+            axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((toks.shape[0], n_p), dtype=jnp.float32),
+             jnp.ones(tgt_text.shape, dtype=jnp.float32)], axis=1)
+    else:
+        toks = batch["tokens"]                       # (B, S+1)
+        inp, tgt = toks[:, :-1], toks[:, 1:]
+        x = params["embed"]["table"][inp].astype(compute)
+        mask = jnp.ones(tgt.shape, dtype=jnp.float32)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype=compute)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(x, ctx, ctx.batch if ctx else None,
+                  ctx.seq if ctx else None, None)
+    return x, positions, tgt, mask
+
+
+def _head_table(params: PyTree, cfg: ModelConfig) -> Array:
+    """(V, D) table (or (K, V, D) for audio) used for output logits."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"]
+    w = params["lm_head"]["w"]
+    # lm_head stores (D, V) / (K, D, V); CE wants (V, D) rows
+    return jnp.swapaxes(w, -1, -2)
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: dict[str, Array], *,
+            ctx: ShardCtx | None = None, impl: str = "ref"
+            ) -> tuple[Array, dict[str, Array]]:
+    x, positions, tgt, mask = embed_inputs(params, cfg, batch, ctx)
+    h, aux = forward_hidden(params, cfg, x, positions, ctx=ctx, impl=impl)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    table = _head_table(params, cfg)
+    if cfg.family == "audio":
+        # small vocab: full logits per codebook
+        losses = []
+        for k in range(cfg.n_codebooks):
+            logits = layers.logits_from_hidden(table[k], h, cfg.final_softcap)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            sel = jnp.take_along_axis(logits, tgt[..., k][..., None],
+                                      axis=-1)[..., 0]
+            losses.append(jnp.mean(lse - sel))
+        main = jnp.mean(jnp.stack(losses))
+    else:
+        chunk = min(512, h.shape[1])
+        main = chunked_cross_entropy(table, h, tgt, mask, chunk=chunk,
+                                     final_cap=cfg.final_softcap,
+                                     n_valid=cfg.vocab_size)
+    total = main + aux
+    metrics = {"loss": main, "aux_loss": aux}
+    if cfg.mtp:
+        mtp_loss = _mtp_loss(params, cfg, batch, h, positions, ctx, impl)
+        total = total + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    return total, metrics
+
+
+def _mtp_loss(params: PyTree, cfg: ModelConfig, batch: dict[str, Array],
+              h: Array, positions: Array, ctx: ShardCtx | None,
+              impl: str) -> Array:
+    """DeepSeek-style depth-1 multi-token prediction: predict t+2 from the
+    main trunk's hidden state at t combined with the embedding of t+1."""
+    toks = batch["tokens"]                 # (B, S+1)
+    p = params["mtp"]
+    emb_next = params["embed"]["table"][toks[:, 1:-1]].astype(h.dtype)
+    h_in = jnp.concatenate(
+        [rmsnorm(p["h_norm"], h[:, :-1], cfg.norm_eps),
+         rmsnorm(p["e_norm"], emb_next, cfg.norm_eps)], axis=-1)
+    x = linear(p["proj"], h_in)            # (B, S-1, D)
+    kind = "mla" if cfg.mla else "global"
+    x, _ = block_forward(p["block"], x, cfg, kind, positions[:, :-1], ctx,
+                         impl)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = _head_table(params, cfg)
+    tgt = toks[:, 2:]
+    chunk_len = x.shape[1]
+    chunk = 512 if chunk_len % 512 == 0 else 1
+    for c in (512, 256, 128, 63, 1):
+        if chunk_len % c == 0:
+            chunk = c
+            break
+    return chunked_cross_entropy(table, x, tgt, None, chunk=chunk,
+                                 final_cap=cfg.final_softcap,
+                                 n_valid=cfg.vocab_size)

@@ -1,0 +1,150 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA) + the MTP head.
+
+Prefill/training: the factorized projections are expanded to per-head K/V
+(mathematically the reference MHA). Decode: the ABSORBED form — the cache
+stores only the compressed latent (c_kv, k_rope) per position, and the
+up-projections are folded into the query/output sides so per-step work is
+O(S * kv_lora_rank) instead of O(S * H * head_dim). This is the memory win
+that makes deepseek decode_32k fit: cache is (B, S, kv_lora + rope) instead
+of (B, S, H, 2*hd) — a 128 * 256 / 576 ~= 57x reduction.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models import layers
+from repro.models.layers import apply_rope, init_linear, linear, rmsnorm
+
+Array = jax.Array
+PyTree = Any
+
+NEG_INF = -2.0e38
+
+
+def init_mla(key: Array, d_model: int, n_heads: int, cfg: MLAConfig,
+             dtype=layers.DEFAULT_PARAM_DTYPE) -> PyTree:
+    ks = jax.random.split(key, 6)
+    qk_head = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wdq": init_linear(ks[0], d_model, cfg.q_lora_rank, dtype=dtype),
+        "q_norm": layers.init_rmsnorm(cfg.q_lora_rank),
+        "wuq": init_linear(ks[1], cfg.q_lora_rank, (n_heads, qk_head),
+                           dtype=dtype),
+        # joint down-projection: [c_kv | k_rope]
+        "wdkv": init_linear(ks[2], d_model, cfg.kv_lora_rank + cfg.qk_rope_dim,
+                            dtype=dtype),
+        "kv_norm": layers.init_rmsnorm(cfg.kv_lora_rank),
+        "wuk": init_linear(ks[3], cfg.kv_lora_rank, (n_heads, cfg.qk_nope_dim),
+                           dtype=dtype),
+        "wuv": init_linear(ks[4], cfg.kv_lora_rank, (n_heads, cfg.v_head_dim),
+                           dtype=dtype),
+        "wo": {"w": layers.truncated_normal(
+            ks[5], (n_heads, cfg.v_head_dim, d_model),
+            scale=(n_heads * cfg.v_head_dim) ** -0.5, dtype=dtype)},
+    }
+
+
+def _queries(p: PyTree, x: Array, positions: Array, cfg: MLAConfig,
+             rope_theta: float, eps: float):
+    cq = rmsnorm(p["q_norm"], linear(p["wdq"], x), eps)
+    q = linear(p["wuq"], cq)  # (B, S, H, nope+rope)
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p: PyTree, x: Array, positions: Array, cfg: MLAConfig,
+             rope_theta: float, eps: float):
+    dkv = linear(p["wdkv"], x)  # (B, S, kv_lora + rope)
+    c_kv = rmsnorm(p["kv_norm"], dkv[..., :cfg.kv_lora_rank], eps)
+    k_rope = dkv[..., cfg.kv_lora_rank:][..., None, :]  # (B, S, 1, rope)
+    k_rope = apply_rope(k_rope, positions, rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(p: PyTree, x: Array, positions: Array, *, n_heads: int,
+                  cfg: MLAConfig, rope_theta: float, eps: float = 1e-6,
+                  impl: str = "ref", return_kv: bool = False, ctx=None):
+    """Full-sequence causal MLA (training / prefill) — expanded form."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _queries(p, x, positions, cfg, rope_theta, eps)
+    c_kv, k_rope = _latents(p, x, positions, cfg, rope_theta, eps)
+    if ctx is not None and ctx.seq:
+        from repro.distributed.ctx import constrain
+        c_kv = constrain(c_kv, ctx, ctx.batch, None, None)
+        k_rope = constrain(k_rope, ctx, ctx.batch, None, None)
+    k_nope = linear(p["wuk"], c_kv)   # (B, S, H, nope)
+    v = linear(p["wuv"], c_kv)        # (B, S, H, v_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (b, s, n_heads, cfg.qk_rope_dim))],
+                        axis=-1)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, window=None, softcap=None)
+    else:
+        scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+        scores = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        scores = jnp.where((j <= i)[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    y = jnp.einsum("bqhd,hdm->bqm", out, p["wo"]["w"].astype(out.dtype))
+    if return_kv:
+        return y, (c_kv, k_rope)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla_cache(batch: int, max_len: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> PyTree:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype=dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype=dtype),
+    }
+
+
+def mla_decode(p: PyTree, x: Array, cache: PyTree, pos: Array, *,
+               n_heads: int, cfg: MLAConfig, rope_theta: float,
+               eps: float = 1e-6) -> tuple[Array, PyTree]:
+    """One decode step in absorbed form. x (B, 1, D)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _queries(p, x, positions, cfg, rope_theta, eps)
+    c_new, kr_new = _latents(p, x, positions, cfg, rope_theta, eps)
+
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+
+    # absorb W_uk into the query: q_c (B, 1, H, kv_lora). wuk w is (c, h, d).
+    q_c = jnp.einsum("bqhd,chd->bqhc", q_nope,
+                     p["wuk"]["w"].astype(q_nope.dtype))
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    scores = (jnp.einsum("bqhc,bsc->bhqs", q_c, c_kv.astype(q_c.dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope,
+                           k_rope.astype(q_rope.dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    s_idx = jnp.arange(scores.shape[-1])
+    scores = jnp.where((s_idx <= pos)[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    # attend in latent space then apply W_uv and W_o
+    out_c = jnp.einsum("bhqs,bsc->bqhc", probs, c_kv.astype(probs.dtype))
+    out = jnp.einsum("bqhc,chd->bqhd", out_c,  # wuv w is (c, h, v_dim)
+                     p["wuv"]["w"].astype(out_c.dtype))
+    y = jnp.einsum("bqhd,hdm->bqm", out, p["wo"]["w"].astype(out.dtype))
+    return y, new_cache

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts MLP: top-k routing, static capacity, shared experts.
+
+Layout: expert weights are (E, D, F) sharded over the ``model`` mesh axis
+(expert parallelism). ``moe_mlp`` operates on a LOCAL slice of experts
+([e_start, e_start + e_local)) with the FULL router, so it can run:
+
+  * single-device (tests): e_start=0, e_local=E — the plain dense path;
+  * under ``shard_map`` (production): each model-rank routes the tokens it
+    can see, keeps only assignments that hit its local experts, computes the
+    (E_local, C, D) buffer, and the caller psums over the model axis
+    (`tp` recipe: tokens model-replicated) or all-gathers tokens first and
+    psum-scatters after (`fsdp` recipe: tokens model-sharded).
+
+Dispatch is sort-free masked-capacity (position-in-expert via cumsum, tokens
+beyond capacity dropped) — static shapes, TPU-friendly. Padded experts
+(granite 40 -> 48 so EP16 divides) are masked to -inf in the router.
+
+The Switch-style aux load-balance loss is returned for the trainer;
+DeepSeek's bias-based aux-free balancing is approximated by this loss
+(noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import layers
+from repro.models.layers import activation, init_mlp, mlp
+
+Array = jax.Array
+PyTree = Any
+
+
+def init_moe(key: Array, d_model: int, cfg: MoEConfig, gated: bool,
+             dtype=layers.DEFAULT_PARAM_DTYPE) -> PyTree:
+    ks = jax.random.split(key, 5)
+    e = cfg.padded_experts
+    f = cfg.d_expert
+    p = {
+        "router": {"w": layers.truncated_normal(
+            ks[0], (d_model, e), scale=d_model**-0.5, dtype=jnp.float32)},
+        "w_up": layers.truncated_normal(ks[1], (e, d_model, f),
+                                        scale=d_model**-0.5, dtype=dtype),
+        "w_out": layers.truncated_normal(ks[2], (e, f, d_model),
+                                         scale=f**-0.5, dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = layers.truncated_normal(ks[3], (e, d_model, f),
+                                              scale=d_model**-0.5, dtype=dtype)
+    if cfg.n_shared:
+        d_sh = (cfg.d_shared or cfg.d_expert) * cfg.n_shared
+        p["shared"] = init_mlp(ks[4], d_model, d_sh, gated, dtype=dtype)
+    return p
+
+
+def route(router_w: Array, xt: Array, cfg: MoEConfig):
+    """(T, D) -> top-k indices (T, k), combine weights (T, k), aux loss."""
+    e = cfg.padded_experts
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router_w)
+    if e != cfg.n_experts:
+        pad = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad[None, :], -1e30, logits)
+    gates, idx = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(gates, axis=-1)
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)          # (T, k, E)
+    token_mask = jnp.sum(onehot, axis=1)                         # (T, E)
+    aux = cfg.aux_loss_weight * cfg.n_experts * jnp.sum(
+        jnp.mean(token_mask, axis=0) * jnp.mean(probs_full, axis=0))
+    return idx, weights, token_mask, aux
+
+
+def moe_mlp(p: PyTree, x: Array, cfg: MoEConfig, act: str, *,
+            e_start: int = 0, e_local: int | None = None,
+            capacity: int | None = None) -> tuple[Array, Array]:
+    """MoE over a local slice of experts. x (..., D) -> (y, aux).
+
+    ``p['w_up']``/``w_gate``/``w_out`` hold only the local experts
+    (leading dim e_local); ``p['router']`` is always the full router.
+    """
+    shape = x.shape
+    d = shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    e = cfg.padded_experts
+    e_local = e_local if e_local is not None else e
+    k = cfg.top_k
+
+    idx, weights, token_mask, aux = route(p["router"]["w"], xt, cfg)
+
+    cap = capacity or max(1, int(t * k / cfg.n_experts * cfg.capacity_factor))
+    # position of each token within its expert's queue (over ALL experts,
+    # so capacity accounting is identical no matter how experts are sharded)
+    pos_in_e = (jnp.cumsum(token_mask, axis=0) - 1.0) * token_mask  # (T, E)
+    pos = jnp.einsum("tke,te->tk", jax.nn.one_hot(idx, e, dtype=jnp.float32),
+                     pos_in_e).astype(jnp.int32)
+    keep = pos < cap
+
+    # keep only assignments routed to local experts
+    local = (idx >= e_start) & (idx < e_start + e_local) & keep
+    local_e = jnp.where(local, idx - e_start, e_local)           # drop row
+    flat_e = local_e.reshape(-1)
+    flat_pos = jnp.where(local, pos, cap).reshape(-1)
+
+    buf = jnp.zeros((e_local + 1, cap + 1, d), dtype=x.dtype)
+    src = jnp.repeat(xt, k, axis=0)
+    buf = buf.at[flat_e, flat_pos].add(src)
+    buf = buf[:e_local, :cap]                                    # (E_l, C, D)
+
+    if "w_gate" in p:
+        h = activation(act, jnp.einsum("ecd,edf->ecf", buf,
+                                       p["w_gate"].astype(buf.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+    else:
+        h = activation(act, jnp.einsum("ecd,edf->ecf", buf,
+                                       p["w_up"].astype(buf.dtype)))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(h.dtype))
+
+    w_flat = (weights * local).reshape(-1).astype(out_buf.dtype)
+    gathered = out_buf[jnp.minimum(flat_e, e_local - 1),
+                       jnp.minimum(flat_pos, cap - 1)]           # (T*k, D)
+    y = jnp.sum((gathered * w_flat[:, None]).reshape(t, k, d), axis=1)
+
+    if "shared" in p:  # shared expert(s): dense, every token
+        y = y + mlp(p["shared"], xt, act)
+    return y.reshape(shape), aux

@@ -1,0 +1,151 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU + gated output.
+
+Block structure (Griffin recurrent block):
+    x -> [linear -> GeLU]                  (gate branch)
+      -> [linear -> causal conv1d(w=4) -> RG-LRU]  (recurrent branch)
+    y  = gate * recurrent  -> linear out
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))   in (0, 1)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+This is an elementwise linear recurrence h_t = a_t h_{t-1} + b_t — the
+full-sequence path uses an associative scan (O(log L) depth), with a Pallas
+chunked-scan kernel as the TPU-target implementation. Decode carries
+(conv_state, h) — O(1) per token, which is what makes long_500k decoding
+trivial for this family.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.models import layers
+from repro.models.layers import init_linear, linear
+
+Array = jax.Array
+PyTree = Any
+
+
+N_GATE_BLOCKS = 16  # block-diagonal gates (as in the official recurrentgemma
+                    # implementation) — shardable over a 16-way model axis
+
+
+def init_rglru_block(key: Array, d_model: int, cfg: RGLRUConfig,
+                     dtype=layers.DEFAULT_PARAM_DTYPE) -> PyTree:
+    w = cfg.lru_width or d_model
+    nb = N_GATE_BLOCKS
+    assert w % nb == 0, f"lru_width {w} % {nb} != 0"
+    ks = jax.random.split(key, 6)
+    return {
+        "in_gate": init_linear(ks[0], d_model, w, dtype=dtype),
+        "in_rec": init_linear(ks[1], d_model, w, dtype=dtype),
+        "conv_w": layers.truncated_normal(ks[2], (cfg.conv_width, w),
+                                          scale=cfg.conv_width**-0.5,
+                                          dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype=dtype),
+        # block-diagonal RG-LRU gates on the recurrent branch
+        "wa": layers.truncated_normal(ks[3], (nb, w // nb, w // nb),
+                                      scale=(w // nb)**-0.5, dtype=dtype),
+        "ba": jnp.zeros((nb, w // nb), dtype=dtype),
+        "wx": layers.truncated_normal(ks[4], (nb, w // nb, w // nb),
+                                      scale=(w // nb)**-0.5, dtype=dtype),
+        "bx": jnp.zeros((nb, w // nb), dtype=dtype),
+        "lam": jnp.full((w,), 2.0, dtype=jnp.float32),  # softplus(2) ~ 2.1
+        "out": init_linear(ks[5], w, d_model, dtype=dtype),
+    }
+
+
+def _block_linear(w: Array, b: Array, u: Array) -> Array:
+    """Block-diagonal linear: u (..., W) with W = nb * bw."""
+    nb, bw, _ = w.shape
+    ub = u.reshape(*u.shape[:-1], nb, bw)
+    y = jnp.einsum("...nb,nbc->...nc", ub, w.astype(u.dtype))
+    y = y + b.astype(u.dtype)
+    return y.reshape(*u.shape)
+
+
+def _gates(p: PyTree, cfg: RGLRUConfig, u: Array):
+    """a_t and b_t for the linear recurrence h_t = a h + b, fp32."""
+    r = jax.nn.sigmoid(_block_linear(p["wa"], p["ba"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_linear(p["wx"], p["bx"], u).astype(jnp.float32))
+    log_a = -cfg.c_exponent * jax.nn.softplus(p["lam"]) * r   # (..., W) < 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def causal_conv1d(w: Array, b: Array, x: Array,
+                  state: Array | None = None) -> tuple[Array, Array]:
+    """Depthwise causal conv. x (B, L, W); state (B, cw-1, W) carries the
+    last cw-1 inputs for decode. Returns (y, new_state)."""
+    cw = w.shape[0]
+    bsz, length, width = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, cw - 1, width), dtype=x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, cw-1+L, W)
+    y = jnp.zeros_like(x)
+    for i in range(cw):
+        y = y + xp[:, i:i + length] * w[i][None, None, :].astype(x.dtype)
+    y = y + b[None, None, :].astype(x.dtype)
+    new_state = xp[:, -(cw - 1):] if cw > 1 else state
+    return y, new_state
+
+
+def linear_scan(a: Array, b: Array, h0: Array | None = None) -> Array:
+    """h_t = a_t h_{t-1} + b_t along axis 1, via associative scan."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(p: PyTree, x: Array, cfg: RGLRUConfig, *,
+                impl: str = "ref", return_state: bool = False):
+    """Full-sequence recurrent block (training / prefill). x (B, L, D)."""
+    gate = jax.nn.gelu(linear(p["in_gate"], x), approximate=True)
+    u = linear(p["in_rec"], x)
+    u, conv_state = causal_conv1d(p["conv_w"], p["conv_b"], u)
+    a, b = _gates(p, cfg, u)
+    if impl == "pallas":
+        from repro.kernels.rglru_scan import ops as scan_ops
+        h = scan_ops.chunked_linear_scan(a, b)
+    else:
+        h = linear_scan(a, b)
+    y = h.astype(x.dtype) * gate
+    out = linear(p["out"], y)
+    if return_state:
+        return out, {"conv": conv_state, "h": h[:, -1]}
+    return out
+
+
+def init_rglru_cache(batch: int, d_model: int, cfg: RGLRUConfig,
+                     dtype=jnp.float32) -> PyTree:
+    w = cfg.lru_width or d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype=jnp.bfloat16),
+        "h": jnp.zeros((batch, w), dtype=dtype),
+    }
+
+
+def rglru_decode(p: PyTree, x: Array, cache: PyTree, cfg: RGLRUConfig
+                 ) -> tuple[Array, PyTree]:
+    """One-token step. x (B, 1, D)."""
+    gate = jax.nn.gelu(linear(p["in_gate"], x), approximate=True)
+    u = linear(p["in_rec"], x)
+    u, conv_state = causal_conv1d(p["conv_w"], p["conv_b"], u, cache["conv"])
+    a, b = _gates(p, cfg, u)  # (B, 1, W)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = h[:, None].astype(x.dtype) * gate
+    return linear(p["out"], y), {"conv": conv_state, "h": h}

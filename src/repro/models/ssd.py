@@ -1,0 +1,234 @@
+"""Mamba-2 block: state-space duality (SSD), chunked full-sequence path.
+
+Per-head scalar-decay SSM:
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (x_t outer B_t)     h: (P, N)
+    y_t = h_t @ C_t + D * x_t
+
+Full-sequence (training/prefill) uses the SSD chunked algorithm: the
+sequence is split into chunks of Q tokens; within a chunk the output is an
+attention-like quadratic term (the "duality"); across chunks a cheap scan
+propagates the (H, P, N) state. The quadratic intra-chunk term is the
+compute hot spot and is what the Pallas ``ssd_scan`` kernel implements; the
+pure-jnp version here is its oracle and the CPU/dry-run path.
+
+Projections are SPLIT (z / x / BC / dt) rather than fused so tensor
+parallelism can shard the d_inner and head dims over the model axis while
+keeping the small B/C projections replicated.
+
+Decode carries (conv_state, ssm_state) — O(1) per token (long_500k-ready).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models import layers
+from repro.models.layers import init_linear, linear
+
+Array = jax.Array
+PyTree = Any
+
+
+def dims(d_model: int, cfg: SSMConfig) -> tuple[int, int]:
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    return d_inner, n_heads
+
+
+def init_ssd_block(key: Array, d_model: int, cfg: SSMConfig,
+                   dtype=layers.DEFAULT_PARAM_DTYPE) -> PyTree:
+    d_inner, n_heads = dims(d_model, cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "z_proj": init_linear(ks[0], d_model, d_inner, dtype=dtype),
+        "x_proj": init_linear(ks[1], d_model, d_inner, dtype=dtype),
+        "bc_proj": init_linear(ks[2], d_model, 2 * cfg.d_state, dtype=dtype),
+        "dt_proj": init_linear(ks[3], d_model, n_heads, dtype=dtype),
+        "conv_x_w": layers.truncated_normal(ks[4], (cfg.d_conv, d_inner),
+                                            scale=cfg.d_conv**-0.5,
+                                            dtype=dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype=dtype),
+        "conv_bc_w": layers.truncated_normal(ks[5], (cfg.d_conv,
+                                                     2 * cfg.d_state),
+                                             scale=cfg.d_conv**-0.5,
+                                             dtype=dtype),
+        "conv_bc_b": jnp.zeros((2 * cfg.d_state,), dtype=dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype=jnp.float32),
+        "a_log": jnp.zeros((n_heads,), dtype=jnp.float32),  # A = -exp(a_log)
+        "d_skip": jnp.ones((n_heads,), dtype=jnp.float32),
+        "norm": layers.init_rmsnorm(d_inner),
+        "out_proj": init_linear(ks[6], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _prep(p: PyTree, x: Array, cfg: SSMConfig,
+          conv_state: PyTree | None):
+    """Shared front end: projections, convs, activations."""
+    from repro.models.rglru import causal_conv1d
+
+    d_model = x.shape[-1]
+    d_inner, n_heads = dims(d_model, cfg)
+    z = linear(p["z_proj"], x)
+    xs = linear(p["x_proj"], x)
+    bc = linear(p["bc_proj"], x)
+    dt = linear(p["dt_proj"], x)
+    cs_x = conv_state["x"] if conv_state else None
+    cs_bc = conv_state["bc"] if conv_state else None
+    xs, new_cs_x = causal_conv1d(p["conv_x_w"], p["conv_x_b"], xs, cs_x)
+    bc, new_cs_bc = causal_conv1d(p["conv_bc_w"], p["conv_bc_b"], bc, cs_bc)
+    xs = jax.nn.silu(xs)
+    bc = jax.nn.silu(bc)
+    b = bc[..., :cfg.d_state]
+    c = bc[..., cfg.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, L, H)
+    a = -jnp.exp(p["a_log"])                                     # (H,)
+    bsz, length = x.shape[:2]
+    xh = xs.reshape(bsz, length, n_heads, cfg.head_dim)
+    new_conv = {"x": new_cs_x, "bc": new_cs_bc}
+    return z, xs, xh, b, c, dt, a, new_conv, d_inner, n_heads
+
+
+def ssd_reference(xh: Array, b: Array, c: Array, dt: Array, a: Array,
+                  h0: Array | None = None) -> tuple[Array, Array]:
+    """Exact sequential recurrence (the oracle). xh (B,L,H,P), b/c (B,L,N),
+    dt (B,L,H), a (H,). Returns (y (B,L,H,P), final state (B,H,P,N))."""
+    bsz, length, n_heads, hd = xh.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, n_heads, hd, n), dtype=jnp.float32)
+
+    def step(h, inp):
+        xt, bt, ct, dtt = inp  # (B,H,P), (B,N), (B,N), (B,H)
+        decay = jnp.exp(dtt * a[None, :])                      # (B,H)
+        upd = (dtt[..., None, None] * xt[..., None]
+               * bt[:, None, None, :])                         # (B,H,P,N)
+        h = decay[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (xh.swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1).astype(jnp.float32),
+          c.swapaxes(0, 1).astype(jnp.float32), dt.swapaxes(0, 1))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h_final
+
+
+def ssd_chunked(xh: Array, b: Array, c: Array, dt: Array, a: Array,
+                chunk: int, h0: Array | None = None,
+                impl: str = "ref") -> tuple[Array, Array]:
+    """SSD chunked algorithm. Same contract as ``ssd_reference``."""
+    bsz, length, n_heads, hd = xh.shape
+    n = b.shape[-1]
+    q = chunk
+    orig_len = length
+    if length % q:
+        # pad to a chunk multiple: dt=0 => decay=1 and no state update, so
+        # padded steps are identity on the state and sliced off the output.
+        pad = q - length % q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        length += pad
+    nc = length // q
+
+    xc = xh.reshape(bsz, nc, q, n_heads, hd).astype(jnp.float32)
+    bc = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, n_heads)
+
+    log_decay = dtc * a[None, None, None, :]                   # (B,NC,Q,H) <0
+    cum = jnp.cumsum(log_decay, axis=2)                        # inclusive
+    total = cum[:, :, -1:]                                     # (B,NC,1,H)
+
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y_intra, states = ssd_ops.ssd_intra_chunk(xc, bc, cc, dtc, cum)
+    else:
+        # intra-chunk "attention": L[q,s] = exp(cum_q - cum_s) for s <= q
+        rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,NC,Q,Q,H)
+        mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+        gate = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bcqn,bcsn->bcqs", cc, bc)
+        w = scores[..., None] * gate * dtc[:, :, None, :, :]   # (B,NC,Q,S,H)
+        y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", w, xc)
+        # per-chunk contributed state: sum_s exp(total - cum_s) dt_s x_s B_s
+        sgate = jnp.exp(total - cum) * dtc                     # (B,NC,Q,H)
+        states = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", sgate, xc, bc)
+
+    # inter-chunk scan over the (small) per-chunk states
+    if h0 is None:
+        h0 = jnp.zeros((bsz, n_heads, hd, n), dtype=jnp.float32)
+    chunk_decay = jnp.exp(total[:, :, 0]).swapaxes(0, 1)       # (NC,B,H)
+
+    def step(h, inp):
+        dec, st = inp
+        h_out = h                                              # state BEFORE
+        h = dec[..., None, None] * h + st
+        return h, h_out
+
+    h_final, h_prev = jax.lax.scan(
+        step, h0, (chunk_decay, states.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                             # (B,NC,H,P,N)
+
+    # inter-chunk contribution: y += exp(cum_q) * C_q . h_prev
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp", jnp.exp(cum), cc, h_prev)
+    y = (y_intra + y_inter).reshape(bsz, length, n_heads, hd)
+    return y[:, :orig_len], h_final
+
+
+def _finish(p: PyTree, x_shape, z: Array, xs: Array, y_flat: Array,
+            cfg: SSMConfig) -> Array:
+    """Skip connection, gating, norm, out projection."""
+    y = y_flat + xs * jnp.repeat(p["d_skip"], cfg.head_dim
+                                 )[None, None, :].astype(xs.dtype)
+    y = layers.rmsnorm(p["norm"],
+                       (y.astype(jnp.float32)
+                        * jax.nn.silu(z.astype(jnp.float32))
+                        ).astype(z.dtype))
+    return linear(p["out_proj"], y)
+
+
+def ssd_block(p: PyTree, x: Array, cfg: SSMConfig, *,
+              impl: str = "ref", return_state: bool = False):
+    """Full-sequence Mamba-2 mixer. x (B, L, D)."""
+    z, xs, xh, b, c, dt, a, new_conv, d_inner, _ = _prep(p, x, cfg, None)
+    y, h_final = ssd_chunked(xh, b, c, dt, a, cfg.chunk, impl=impl)
+    y_flat = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    out = _finish(p, x.shape, z, xs, y_flat, cfg)
+    if return_state:
+        return out, {"conv": new_conv, "h": h_final}
+    return out
+
+
+def init_ssd_cache(batch: int, d_model: int, cfg: SSMConfig) -> PyTree:
+    d_inner, n_heads = dims(d_model, cfg)
+    return {
+        "conv": {
+            "x": jnp.zeros((batch, cfg.d_conv - 1, d_inner),
+                           dtype=jnp.bfloat16),
+            "bc": jnp.zeros((batch, cfg.d_conv - 1, 2 * cfg.d_state),
+                            dtype=jnp.bfloat16),
+        },
+        "h": jnp.zeros((batch, n_heads, cfg.head_dim, cfg.d_state),
+                       dtype=jnp.float32),
+    }
+
+
+def ssd_decode(p: PyTree, x: Array, cache: PyTree, cfg: SSMConfig
+               ) -> tuple[Array, PyTree]:
+    """One-token step. x (B, 1, D)."""
+    z, xs, xh, b, c, dt, a, new_conv, d_inner, _ = _prep(
+        p, x, cfg, cache["conv"])
+    decay = jnp.exp(dt[:, 0] * a[None, :])                     # (B,H)
+    upd = (dt[:, 0][..., None, None]
+           * xh[:, 0][..., None].astype(jnp.float32)
+           * b[:, 0][:, None, None, :].astype(jnp.float32))
+    h = decay[..., None, None] * cache["h"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, c[:, 0].astype(jnp.float32))
+    y_flat = y.reshape(x.shape[0], 1, d_inner).astype(x.dtype)
+    out = _finish(p, x.shape, z, xs, y_flat, cfg)
+    return out, {"conv": new_conv, "h": h}

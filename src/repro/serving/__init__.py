@@ -1,0 +1,1 @@
+"""Serving: replica engines + the hedged (redundant-dispatch) scheduler."""

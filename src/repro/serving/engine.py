@@ -1,0 +1,96 @@
+"""Single-replica inference engine: jitted prefill + greedy decode.
+
+One engine = one replica (one model copy on its device set); request-level
+parallelism comes from the scheduler dispatching across replicas — which is
+exactly the granularity the paper's redundancy operates at. Cancellation is
+checked between decode steps (a duplicate whose sibling finished stops
+burning compute). On this CPU container engines run real (smoke-sized)
+models; the hedged-serving benchmarks additionally use ``SimulatedEngine``
+with paper-calibrated service-time distributions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode as dec
+from repro.models import lm
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray              # prompt (S,) int32
+    max_new_tokens: int = 16
+    submitted_at: float = 0.0
+    priority: int = 0               # 0 = primary, 1 = duplicate (paper §2.4)
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done_event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    cancelled: bool = False
+    completed_by: str = ""
+
+
+class InferenceEngine:
+    """One model replica: batched prefill + greedy decode (single-slot
+    batching; the scheduler parallelizes across replicas)."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, max_len: int = 128,
+                 name: str = "replica0"):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.name = name
+        self._prefill = jax.jit(
+            lambda p, b: dec.prefill(p, cfg, b, max_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: dec.decode_step(p, cfg, c, t, pos))
+
+    def generate(self, prompt: np.ndarray, max_new_tokens: int = 16,
+                 check_cancel: Callable[[], bool] | None = None
+                 ) -> np.ndarray | None:
+        toks = jnp.asarray(prompt, dtype=jnp.int32)[None]
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        out = []
+        pos = toks.shape[1]
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (1,)
+        out.append(int(tok[0]))
+        for _ in range(max_new_tokens - 1):
+            if check_cancel is not None and check_cancel():
+                return None
+            logits, cache = self._decode(self.params, cache, tok[None],
+                                         jnp.int32(pos))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(int(tok[0]))
+            pos += 1
+        return np.asarray(out, dtype=np.int32)
+
+
+class SimulatedEngine:
+    """Replica with a service-time model instead of real compute — the
+    serving-layer analogue of the paper's queueing-model servers. Service
+    times are drawn per request from ``sampler()`` (seconds)."""
+
+    def __init__(self, sampler: Callable[[], float], name: str = "sim0"):
+        self.sampler = sampler
+        self.name = name
+
+    def generate(self, prompt: np.ndarray, max_new_tokens: int = 16,
+                 check_cancel: Callable[[], bool] | None = None):
+        t_service = float(self.sampler())
+        deadline = time.monotonic() + t_service
+        while time.monotonic() < deadline:
+            if check_cancel is not None and check_cancel():
+                return None
+            time.sleep(min(0.0005, max(deadline - time.monotonic(), 0.0)))
+        return np.asarray([0] * max_new_tokens, dtype=np.int32)

@@ -1,0 +1,174 @@
+"""Hedged request scheduler — the paper's technique as a serving feature.
+
+Each replica runs a worker thread draining a two-level priority queue
+(strict: duplicates never delay primaries — the §2.4 mechanism one layer
+up). For every incoming request the scheduler:
+
+  1. asks the ``HedgePolicy`` for k given the ``LoadMeter``'s utilization
+     (k=1 above the threshold load — "judicious redundancy", §5);
+  2. enqueues the primary at HIGH priority on one replica and k-1 duplicate
+     copies at LOW priority on distinct other replicas;
+  3. returns the first completion; queued (not yet started) losers are
+     cancelled, and optionally running ones too (tied requests, off by
+     default to match the paper's no-cancellation model).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core.hedging import HedgePolicy, LoadMeter
+from repro.serving.engine import Request
+
+PRIORITY_HIGH = 0
+PRIORITY_LOW = 1
+
+
+class _Copy:
+    __slots__ = ("req", "priority", "cancelled", "started")
+
+    def __init__(self, req: Request, priority: int):
+        self.req = req
+        self.priority = priority
+        self.cancelled = False
+        self.started = False
+
+
+class ReplicaWorker:
+    def __init__(self, engine, scheduler: "HedgedScheduler", name: str):
+        self.engine = engine
+        self.scheduler = scheduler
+        self.name = name
+        self._heap: list = []
+        self._counter = itertools.count()
+        self._cv = threading.Condition()
+        self._stop = False
+        self.busy = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"worker-{name}")
+        self._thread.start()
+
+    def submit(self, copy: _Copy) -> None:
+        with self._cv:
+            heapq.heappush(self._heap, (copy.priority, next(self._counter),
+                                        copy))
+            self._cv.notify()
+
+    def queue_depth(self) -> int:
+        with self._cv:
+            return len(self._heap) + (1 if self.busy else 0)
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify()
+        self._thread.join(timeout=5)
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._heap and not self._stop:
+                    self._cv.wait(timeout=0.1)
+                if self._stop:
+                    return
+                _, _, copy = heapq.heappop(self._heap)
+            if copy.cancelled or copy.req.done_event.is_set():
+                continue  # a sibling already finished: drop silently
+            copy.started = True
+            self.busy = True
+            try:
+                out = self.engine.generate(
+                    copy.req.tokens, copy.req.max_new_tokens,
+                    check_cancel=lambda c=copy: c.cancelled or
+                    (self.scheduler.tied_cancel and
+                     c.req.done_event.is_set()))
+            except Exception:
+                out = None  # replica failure: redundancy masks it
+            finally:
+                self.busy = False
+            if out is not None and not copy.req.done_event.is_set():
+                copy.req.out_tokens = list(map(int, out))
+                copy.req.completed_by = self.name
+                copy.req.done_event.set()
+
+
+class HedgedScheduler:
+    def __init__(self, engines: Sequence[Any],
+                 policy: HedgePolicy | None = None,
+                 meter: LoadMeter | None = None,
+                 tied_cancel: bool = False,
+                 seed: int = 0):
+        self.policy = policy or HedgePolicy()
+        self.meter = meter or LoadMeter(alpha=0.2)
+        self.tied_cancel = tied_cancel
+        self.rng = np.random.default_rng(seed)
+        self.workers = [ReplicaWorker(e, self, getattr(e, "name", f"r{i}"))
+                        for i, e in enumerate(engines)]
+        self._rid = itertools.count()
+        self.stats = {"hedged": 0, "total": 0, "duplicate_wins": 0,
+                      "cancelled_copies": 0}
+
+    # ------------------------------------------------------------------
+    # elastic replica management: replicas are independent resources, so
+    # adding/removing them at runtime needs no resharding or draining
+    # beyond the departing worker's own queue.
+    def add_replica(self, engine: Any) -> None:
+        self.workers.append(
+            ReplicaWorker(engine, self,
+                          getattr(engine, "name", f"r{len(self.workers)}")))
+
+    def remove_replica(self, name: str) -> bool:
+        for i, w in enumerate(self.workers):
+            if w.name == name:
+                w.stop()
+                del self.workers[i]
+                return True
+        return False
+
+    # ------------------------------------------------------------------
+    def utilization(self) -> float:
+        busy = sum(1.0 for w in self.workers if w.busy)
+        return busy / max(len(self.workers), 1)
+
+    def submit(self, tokens: np.ndarray, max_new_tokens: int = 16,
+               timeout: float = 30.0) -> Request:
+        self.meter.update(self.utilization())
+        k = self.policy.k_for(self.meter.utilization)
+        k = min(k, len(self.workers))
+        req = Request(rid=next(self._rid), tokens=tokens,
+                      max_new_tokens=max_new_tokens,
+                      submitted_at=time.monotonic())
+        order = self.rng.permutation(len(self.workers))[:k]
+        copies = []
+        for j, widx in enumerate(order):
+            copy = _Copy(req, PRIORITY_HIGH if j == 0 else PRIORITY_LOW)
+            copies.append(copy)
+            self.workers[widx].submit(copy)
+        self.stats["total"] += 1
+        if k > 1:
+            self.stats["hedged"] += 1
+
+        if not req.done_event.wait(timeout=timeout):
+            for c in copies:
+                c.cancelled = True
+            raise TimeoutError(f"request {req.rid} timed out")
+        # cancel the queued losers (they may never have started)
+        for c in copies:
+            if not c.req.done_event.is_set() or not c.started:
+                if not c.started:
+                    self.stats["cancelled_copies"] += 1
+            c.cancelled = True
+        if req.completed_by and copies[0].started and \
+                req.completed_by != self.workers[order[0]].name:
+            self.stats["duplicate_wins"] += 1
+        req.latency = time.monotonic() - req.submitted_at  # type: ignore
+        return req
+
+    def shutdown(self) -> None:
+        for w in self.workers:
+            w.stop()

@@ -1,0 +1,1 @@
+"""Training: optimizers, train step/loop, straggler-tolerant grad agg."""

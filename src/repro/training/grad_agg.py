@@ -1,0 +1,59 @@
+"""Straggler-tolerant gradient aggregation (redundancy for training).
+
+Synchronous SPMD cannot take "first of two" inside one XLA program, so the
+paper's technique maps onto training as:
+
+  * **backup microbatches** — dispatch n microbatches where only m are
+    required; aggregate whichever m finish first (host decides the mask);
+  * **drop-straggler aggregation** — a masked mean over microbatch grads:
+    contributions with mask=0 (straggling / failed workers) are excluded
+    and the mean is renormalized, keeping the update unbiased w.r.t. the
+    included data.
+
+Both reduce to ``masked_grad_mean`` below, which is jit-safe (static shapes;
+the mask is data). This mirrors backup-task execution in Dolly/MapReduce
+(paper §4) on the gradient pathway.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def masked_grad_mean(grad_stack: PyTree, mask: jax.Array) -> PyTree:
+    """grad_stack leaves: (n_micro, ...); mask: (n_micro,) in {0,1}.
+
+    Returns the mean over the included microbatches (renormalized).
+    """
+    denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+
+    def agg(g):
+        m = mask.astype(jnp.float32).reshape((-1,) + (1,) * (g.ndim - 1))
+        return (jnp.sum(g.astype(jnp.float32) * m, axis=0) / denom
+                ).astype(g.dtype)
+
+    return jax.tree.map(agg, grad_stack)
+
+
+def first_m_mask(arrival_order: jax.Array, m: int) -> jax.Array:
+    """Mask selecting the first ``m`` arrivals. arrival_order[i] = rank of
+    microbatch i's completion (0 = first)."""
+    return (arrival_order < m).astype(jnp.float32)
+
+
+def accumulate_microbatch_grads(loss_fn, params: PyTree, batches: PyTree,
+                                n_micro: int) -> tuple[PyTree, jax.Array]:
+    """Stack per-microbatch grads: batches leaves are (n_micro, ...)."""
+    def one(mb):
+        (_, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                    mb)
+        return g, metrics["loss"]
+
+    grads, losses = jax.lax.map(
+        lambda i: one(jax.tree.map(lambda b: b[i], batches)),
+        jnp.arange(n_micro))
+    return grads, losses

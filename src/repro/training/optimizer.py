@@ -1,0 +1,158 @@
+"""Optimizers: AdamW (fp32 master + moments) and Adafactor (factored second
+moment, no momentum, no master) — both functional, pytree-shaped like params.
+
+AdamW is the default training recipe; Adafactor is used where fp32 Adam
+state cannot fit (deepseek-v3-671b on 256 x 16 GB v5e — documented in
+DESIGN.md/EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    clip_rms: float = 1.0
+
+
+def _global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: PyTree) -> PyTree:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    }
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: PyTree, step: Array,
+                 cfg: OptConfig) -> tuple[PyTree, PyTree]:
+    grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        master = master - cfg.lr * (update + cfg.weight_decay * master)
+        return m, v, master
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+    m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
+    v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda o: isinstance(o, tuple))
+    master = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda o: isinstance(o, tuple))
+    new_params = jax.tree.map(lambda mast, p: mast.astype(p.dtype), master,
+                              params)
+    return new_params, {"m": m, "v": v, "master": master}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern), simplified: beta1=0, factored v, no master
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape: tuple[int, ...]) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: PyTree) -> PyTree:
+    def vrow(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                else jnp.zeros((1,), jnp.float32))
+
+    def vcol(p):
+        return (jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32)
+                if _factored(p.shape) else jnp.zeros(p.shape, jnp.float32))
+
+    return {"v_row": jax.tree.map(vrow, params),
+            "v_col": jax.tree.map(vcol, params)}
+
+
+def adafactor_update(params: PyTree, grads: PyTree, state: PyTree,
+                     step: Array, cfg: OptConfig) -> tuple[PyTree, PyTree]:
+    grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(g.shape):
+            vr = beta2 * vr + (1.0 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1.0 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            update = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                          + cfg.eps)
+        else:
+            vc = beta2 * vc + (1.0 - beta2) * g2
+            update = g / (jnp.sqrt(vc) + cfg.eps)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / cfg.clip_rms)
+        newp = (p.astype(jnp.float32)
+                - cfg.lr * (update + cfg.weight_decay * p.astype(jnp.float32)))
+        return newp.astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, params, grads, state["v_row"], state["v_col"])
+    is_t = lambda o: isinstance(o, tuple)
+    newp = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+    vr = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+    vc = jax.tree.map(lambda o: o[2], out, is_leaf=is_t)
+    return newp, {"v_row": vr, "v_col": vc}
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    cfg: OptConfig
+
+    def init(self, params: PyTree) -> PyTree:
+        return (adamw_init(params) if self.cfg.name == "adamw"
+                else adafactor_init(params))
+
+    def update(self, params: PyTree, grads: PyTree, state: PyTree,
+               step: Array) -> tuple[PyTree, PyTree]:
+        fn = adamw_update if self.cfg.name == "adamw" else adafactor_update
+        return fn(params, grads, state, step, self.cfg)
+
+
+def make_optimizer(name: str, lr: float = 3e-4, **kw: Any) -> Optimizer:
+    return Optimizer(OptConfig(name=name, lr=lr, **kw))

@@ -1,0 +1,30 @@
+"""The production train step: loss -> grads -> optimizer update.
+
+This is exactly what the multi-pod dry-run lowers (train shapes), and what
+``launch/train.py`` executes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import ShardCtx
+from repro.models import lm
+from repro.training.optimizer import Optimizer
+
+PyTree = Any
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer,
+                    ctx: ShardCtx | None = None,
+                    impl: str = "ref") -> Callable:
+    def train_step(params: PyTree, opt_state: PyTree, batch: PyTree,
+                   step: jax.Array):
+        (_, metrics), grads = jax.value_and_grad(
+            lm.loss_fn, has_aux=True)(params, cfg, batch, ctx=ctx, impl=impl)
+        new_params, new_opt = opt.update(params, grads, opt_state, step)
+        return new_params, new_opt, metrics
+
+    return train_step

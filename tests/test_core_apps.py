@@ -1,0 +1,188 @@
+"""Tests for analytic results, hedging runtime, storage + DNS models."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import analytic, dns, hedging, queueing, storage_sim, threshold
+
+
+class TestAnalytic:
+    def test_theorem1_closed_form(self):
+        assert analytic.exponential_threshold() == pytest.approx(1 / 3)
+
+    def test_overhead_shrinks_closed_form_threshold(self):
+        t = [analytic.exponential_threshold(overhead=c)
+             for c in (0.0, 0.1, 0.3, 0.6)]
+        assert all(a > b for a, b in zip(t, t[1:]))
+        # overhead >= mean service (=1): never helps
+        assert analytic.exponential_threshold(overhead=1.0) == 0.0
+
+    def test_tcp_mean_saving_at_least_25ms(self):
+        m = analytic.TCPModel()
+        assert analytic.handshake_mean_saving(m) >= 0.0246
+
+    def test_tcp_monte_carlo_matches_first_order(self):
+        m = analytic.TCPModel()
+        key = jax.random.PRNGKey(0)
+        t1 = analytic.handshake_times(key, m, 400_000, duplicated=False)
+        t2 = analytic.handshake_times(key, m, 400_000, duplicated=True)
+        saving = float(jnp.mean(t1) - jnp.mean(t2))
+        assert saving == pytest.approx(analytic.handshake_mean_saving(m),
+                                       rel=0.25)
+
+    def test_tcp_tail_saving(self):
+        # §3.1 claims an >=880 ms tail improvement. Under the stated model
+        # P(>=1 timeout | duplicated) = 1-(1-0.0007)^3 ~= 0.21% which is
+        # still > 0.1%, so the gap materializes at the percentile where
+        # duplication crosses the timeout probability (p99.5-p99.8), not at
+        # p99.9 exactly. We assert the paper's magnitude at p99.5 and that
+        # the duplicated tail is never worse. (Documented in EXPERIMENTS.md.)
+        m = analytic.TCPModel()
+        key = jax.random.PRNGKey(1)
+        t1 = analytic.handshake_times(key, m, 400_000, duplicated=False)
+        t2 = analytic.handshake_times(key, m, 400_000, duplicated=True)
+        gap995 = float(jnp.percentile(t1, 99.5) - jnp.percentile(t2, 99.5))
+        assert gap995 > 0.88  # seconds — the paper's ">= 880 ms"
+        for p in (99.0, 99.5, 99.9, 99.99):
+            assert float(jnp.percentile(t2, p)) <= \
+                float(jnp.percentile(t1, p)) + 1e-3
+
+
+class TestHedging:
+    def test_first_completion_wins(self):
+        def slow():
+            time.sleep(0.2); return "slow"
+
+        def fast():
+            time.sleep(0.01); return "fast"
+
+        res = hedging.hedged_call([slow, fast], k=2)
+        assert res.value == "fast"
+        assert res.winner == 1
+        assert res.latency < 0.15
+
+    def test_k1_no_hedge(self):
+        res = hedging.hedged_call([lambda: 7, lambda: 8], k=1)
+        assert res.value == 7 and res.k == 1
+
+    def test_failure_masked_by_redundancy(self):
+        def boom():
+            raise RuntimeError("replica died")
+
+        def ok():
+            time.sleep(0.02); return 42
+
+        res = hedging.hedged_call([boom, ok], k=2)
+        assert res.value == 42
+
+    def test_all_fail_raises(self):
+        def boom():
+            raise RuntimeError("down")
+
+        with pytest.raises(RuntimeError):
+            hedging.hedged_call([boom, boom], k=2)
+
+    def test_policy_threshold(self):
+        p = hedging.HedgePolicy(max_k=2, threshold=0.3)
+        assert p.k_for(0.1) == 2
+        assert p.k_for(0.35) == 1
+
+    def test_policy_overhead_cutoff(self):
+        p = hedging.HedgePolicy(max_k=2, threshold=0.3,
+                                client_overhead_frac=0.9)
+        assert p.k_for(0.01) == 1
+
+    def test_load_meter_ewma(self):
+        m = hedging.LoadMeter(alpha=0.5, init=0.0)
+        m.update(1.0)
+        assert m.utilization == pytest.approx(0.5)
+        m.update(1.0)
+        assert m.utilization == pytest.approx(0.75)
+
+
+class TestStorageModel:
+    def test_base_config_threshold_near_paper(self):
+        # Paper §2.2: threshold ~30% for the 4KB disk-backed store.
+        dist, _, ovh = storage_sim.service_dist(storage_sim.StorageConfig())
+        assert ovh < 0.02  # client overhead ~1% of mean service
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=60_000,
+                                 client_overhead=ovh)
+        key = jax.random.PRNGKey(2)
+        t = threshold.threshold_grid(key, dist, cfg, n_seeds=2)
+        assert 0.25 <= t <= 0.45
+
+    def test_unit_mean(self):
+        dist, scale, _ = storage_sim.service_dist(storage_sim.StorageConfig())
+        s = dist.sample(jax.random.PRNGKey(3), (200_000,))
+        assert float(jnp.mean(s)) == pytest.approx(1.0, rel=0.05)
+        assert scale == pytest.approx(
+            storage_sim.mean_service_ms(storage_sim.StorageConfig()), rel=1e-6)
+
+    def test_large_files_kill_replication(self):
+        # Fig 10: 400 KB files => client overhead is a large fraction of
+        # service time => replication stops helping at moderate load.
+        cfg400 = storage_sim.StorageConfig(mean_file_kb=400.0)
+        dist, _, ovh = storage_sim.service_dist(cfg400)
+        assert ovh > 0.2
+        sim = queueing.SimConfig(n_servers=20, n_arrivals=60_000,
+                                 client_overhead=ovh)
+        key = jax.random.PRNGKey(4)
+        t400 = threshold.threshold_grid(key, dist, sim, n_seeds=2)
+        base_dist, _, base_ovh = storage_sim.service_dist(
+            storage_sim.StorageConfig())
+        t4 = threshold.threshold_grid(
+            key, base_dist,
+            queueing.SimConfig(n_servers=20, n_arrivals=60_000,
+                               client_overhead=base_ovh), n_seeds=2)
+        assert t400 < t4
+
+    def test_memcached_replication_hurts_at_10pct(self):
+        # Fig 12: in-memory store, overhead ~9% of 0.18ms service =>
+        # replication worsens mean latency at >= 10% load.
+        dist, _, ovh = storage_sim.service_dist(storage_sim.MEMCACHED)
+        assert ovh == pytest.approx(0.09, abs=0.03)
+        sim = queueing.SimConfig(n_servers=20, n_arrivals=60_000,
+                                 client_overhead=ovh)
+        key = jax.random.PRNGKey(5)
+        g = queueing.replication_gain(key, dist, jnp.asarray([0.1, 0.3]), sim,
+                                      n_seeds=2)
+        # low-variance near-deterministic service + overhead: tiny/no gain
+        assert float(g[1]) < 0.0
+
+
+class TestDNS:
+    def test_replication_reduces_tail(self):
+        pop = dns.DNSPopulation()
+        key = jax.random.PRNGKey(6)
+        ranking = dns.rank_servers(key, pop)
+        lat = dns.sample_latencies(jax.random.PRNGKey(7), pop, 200_000)
+        r1 = dns.replicated_response(lat, ranking, 1)
+        r10 = dns.replicated_response(lat, ranking, 10)
+        f1 = float(jnp.mean(r1 > 500.0))
+        f10 = float(jnp.mean(r10 > 500.0))
+        assert f10 < f1 / 3.0  # paper: 6.5x reduction
+        assert float(jnp.mean(r10)) < float(jnp.mean(r1))
+
+    def test_more_servers_monotone(self):
+        pop = dns.DNSPopulation()
+        key = jax.random.PRNGKey(8)
+        ranking = dns.rank_servers(key, pop)
+        lat = dns.sample_latencies(jax.random.PRNGKey(9), pop, 50_000)
+        means = [float(jnp.mean(dns.replicated_response(lat, ranking, k)))
+                 for k in range(1, 11)]
+        assert all(a >= b for a, b in zip(means, means[1:]))
+
+    def test_marginal_savings_positive_and_diminishing(self):
+        pop = dns.DNSPopulation()
+        key = jax.random.PRNGKey(10)
+        ranking = dns.rank_servers(key, pop)
+        lat = dns.sample_latencies(jax.random.PRNGKey(11), pop, 200_000)
+        means = jnp.asarray(
+            [float(jnp.mean(dns.replicated_response(lat, ranking, k)))
+             for k in range(1, 11)])
+        marg = dns.marginal_savings_ms_per_kb(means, pop)
+        assert float(marg[0]) > analytic.BENEFIT_THRESHOLD_MS_PER_KB
+        assert float(marg[0]) > float(marg[-1])

@@ -1,0 +1,122 @@
+"""Integration tests for the multi-pod dry-run machinery.
+
+The full 68-cell sweep runs via ``python -m repro.launch.dryrun --all``;
+here we run one real cell end-to-end in a subprocess (512 host devices) and
+unit-test the HLO analyzer + sharding rules in-process.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+class TestHLOAnalysis:
+    def test_trip_count_scaling(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.launch import hlo_analysis as ha
+
+        def body(c, _):
+            return c @ c, None
+
+        def f(x):
+            return jax.lax.scan(body, x, None, length=10)[0]
+
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        hlo = jax.jit(f).lower(x).compile().as_text()
+        res = ha.analyze(hlo)
+        one_matmul = 2 * 128 * 128 * 128
+        # the scan must count ~10 matmuls, not 1
+        assert res["flops"] == pytest.approx(10 * one_matmul, rel=0.01)
+
+    def test_collective_detection(self):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch import hlo_analysis as ha
+        if jax.device_count() < 2:
+            pytest.skip("needs >1 device")
+
+    def test_shape_bytes(self):
+        from repro.launch.hlo_analysis import _shape_bytes
+        assert _shape_bytes("f32[2,3]{1,0}") == 24
+        assert _shape_bytes("bf16[4,4]") == 32
+        assert _shape_bytes("(f32[2], s32[3])") == 8 + 12
+
+
+class TestShardingRules:
+    def test_param_specs_divisible_all_archs(self):
+        """Every param spec must divide its dim on the production mesh."""
+        import jax
+        from repro.configs import base as cfgbase
+        from repro.distributed import sharding
+        from repro.launch import specs as sp
+
+        sizes = {"pod": 2, "data": 16, "model": 16}
+        for arch in cfgbase.list_architectures():
+            cfg = cfgbase.get_config(arch)
+            params = sp.param_specs(cfg)
+            flat, _ = jax.tree_util.tree_flatten_with_path(params)
+            for inference in (False, True):
+                ep = (sharding._decode_ep_axes(cfg, False) if inference
+                      else ("model",))
+                for path, leaf in flat:
+                    pstr = sharding._path_str(path)
+                    spec = sharding.param_spec(
+                        pstr, leaf.shape, cfg, inference=inference,
+                        ep_axes=ep)
+                    for i, ax in enumerate(spec):
+                        if ax is None:
+                            continue
+                        axes = (ax,) if isinstance(ax, str) else ax
+                        size = 1
+                        for a in axes:
+                            size *= sizes[a]
+                        assert leaf.shape[i] % size == 0, \
+                            f"{arch} {pstr} {leaf.shape} {spec} (inf={inference})"
+
+    def test_layouts_defined_for_all_cells(self):
+        from repro.configs import base as cfgbase
+        from repro.distributed import sharding
+        for arch in cfgbase.list_architectures():
+            cfg = cfgbase.get_config(arch)
+            for shape in cfgbase.cells(arch):
+                for mp in (False, True):
+                    lay = sharding.make_layout(cfg, shape.kind, mp,
+                                               shape.global_batch)
+                    assert lay is not None
+                    if shape.kind == "decode":
+                        assert lay.kv_seq is not None
+
+    def test_decode_ep_axes(self):
+        from repro.configs import base as cfgbase
+        from repro.distributed import sharding
+        ds = cfgbase.get_config("deepseek-v3-671b")
+        assert sharding._decode_ep_axes(ds, False) == ("model", "data")
+        gr = cfgbase.get_config("granite-moe-3b-a800m")
+        assert sharding._decode_ep_axes(gr, False) == ("model",)
+
+
+@pytest.mark.slow
+class TestDryRunSubprocess:
+    def test_one_cell_end_to_end(self, tmp_path):
+        """Compile a real cell against the 256-chip mesh in a subprocess
+        (so the 512-host-device override cannot leak into this process)."""
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "mamba2-370m", "--shape", "decode_32k",
+             "--mesh", "single", "--out", str(tmp_path)],
+            env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                 "HOME": "/root"},
+            capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-2000:]
+        rec = json.loads(
+            (tmp_path / "mamba2-370m_decode_32k_single.json").read_text())
+        assert rec["ok"], rec.get("error")
+        assert rec["devices"] == 256
+        assert rec["scaled_flops"] > 0
+        assert "collective_bytes" in rec

@@ -1,0 +1,197 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention import ref as da_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rglru_scan import ops as rg_ops
+from repro.kernels.rglru_scan import ref as rg_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+from repro.models import ssd as ssd_model
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-3, atol=2e-3)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [
+        # (S, H, KV, hd)
+        (64, 4, 2, 32),    # GQA
+        (128, 2, 2, 64),   # MHA
+        (96, 8, 1, 16),    # MQA, non-pow2 seq
+        (256, 4, 4, 128),  # large block
+    ])
+    def test_matches_ref(self, shape, dtype):
+        s, h, kv, hd = shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (2, s, h, hd), dtype=dtype)
+        k = jax.random.normal(ks[1], (2, s, kv, hd), dtype=dtype)
+        v = jax.random.normal(ks[2], (2, s, kv, hd), dtype=dtype)
+        out = fa_ops.flash_attention(q, k, v, interpret=True)
+        expect = fa_ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   **tol(dtype))
+
+    @pytest.mark.parametrize("window", [8, 32])
+    @pytest.mark.parametrize("softcap", [None, 50.0])
+    def test_window_and_softcap(self, window, softcap):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 64, 4, 32))
+        k = jax.random.normal(ks[1], (1, 64, 2, 32))
+        v = jax.random.normal(ks[2], (1, 64, 2, 32))
+        out = fa_ops.flash_attention(q, k, v, window=window, softcap=softcap,
+                                     interpret=True)
+        expect = fa_ref.flash_attention_ref(q, k, v, window=window,
+                                            softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_matches_model_reference_path(self):
+        # the kernel must agree with the model's _sdpa path end-to-end
+        from repro.models import attention as attn
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (2, 32, 4, 16))
+        k = jax.random.normal(ks[1], (2, 32, 2, 16))
+        v = jax.random.normal(ks[2], (2, 32, 2, 16))
+        mask = attn.causal_mask(32, None)
+        expect = attn._sdpa(q, k, v, mask, None)
+        out = fa_ops.flash_attention(q, k, v, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [
+        # (L, H, KV, hd, pos)
+        (64, 4, 2, 32, 40),
+        (128, 8, 8, 64, 127),
+        (96, 4, 1, 16, 5),
+    ])
+    def test_dense_cache(self, shape, dtype):
+        length, h, kv, hd, pos = shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (2, 1, h, hd), dtype=dtype)
+        k = jax.random.normal(ks[1], (2, length, kv, hd), dtype=dtype)
+        v = jax.random.normal(ks[2], (2, length, kv, hd), dtype=dtype)
+        slot_pos = jnp.where(jnp.arange(length) <= pos,
+                             jnp.arange(length), -1).astype(jnp.int32)
+        out = da_ops.decode_attention(q, k, v, slot_pos, jnp.int32(pos),
+                                      interpret=True)
+        expect = da_ref.decode_attention_ref(q, k, v, slot_pos,
+                                             jnp.int32(pos))
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   **tol(dtype))
+
+    def test_ring_buffer_window(self):
+        # ring cache of size w with wrapped positions + window mask
+        w, h, kv, hd = 32, 4, 2, 16
+        pos = 45  # cache holds positions 14..45 in wrapped slots
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 1, h, hd))
+        k = jax.random.normal(ks[1], (1, w, kv, hd))
+        v = jax.random.normal(ks[2], (1, w, kv, hd))
+        slot_pos = jnp.asarray([(pos - ((pos - s) % w)) for s in range(w)],
+                               dtype=jnp.int32)
+        out = da_ops.decode_attention(q, k, v, slot_pos, jnp.int32(pos),
+                                      window=w, interpret=True)
+        expect = da_ref.decode_attention_ref(q, k, v, slot_pos,
+                                             jnp.int32(pos), window=w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("shape", [
+        # (B, L, H, P, N, chunk)
+        (2, 64, 4, 32, 16, 16),
+        (1, 128, 2, 64, 32, 32),
+        (2, 96, 4, 16, 8, 8),
+    ])
+    def test_matches_intra_ref(self, shape):
+        b, length, h, p, n, q = shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        nc = length // q
+        xc = jax.random.normal(ks[0], (b, nc, q, h, p))
+        bc = jax.random.normal(ks[1], (b, nc, q, n))
+        cc = jax.random.normal(ks[2], (b, nc, q, n))
+        dtc = jax.nn.softplus(jax.random.normal(ks[3], (b, nc, q, h)))
+        a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(4), (h,)) * 0.2)
+        cum = jnp.cumsum(dtc * a[None, None, None, :], axis=2)
+        y_k, st_k = ssd_ops.ssd_intra_chunk(xc, bc, cc, dtc, cum,
+                                            interpret=True)
+        y_r, st_r = ssd_ref.ssd_intra_chunk_ref(xc, bc, cc, dtc, cum)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                                   rtol=5e-3, atol=5e-3)
+        np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                                   rtol=5e-3, atol=5e-3)
+
+    @pytest.mark.parametrize("chunk", [8, 16, 64])
+    def test_chunked_matches_sequential(self, chunk):
+        # the full chunked algorithm (jnp path) == exact recurrence
+        b, length, h, p, n = 2, 64, 2, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 4)
+        xh = jax.random.normal(ks[0], (b, length, h, p))
+        bb = jax.random.normal(ks[1], (b, length, n))
+        cc = jax.random.normal(ks[2], (b, length, n))
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (b, length, h)))
+        a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (h,)) * 0.2)
+        y_c, h_c = ssd_model.ssd_chunked(xh, bb, cc, dt, a, chunk)
+        y_s, h_s = ssd_model.ssd_reference(xh, bb, cc, dt, a)
+        np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_s),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_chunked_pallas_matches_sequential(self):
+        b, length, h, p, n = 1, 64, 2, 32, 16
+        ks = jax.random.split(jax.random.PRNGKey(2), 4)
+        xh = jax.random.normal(ks[0], (b, length, h, p))
+        bb = jax.random.normal(ks[1], (b, length, n))
+        cc = jax.random.normal(ks[2], (b, length, n))
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (b, length, h)))
+        a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(6), (h,)) * 0.2)
+        y_c, h_c = ssd_model.ssd_chunked(xh, bb, cc, dt, a, 16, impl="pallas")
+        y_s, h_s = ssd_model.ssd_reference(xh, bb, cc, dt, a)
+        np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_s),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestRGLRUScan:
+    @pytest.mark.parametrize("shape", [
+        (2, 64, 32), (1, 128, 256), (3, 96, 24),
+    ])
+    def test_matches_ref(self, shape):
+        b, length, w = shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, length, w)))
+        bb = jax.random.normal(ks[1], (b, length, w))
+        out = rg_ops.chunked_linear_scan(a, bb, interpret=True)
+        expect = rg_ref.linear_scan_ref(a, bb)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_model_pallas_path_matches_ref_path(self):
+        from repro.configs.base import RGLRUConfig
+        from repro.models import rglru
+        cfg = RGLRUConfig(lru_width=32, conv_width=4)
+        p = rglru.init_rglru_block(jax.random.PRNGKey(0), 32, cfg,
+                                   dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+        y_ref = rglru.rglru_block(p, x, cfg, impl="ref")
+        y_pal = rglru.rglru_block(p, x, cfg, impl="pallas")
+        np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                                   rtol=3e-3, atol=3e-3)

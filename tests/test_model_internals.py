@@ -1,0 +1,161 @@
+"""Focused unit tests for model building blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig, MoEConfig
+from repro.models import attention, layers, mla, moe
+
+
+class TestSoftcap:
+    def test_bounded(self):
+        x = jnp.linspace(-1000, 1000, 101)
+        y = layers.softcap(x, 50.0)
+        assert float(jnp.max(jnp.abs(y))) <= 50.0
+        # near-identity around zero
+        np.testing.assert_allclose(np.asarray(layers.softcap(x, 50.0))[50],
+                                   0.0, atol=1e-6)
+
+    def test_none_is_identity(self):
+        x = jnp.asarray([1.0, -3.0])
+        np.testing.assert_array_equal(np.asarray(layers.softcap(x, None)),
+                                      np.asarray(x))
+
+
+class TestRoPE:
+    def test_rotation_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32))
+        pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+        y = layers.apply_rope(x, pos, 10_000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_relative_property(self):
+        # <rope(q,i), rope(k,j)> depends only on i - j
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 64))
+
+        def score(i, j):
+            qi = layers.apply_rope(q, jnp.full((1, 1), i), 10_000.0)
+            kj = layers.apply_rope(k, jnp.full((1, 1), j), 10_000.0)
+            return float(jnp.sum(qi * kj))
+
+        assert score(3, 1) == pytest.approx(score(7, 5), rel=1e-4)
+        assert score(3, 1) != pytest.approx(score(3, 2), rel=1e-3)
+
+    def test_position_zero_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 2, 16))
+        y = layers.apply_rope(x, jnp.zeros((1, 1), jnp.int32), 10_000.0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+class TestMoEUnit:
+    CFG = MoEConfig(n_experts=10, top_k=2, d_expert=16, capacity_factor=8.0)
+
+    def _params(self, d=8):
+        return moe.init_moe(jax.random.PRNGKey(0), d, self.CFG, gated=True,
+                            dtype=jnp.float32)
+
+    def test_padded_experts_never_routed(self):
+        p = self._params()
+        x = jax.random.normal(jax.random.PRNGKey(1), (40, 8))
+        idx, w, token_mask, aux = moe.route(p["router"]["w"], x, self.CFG)
+        assert int(jnp.max(idx)) < self.CFG.n_experts  # 10..15 are padding
+
+    def test_local_slice_sums_to_full(self):
+        # sum of per-slice outputs over disjoint expert ranges == full MoE
+        p = self._params()
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 6, 8))
+        full, aux_full = moe.moe_mlp(p, x, self.CFG, "silu")
+        part = jnp.zeros_like(full)
+        e_pad = self.CFG.padded_experts
+        for start in range(0, e_pad, 4):
+            p_slice = dict(p)
+            for k in ("w_up", "w_gate", "w_out"):
+                p_slice[k] = p[k][start:start + 4]
+            y, _ = moe.moe_mlp(p_slice, x, self.CFG, "silu",
+                               e_start=start, e_local=4)
+            # subtract the shared expert added by every slice call
+            if "shared" in p:
+                y = y - layers.mlp(p["shared"], x, "silu")
+            part = part + y
+        if "shared" in p:
+            part = part + layers.mlp(p["shared"], x, "silu")
+        np.testing.assert_allclose(np.asarray(part), np.asarray(full),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_combine_weights_normalized(self):
+        p = self._params()
+        x = jax.random.normal(jax.random.PRNGKey(3), (16, 8))
+        _, w, _, _ = moe.route(p["router"]["w"], x, self.CFG)
+        np.testing.assert_allclose(np.asarray(jnp.sum(w, axis=-1)), 1.0,
+                                   rtol=1e-5)
+
+    def test_capacity_drops_tokens(self):
+        cfg = MoEConfig(n_experts=4, top_k=1, d_expert=8,
+                        capacity_factor=1.0)
+        p = moe.init_moe(jax.random.PRNGKey(0), 8, cfg, gated=False,
+                         dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(4), (32, 8))
+        y_small, _ = moe.moe_mlp(p, x, cfg, "silu", capacity=1)
+        y_big, _ = moe.moe_mlp(p, x, cfg, "silu", capacity=32)
+        # with capacity 1 most tokens are dropped -> many zero rows
+        zero_rows = float(jnp.mean(jnp.all(y_small == 0.0, axis=-1)))
+        assert zero_rows > 0.5
+        assert float(jnp.mean(jnp.all(y_big == 0.0, axis=-1))) < 0.2
+
+
+class TestMLAUnit:
+    def test_absorbed_decode_matches_expanded(self):
+        """The absorbed decode path must equal the expanded attention on a
+        one-token query (the identity the 57x cache shrink relies on)."""
+        cfg = MLAConfig(q_lora_rank=16, kv_lora_rank=12, qk_nope_dim=8,
+                        qk_rope_dim=4, v_head_dim=8)
+        d, h, s, b = 32, 2, 6, 2
+        p = mla.init_mla(jax.random.PRNGKey(0), d, h, cfg,
+                         dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+
+        # expanded full-sequence attention, last position
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        y_full = mla.mla_attention(p, x, pos, n_heads=h, cfg=cfg,
+                                   rope_theta=10_000.0)
+
+        # absorbed: prefill s-1 into the cache then decode token s-1
+        cache = mla.init_mla_cache(b, s + 2, cfg, dtype=jnp.float32)
+        for t in range(s - 1):
+            c_t, r_t = mla._latents(p, x[:, t:t + 1],
+                                    jnp.full((b, 1), t), cfg, 10_000.0,
+                                    1e-6)
+            cache["c_kv"] = cache["c_kv"].at[:, t].set(c_t[:, 0])
+            cache["k_rope"] = cache["k_rope"].at[:, t].set(r_t[:, 0])
+        y_dec, _ = mla.mla_decode(p, x[:, s - 1:s], cache,
+                                  jnp.int32(s - 1), n_heads=h, cfg=cfg,
+                                  rope_theta=10_000.0)
+        np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                                   np.asarray(y_full[:, -1]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestAttentionMasks:
+    def test_local_window_strict(self):
+        m = attention.causal_mask(8, window=3)[0]
+        for i in range(8):
+            for j in range(8):
+                expect = (j <= i) and (j > i - 3)
+                assert bool(m[i, j]) == expect
+
+    def test_gqa_head_mapping_matches_repeat(self):
+        # GQA == MHA with kv heads repeated
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = jax.random.normal(ks[0], (1, 8, 4, 16))
+        k = jax.random.normal(ks[1], (1, 8, 2, 16))
+        v = jax.random.normal(ks[2], (1, 8, 2, 16))
+        mask = attention.causal_mask(8)
+        out_gqa = attention._sdpa(q, k, v, mask, None)
+        out_mha = attention._sdpa(q, jnp.repeat(k, 2, axis=2),
+                                  jnp.repeat(v, 2, axis=2), mask, None)
+        np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,73 @@
+"""Fat-tree replication simulator (§2.4) tests."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import netsim
+
+
+class TestTopology:
+    def test_path_shapes(self):
+        # intra-edge: 2 hops; intra-pod: 4; inter-pod: 6
+        assert len(netsim._links_for_path(0, 1, 0, 0)) == 2
+        assert len(netsim._links_for_path(0, 4, 0, 0)) == 4
+        assert len(netsim._links_for_path(0, 53, 1, 2)) == 6
+
+    def test_link_ids_in_range(self):
+        for src in (0, 13, 53):
+            for dst in (1, 27, 52):
+                if src == dst:
+                    continue
+                for u1 in range(3):
+                    for u2 in range(3):
+                        for l in netsim._links_for_path(src, dst, u1, u2):
+                            assert 0 <= l < netsim.N_LINKS
+
+    def test_alt_path_differs(self):
+        p1 = netsim._links_for_path(0, 53, 0, 0)
+        p2 = netsim._links_for_path(0, 53, 1, 0)
+        assert p1 != p2
+        # first and last links (host access) are shared
+        assert p1[0] == p2[0] and p1[-1] == p2[-1]
+
+
+class TestSimulation:
+    def test_all_delivered_at_low_load(self):
+        cfg = netsim.NetConfig(n_flows=60, load=0.05, replicate_first=0,
+                               seed=0)
+        fct, sizes, short, undelivered = netsim.flow_completion_times(cfg)
+        assert undelivered.sum() == 0
+        # minimum possible FCT: size packets paced 1/slot + path latency
+        assert np.all(fct >= sizes)
+
+    def test_replication_never_hurts_uncongested(self):
+        base = netsim.NetConfig(n_flows=60, load=0.05, replicate_first=0,
+                                seed=1)
+        rep = dataclasses.replace(base, replicate_first=8)
+        f0, _, sh0, _ = netsim.flow_completion_times(base)
+        f1, _, sh1, _ = netsim.flow_completion_times(rep)
+        # duplicates are strictly low priority: same workload, FCTs can only
+        # improve or stay equal (up to tie-breaking jitter)
+        assert np.mean(f1[sh1]) <= np.mean(f0[sh0]) * 1.02
+
+    def test_replication_helps_at_intermediate_load(self):
+        base = netsim.NetConfig(n_flows=400, load=0.45, replicate_first=0,
+                                elephant_frac=0.12, elephant_pkts=400,
+                                seed=3)
+        rep = dataclasses.replace(base, replicate_first=8)
+        f0, _, sh0, _ = netsim.flow_completion_times(base)
+        f1, _, sh1, _ = netsim.flow_completion_times(rep)
+        assert np.mean(f1[sh1]) < np.mean(f0[sh0])
+        assert np.percentile(f1[sh1], 90) <= np.percentile(f0[sh0], 90)
+
+    def test_elephants_unaffected(self):
+        base = netsim.NetConfig(n_flows=300, load=0.4, replicate_first=0,
+                                elephant_frac=0.12, elephant_pkts=300,
+                                seed=4)
+        rep = dataclasses.replace(base, replicate_first=8)
+        f0, s0, sh0, _ = netsim.flow_completion_times(base)
+        f1, s1, sh1, _ = netsim.flow_completion_times(rep)
+        e0, e1 = f0[~sh0], f1[~sh1]
+        # paper: statistically-insignificant effect on large flows
+        assert abs(np.mean(e1) - np.mean(e0)) / np.mean(e0) < 0.05

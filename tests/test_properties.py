@@ -1,0 +1,128 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import analytic, distributions as dists, queueing
+from repro.core.hedging import HedgePolicy
+from repro.data.pipeline import DataConfig, UniformSource
+from repro.training import grad_agg
+
+SMALL = settings(max_examples=20, deadline=None,
+                 suppress_health_check=list(HealthCheck))
+
+
+class TestDistributionInvariants:
+    @SMALL
+    @given(alpha=st.floats(min_value=1.5, max_value=8.0))
+    def test_pareto_unit_mean(self, alpha):
+        d = dists.pareto(alpha)
+        s = d.sample(jax.random.PRNGKey(0), (400_000,))
+        # heavy tails converge slowly; generous tolerance scaled by alpha
+        tol = 0.25 if alpha < 2.2 else 0.05
+        assert abs(float(jnp.mean(s)) - 1.0) < tol
+        assert bool(jnp.all(s > 0))
+
+    @SMALL
+    @given(p=st.floats(min_value=0.0, max_value=0.98))
+    def test_two_point_unit_mean_exact(self, p):
+        d = dists.two_point(p)
+        s = d.sample(jax.random.PRNGKey(1), (100_000,))
+        assert abs(float(jnp.mean(s)) - 1.0) < 0.02
+        vals = np.unique(np.asarray(s))
+        assert len(vals) <= 2
+
+    @SMALL
+    @given(k=st.floats(min_value=0.3, max_value=3.0))
+    def test_weibull_positive_unit_mean(self, k):
+        d = dists.weibull(k)
+        s = d.sample(jax.random.PRNGKey(2), (200_000,))
+        assert abs(float(jnp.mean(s)) - 1.0) < 0.1
+        assert bool(jnp.all(s >= 0))
+
+
+class TestQueueInvariants:
+    @SMALL
+    @given(rho=st.floats(min_value=0.05, max_value=0.45),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_responses_positive_and_at_least_service_floor(self, rho, seed):
+        cfg = queueing.SimConfig(n_servers=10, n_arrivals=2_000)
+        resp = queueing.simulate(jax.random.PRNGKey(seed),
+                                 dists.deterministic(), jnp.float32(rho),
+                                 cfg, k=2)
+        # with unit deterministic service, every response >= 1 (service
+        # time) up to float32 rounding of the arrival-time cumsum
+        assert bool(jnp.all(resp >= 1.0 - 1e-3))
+
+    @SMALL
+    @given(rho=st.floats(min_value=0.05, max_value=0.3),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_more_replicas_lower_mean_at_low_load(self, rho, seed):
+        # below the k=3 stability region, k=2 should not be worse than k=1
+        # in the mean (CRN-paired, low load)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=20_000)
+        key = jax.random.PRNGKey(seed)
+        r1 = queueing.simulate(key, dists.pareto(2.1), jnp.float32(rho),
+                               cfg, k=1)
+        r2 = queueing.simulate(key, dists.pareto(2.1), jnp.float32(rho),
+                               cfg, k=2)
+        assert float(jnp.mean(r2)) <= float(jnp.mean(r1)) * 1.05
+
+    @SMALL
+    @given(rho=st.floats(min_value=0.05, max_value=0.9))
+    def test_mm1_mean_formula(self, rho):
+        assert float(analytic.mm1_mean(rho)) >= 1.0
+        # closed form is monotone in rho
+        assert float(analytic.mm1_mean(rho)) <= float(
+            analytic.mm1_mean(min(rho + 0.05, 0.95)))
+
+
+class TestPolicyInvariants:
+    @SMALL
+    @given(util=st.floats(min_value=0.0, max_value=1.0),
+           thr=st.floats(min_value=0.05, max_value=0.5),
+           max_k=st.integers(min_value=1, max_value=4))
+    def test_k_bounded_and_monotone_in_utilization(self, util, thr, max_k):
+        p = HedgePolicy(max_k=max_k, threshold=thr)
+        k = p.k_for(util)
+        assert 1 <= k <= max_k
+        # higher utilization can never increase k
+        assert p.k_for(min(util + 0.2, 1.0)) <= k
+
+    @SMALL
+    @given(frac=st.floats(min_value=0.5, max_value=2.0))
+    def test_large_overhead_disables_hedging(self, frac):
+        p = HedgePolicy(max_k=3, threshold=0.4, client_overhead_frac=frac)
+        assert p.k_for(0.0) == 1
+
+
+class TestDataInvariants:
+    @SMALL
+    @given(step=st.integers(min_value=0, max_value=10_000),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_batch_pure_function_of_step(self, step, seed):
+        from repro.configs import get_smoke_config
+        cfg = get_smoke_config("nemotron-4-15b")
+        d = DataConfig(seq_len=8, batch_size=2, seed=seed)
+        a = UniformSource(cfg, d).batch_at(step)["tokens"]
+        b = UniformSource(cfg, d).batch_at(step)["tokens"]
+        np.testing.assert_array_equal(a, b)
+        assert a.min() >= 0 and a.max() < cfg.vocab_size
+
+
+class TestGradAggInvariants:
+    @SMALL
+    @given(n=st.integers(min_value=1, max_value=6),
+           m=st.integers(min_value=1, max_value=6),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_masked_mean_bounded_by_extremes(self, n, m, seed):
+        m = min(m, n)
+        g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (n, 4))}
+        order = jnp.asarray(np.random.default_rng(seed).permutation(n))
+        mask = grad_agg.first_m_mask(order, m)
+        out = grad_agg.masked_grad_mean(g, mask)
+        lo = jnp.min(g["w"], axis=0) - 1e-5
+        hi = jnp.max(g["w"], axis=0) + 1e-5
+        assert bool(jnp.all(out["w"] >= lo)) and bool(jnp.all(out["w"] <= hi))

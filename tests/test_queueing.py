@@ -1,0 +1,162 @@
+"""Queueing-model validation against the paper's §2.1 results."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import analytic, distributions as dists, queueing, threshold
+
+CFG = queueing.SimConfig(n_servers=20, n_arrivals=60_000)
+
+
+def _mean(key, dist, rho, k, cfg=CFG, n_seeds=2):
+    return float(queueing.mean_response(key, dist, jnp.asarray([rho]), cfg,
+                                        k, n_seeds=n_seeds)[0])
+
+
+class TestMM1:
+    """k=1 exponential service must match the M/M/1 closed form."""
+
+    @pytest.mark.parametrize("rho", [0.2, 0.5, 0.7])
+    def test_mm1_mean(self, rho):
+        key = jax.random.PRNGKey(0)
+        sim = _mean(key, dists.exponential(), rho, k=1, n_seeds=3)
+        expect = float(analytic.mm1_mean(rho))
+        assert sim == pytest.approx(expect, rel=0.08)
+
+    @pytest.mark.parametrize("rho", [0.1, 0.25])
+    def test_replicated_mean_matches_min_of_two_mm1(self, rho):
+        # Paper's approximation: each copy ~ M/M/1 at load 2*rho; response =
+        # min of two samples => mean 1/(2(1-2rho)). Holds to ~few % at N=20.
+        key = jax.random.PRNGKey(1)
+        sim = _mean(key, dists.exponential(), rho, k=2, n_seeds=3)
+        expect = float(analytic.mm1_replicated_mean(rho, 2))
+        assert sim == pytest.approx(expect, rel=0.08)
+
+
+class TestTheorem1:
+    def test_exponential_threshold_is_one_third(self):
+        key = jax.random.PRNGKey(2)
+        est = threshold.threshold_bisect(key, dists.exponential(), CFG,
+                                         iters=9, n_seeds=3)
+        assert est == pytest.approx(analytic.THRESHOLD_EXPONENTIAL, abs=0.025)
+
+    def test_replication_helps_below_threshold(self):
+        key = jax.random.PRNGKey(3)
+        g = queueing.replication_gain(key, dists.exponential(),
+                                      jnp.asarray([0.15]), CFG, n_seeds=2)
+        assert float(g[0]) > 0.0
+
+    def test_replication_hurts_above_threshold(self):
+        key = jax.random.PRNGKey(4)
+        g = queueing.replication_gain(key, dists.exponential(),
+                                      jnp.asarray([0.45]), CFG, n_seeds=2)
+        assert float(g[0]) < 0.0
+
+
+class TestConjecture1:
+    def test_deterministic_threshold_near_paper_value(self):
+        # Paper: ~25.82% for deterministic service under Poisson arrivals.
+        key = jax.random.PRNGKey(5)
+        est = threshold.threshold_bisect(key, dists.deterministic(), CFG,
+                                         iters=9, n_seeds=3)
+        assert est == pytest.approx(analytic.THRESHOLD_DETERMINISTIC, abs=0.02)
+
+    @pytest.mark.parametrize("dist", [
+        dists.exponential(),
+        dists.pareto(2.5),
+        dists.weibull(0.7),
+        dists.two_point(0.5),
+    ])
+    def test_threshold_in_paper_band(self, dist):
+        # Conjecture 1 + trivial upper bound: threshold in (~0.25, 0.5).
+        key = jax.random.PRNGKey(6)
+        est = threshold.threshold_grid(key, dist, CFG, n_seeds=2)
+        assert 0.24 <= est <= 0.5
+
+
+class TestVarianceMonotonicity:
+    def test_heavier_tail_raises_threshold(self):
+        # Fig 2(c): the two-point family's threshold grows with variance.
+        key = jax.random.PRNGKey(7)
+        lo = threshold.threshold_grid(key, dists.two_point(0.1), CFG)
+        hi = threshold.threshold_grid(key, dists.two_point(0.9), CFG)
+        assert hi > lo
+
+    def test_tail_improvement_exceeds_mean_improvement(self):
+        # "Replication improves the mean, but provides the greatest benefit
+        # in the tail" (Fig 1b).
+        key = jax.random.PRNGKey(8)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=120_000)
+        r1 = queueing.simulate_grid(key, dists.pareto(2.1),
+                                    jnp.asarray([0.2]), cfg, 1)
+        r2 = queueing.simulate_grid(key, dists.pareto(2.1),
+                                    jnp.asarray([0.2]), cfg, 2)
+        s1 = queueing.summarize(r1, cfg)
+        s2 = queueing.summarize(r2, cfg)
+        mean_ratio = float(s1["mean"][0] / s2["mean"][0])
+        tail_ratio = float(s1["p99.9"][0] / s2["p99.9"][0])
+        assert mean_ratio > 1.0
+        assert tail_ratio > mean_ratio
+
+
+class TestClientOverhead:
+    def test_overhead_lowers_threshold(self):
+        key = jax.random.PRNGKey(9)
+        base = queueing.SimConfig(n_servers=20, n_arrivals=60_000)
+        pen = queueing.SimConfig(n_servers=20, n_arrivals=60_000,
+                                 client_overhead=0.25)
+        t0 = threshold.threshold_grid(key, dists.exponential(), base)
+        t1 = threshold.threshold_grid(key, dists.exponential(), pen)
+        assert t1 < t0
+        # closed form for exponential: 1/(2(1-2r)) + c = 1/(1-r)
+        expect = analytic.exponential_threshold(k=2, overhead=0.25)
+        assert t1 == pytest.approx(expect, abs=0.03)
+
+    def test_overhead_equal_to_mean_service_never_helps(self):
+        # Fig 4 boundary: overhead = mean service time => no mean benefit at
+        # any load, for any distribution.
+        key = jax.random.PRNGKey(10)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=60_000,
+                                 client_overhead=1.0)
+        g = queueing.replication_gain(key, dists.pareto(2.1),
+                                      jnp.asarray([0.05, 0.2, 0.4]), cfg)
+        assert bool(jnp.all(g < 0.0))
+
+
+class TestSimulatorInvariants:
+    def test_response_at_least_service_min(self):
+        key = jax.random.PRNGKey(11)
+        cfg = queueing.SimConfig(n_servers=10, n_arrivals=5_000)
+        resp = queueing.simulate(key, dists.exponential(), jnp.float32(0.3),
+                                 cfg, k=2)
+        assert bool(jnp.all(resp > 0.0))
+
+    def test_crn_coupling_first_copy(self):
+        # With the same key, k=1 and k=2 share arrivals + the first copy's
+        # server/service draws. At near-zero load queueing interactions are
+        # rare, so k=2 responses are (almost) pathwise <= k=1 responses —
+        # a duplicate can only hurt a request via queueing behind OTHER
+        # requests' duplicates, which vanishes as load -> 0.
+        key = jax.random.PRNGKey(12)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=5_000)
+        r1 = queueing.simulate(key, dists.pareto(2.1), jnp.float32(0.001),
+                               cfg, k=1)
+        r2 = queueing.simulate(key, dists.pareto(2.1), jnp.float32(0.001),
+                               cfg, k=2)
+        violations = float(jnp.mean(r2 > r1 + 1e-5))
+        assert violations < 0.01
+        assert float(jnp.mean(r2)) < float(jnp.mean(r1))
+
+    def test_inputs_coupled_across_k(self):
+        key = jax.random.PRNGKey(13)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=100)
+        d = dists.exponential()
+        g1, s1, v1 = queueing._sample_inputs(key, d, cfg, 1)
+        g2, s2, v2 = queueing._sample_inputs(key, d, cfg, 3)
+        assert bool(jnp.all(g1 == g2))
+        assert bool(jnp.all(s1[:, 0] == s2[:, 0]))
+        assert bool(jnp.all(v1[:, 0] == v2[:, 0]))
+        # copies are distinct servers
+        assert bool(jnp.all(s2[:, 0] != s2[:, 1]))
+        assert bool(jnp.all(s2[:, 1] != s2[:, 2]))
+        assert bool(jnp.all(s2[:, 0] != s2[:, 2]))
