@@ -1,6 +1,10 @@
 """Figures 5-11: the disk-backed database study, reproduced by running the
 paper-calibrated storage service-time models through the §2.1 queueing
-simulator. One variant per paper figure."""
+simulator. One variant per paper figure.
+
+Per variant: one fused ``queueing.sweep`` (k=1 and k=2 together, streaming
+percentiles) plus one fused threshold sweep. The client overhead is a
+traced scalar, so all seven variants share engine compilations."""
 from __future__ import annotations
 
 import jax
@@ -31,20 +35,17 @@ def run() -> list[Row]:
                                  client_overhead=ovh)
 
         def work(dist=dist, cfg=cfg):
-            r1 = queueing.simulate_grid(key, dist, LOADS, cfg, 1)
-            r2 = queueing.simulate_grid(key, dist, LOADS, cfg, 2)
-            s1 = queueing.summarize(r1, cfg)
-            s2 = queueing.summarize(r2, cfg)
+            s = queueing.sweep(key, dist, LOADS, cfg, ks=(1, 2), n_seeds=1)
             t = threshold.threshold_grid(key, dist, cfg, n_seeds=1)
-            return s1, s2, t
+            return s, t
 
-        (s1, s2, t), us = timed(work)
-        m1 = float(s1["mean"][0]) * ms_scale
-        m2 = float(s2["mean"][0]) * ms_scale
-        p99_1 = float(s1["p99"][1]) * ms_scale
-        p99_2 = float(s2["p99"][1]) * ms_scale
-        p999_1 = float(s1["p99.9"][0]) * ms_scale
-        p999_2 = float(s2["p99.9"][0]) * ms_scale
+        (s, t), us = timed(work)
+        m1 = float(s["mean"][0, 0, 0]) * ms_scale
+        m2 = float(s["mean"][0, 0, 1]) * ms_scale
+        p99_1 = float(s["p99"][0, 1, 0]) * ms_scale
+        p99_2 = float(s["p99"][0, 1, 1]) * ms_scale
+        p999_1 = float(s["p99.9"][0, 0, 0]) * ms_scale
+        p999_2 = float(s["p99.9"][0, 0, 1]) * ms_scale
         rows.append((f"fig5-11/{name}", us,
                      f"threshold={t:.2f};mean@0.1={m1:.2f}->{m2:.2f}ms;"
                      f"p99@0.2={p99_1:.1f}->{p99_2:.1f}ms;"

@@ -1,10 +1,14 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. ``--only fig14`` runs one module.
+``--json PATH`` additionally writes the rows as a JSON list (one object per
+row: name / us_per_call / derived) so the perf trajectory is
+machine-readable across PRs (e.g. ``--json BENCH_queueing.json``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -13,17 +17,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on module names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to PATH as a JSON list")
     args = ap.parse_args()
 
     from benchmarks import (fig1_queueing, fig2_threshold, fig3_random,
                             fig4_overhead, fig5_diskdb, fig12_memcached,
                             fig14_network, fig15_dns, roofline,
-                            serving_hedge, tab_tcp)
-    modules = [fig1_queueing, fig2_threshold, fig3_random, fig4_overhead,
-               fig5_diskdb, fig12_memcached, fig14_network, fig15_dns,
-               tab_tcp, serving_hedge, roofline]
+                            serving_hedge, sweep_engine, tab_tcp)
+    modules = [sweep_engine, fig1_queueing, fig2_threshold, fig3_random,
+               fig4_overhead, fig5_diskdb, fig12_memcached, fig14_network,
+               fig15_dns, tab_tcp, serving_hedge, roofline]
 
     print("name,us_per_call,derived")
+    collected: list[dict[str, object]] = []
     t0 = time.time()
     for mod in modules:
         name = mod.__name__.split(".")[-1]
@@ -32,11 +39,21 @@ def main() -> None:
         try:
             for row_name, us, derived in mod.run():
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
+                collected.append({"name": row_name,
+                                  "us_per_call": round(us, 1),
+                                  "derived": derived})
         except Exception as e:  # keep the harness going
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            collected.append({"name": f"{name}/ERROR", "us_per_call": 0,
+                              "derived": f"{type(e).__name__}:{e}"})
             import traceback
             traceback.print_exc(file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(collected, f, indent=1)
+        print(f"# wrote {len(collected)} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

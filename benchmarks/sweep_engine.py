@@ -1,0 +1,88 @@
+"""Sweep-engine speedup: pre-refactor sequential path vs fused engine on the
+Figure 2 threshold sweep (15 service-time families).
+
+The "old" path is a faithful reimplementation of the pre-refactor code: one
+jitted ``lax.scan`` per (seed, k) from Python — ``2 * n_seeds`` full passes
+per distribution — with the distribution a static jit argument, so every
+family recompiles both k-variants. The fused path estimates ALL 15
+thresholds from one distribution-agnostic engine call
+(``threshold.threshold_grid_batch``).
+
+Emits per-family rows plus a ``sweep_engine/total`` row whose derived field
+carries the end-to-end speedup (target: >= 5x) and the max |threshold
+delta| between the two paths."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core import distributions as dists
+from repro.core import queueing, threshold
+
+CFG = queueing.SimConfig(n_servers=20, n_arrivals=50_000)
+
+FAMILY_PARAMS = {
+    "pareto": (6.0, 3.0, 2.5, 2.2, 2.05),
+    "weibull": (2.0, 1.0, 0.7, 0.5, 0.4),
+    "two_point": (0.1, 0.5, 0.8, 0.95, 0.99),
+}
+
+
+def _entries():
+    return [(fam, x, dists.FAMILIES[fam](x))
+            for fam, params in FAMILY_PARAMS.items() for x in params]
+
+
+def _threshold_grid_reference(key, dist, cfg, *, k=2, rhos=None, n_seeds=2):
+    """The pre-refactor path, verbatim: python loops of ``simulate_grid``
+    scans over seeds x {1, k}, then crossing interpolation."""
+    if rhos is None:
+        rhos = jnp.linspace(0.05, 0.495, 24)
+    keys = jax.random.split(key, n_seeds)
+    gains = []
+    for s in range(n_seeds):
+        r1 = queueing.simulate_grid(keys[s], dist, rhos, cfg, 1)
+        rk = queueing.simulate_grid(keys[s], dist, rhos, cfg, k)
+        gains.append(jnp.mean(queueing._warm(r1, cfg), -1)
+                     - jnp.mean(queueing._warm(rk, cfg), -1))
+    g = jnp.mean(jnp.stack(gains), axis=0)
+    return threshold._interp_crossing(rhos, g)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(1)
+    entries = _entries()
+
+    # --- old path: one scan per (family, seed, k), dist static in jit ----
+    old_us = []
+    t0 = time.perf_counter()
+    old_ths = []
+    for fam, x, dist in entries:
+        t1 = time.perf_counter()
+        old_ths.append(_threshold_grid_reference(key, dist, CFG, n_seeds=2))
+        old_us.append((time.perf_counter() - t1) * 1e6)
+    old_total = time.perf_counter() - t0
+
+    # --- fused path: every family in ONE engine call ---------------------
+    t0 = time.perf_counter()
+    new_ths = threshold.threshold_grid_batch(
+        key, [dist for _, _, dist in entries], CFG, n_seeds=2)
+    new_total = time.perf_counter() - t0
+    new_us = new_total * 1e6 / len(entries)
+
+    max_delta = 0.0
+    for (fam, x, _), t_old, t_new, us in zip(entries, old_ths, new_ths,
+                                             old_us):
+        max_delta = max(max_delta, abs(t_old - t_new))
+        rows.append((f"sweep_engine/{fam}/x={x:g}", us,
+                     f"old={t_old:.3f};fused={t_new:.3f};"
+                     f"speedup={us / new_us:.1f}x"))
+    speedup = old_total / new_total
+    rows.append(("sweep_engine/total", old_total * 1e6,
+                 f"old_s={old_total:.2f};fused_s={new_total:.2f};"
+                 f"speedup={speedup:.1f}x;max_threshold_delta={max_delta:.4f}"))
+    return rows

@@ -1,6 +1,8 @@
 """Explore the replication queueing model interactively from the CLI:
 pick a service-time family and sweep loads / replication factors.
 
+The whole (load x k) table comes from ONE fused ``queueing.sweep`` call.
+
 Run:  PYTHONPATH=src python examples/queueing_explorer.py \
           --family pareto --param 2.1 --k 1 2 3
 """
@@ -34,15 +36,17 @@ def main() -> None:
     key = jax.random.PRNGKey(0)
     loads = jnp.asarray(args.loads)
 
+    # one fused sweep over all (load, k) cells
+    s = queueing.sweep(key, dist, loads, cfg, ks=tuple(args.k), n_seeds=1)
+
     print(f"service = {dist.name}, N = {args.servers}")
     header = "load  " + "  ".join(f"k={k}: mean/p99" for k in args.k)
     print(header)
     for i, rho in enumerate(loads):
         cells = []
-        for k in args.k:
-            resp = queueing.simulate_grid(key, dist, loads, cfg, k)
-            s = queueing.summarize(resp, cfg)
-            cells.append(f"{float(s['mean'][i]):7.3f}/{float(s['p99'][i]):8.2f}")
+        for j, _ in enumerate(args.k):
+            cells.append(f"{float(s['mean'][0, i, j]):7.3f}/"
+                         f"{float(s['p99'][0, i, j]):8.2f}")
         print(f"{float(rho):.2f} " + "  ".join(cells))
 
     t = threshold.threshold_grid(key, dist, cfg, n_seeds=2)

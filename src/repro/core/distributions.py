@@ -8,10 +8,23 @@ worst case), Pareto / Weibull / two-point (Figure 2), random discrete
 
 All samplers are pure functions of a PRNG key and shape, suitable for use
 inside jit/vmap.
+
+jit-cache contract
+------------------
+``ServiceDist`` is a *static* argument of the jitted simulators in
+``repro.core.queueing``, so two distinct instances — even with identical
+parameters — trigger a full retrace/recompile. To make repeated configs hit
+the jit cache, every factory with hashable scalar parameters
+(``exponential``, ``deterministic``, ``pareto``, ``weibull``, ``two_point``,
+``scaled``) is memoized: ``pareto(2.1) is pareto(2.1)`` holds, and building
+the "same" distribution twice costs nothing. Factories taking arrays or PRNG
+keys (``discrete``, ``random_discrete``, ``mixture``) cannot be memoized —
+hold on to the returned object and reuse it across jitted calls.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -33,6 +46,7 @@ class ServiceDist:
         return f"ServiceDist({self.name})"
 
 
+@functools.lru_cache(maxsize=None)
 def exponential() -> ServiceDist:
     """Exp(1): the analytically tractable case of Theorem 1."""
 
@@ -42,6 +56,7 @@ def exponential() -> ServiceDist:
     return ServiceDist("exponential", sample, variance=1.0)
 
 
+@functools.lru_cache(maxsize=None)
 def deterministic() -> ServiceDist:
     """Unit point mass — the paper's conjectured worst case (threshold ~25.8%)."""
 
@@ -52,6 +67,7 @@ def deterministic() -> ServiceDist:
     return ServiceDist("deterministic", sample, variance=0.0)
 
 
+@functools.lru_cache(maxsize=None)
 def pareto(alpha: float) -> ServiceDist:
     """Unit-mean Pareto with tail index ``alpha`` (> 1).
 
@@ -73,6 +89,7 @@ def pareto(alpha: float) -> ServiceDist:
     return ServiceDist(f"pareto(a={alpha:g})", sample, variance=var)
 
 
+@functools.lru_cache(maxsize=None)
 def weibull(shape_k: float) -> ServiceDist:
     """Unit-mean Weibull with shape ``k`` (k < 1 => heavier than exponential)."""
     if shape_k <= 0:
@@ -92,6 +109,7 @@ def weibull(shape_k: float) -> ServiceDist:
     return ServiceDist(f"weibull(k={shape_k:g})", sample, variance=float(var))
 
 
+@functools.lru_cache(maxsize=None)
 def two_point(p: float) -> ServiceDist:
     """The paper's Fig 2(c) family: 0.5 w.p. p, (1 - 0.5 p)/(1 - p) w.p. 1-p.
 
@@ -178,6 +196,7 @@ def mixture(components: list[ServiceDist], weights: list[float],
     return ServiceDist(name, sample, mean=mixture_mean)
 
 
+@functools.lru_cache(maxsize=None)
 def scaled(dist: ServiceDist, scale: float) -> ServiceDist:
     """Scale a unit-mean distribution to mean ``scale`` (storage sims use
     real milliseconds)."""

@@ -216,21 +216,20 @@ def flow_completion_times(cfg: NetConfig, n_slots: int | None = None):
         rto_slots=cfg.rto_slots))
     flow, seq, start, prio, is_dup = meta.T
     n_flows = cfg.n_flows
-    fct = np.zeros(n_flows)
-    undelivered = np.zeros(n_flows, bool)
-    for f in range(n_flows):
-        rows = np.where(flow == f)[0]
-        per_seq: dict[int, int] = {}
-        for r in rows:
-            d = delivered[r]
-            if d < 0:
-                continue
-            s = seq[r]
-            per_seq[s] = min(per_seq.get(s, 1 << 30), int(d))
-        if len(per_seq) < sizes[f]:
-            undelivered[f] = True
-            fct[f] = n_slots
-        else:
-            fct[f] = max(per_seq.values()) - starts[f] + 1
+    # Vectorized min-over-copies / max-over-packets reduction (the naive
+    # version is an O(n_flows * n_packets) Python loop): scatter each
+    # delivered copy's slot into a dense (flow, seq) table with
+    # ``np.minimum.at`` (duplicates of a packet reduce to the earliest
+    # arrival), then reduce per flow.
+    big = np.int64(1) << 40
+    max_pkts = int(sizes.max())
+    best = np.full((n_flows, max_pkts), big)
+    ok = delivered >= 0
+    np.minimum.at(best, (flow[ok], seq[ok]), delivered[ok].astype(np.int64))
+    valid = np.arange(max_pkts)[None, :] < sizes[:, None]
+    undelivered = ((best == big) & valid).any(axis=1)
+    last = np.where(valid, best, -big).max(axis=1)
+    fct = np.where(undelivered, float(n_slots),
+                   last.astype(np.float64) - starts + 1.0)
     short = sizes <= 10
     return fct, sizes, short, undelivered

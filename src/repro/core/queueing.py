@@ -9,12 +9,50 @@ response time is the minimum over its copies' (queueing delay + service
 time). An optional fixed ``client_overhead`` is added to every request when
 k > 1 (paper Figure 4).
 
-The simulator is a single ``lax.scan`` over arrivals with the vector of
-per-server next-free times as carry, ``vmap``-able over a batch of loads /
-seeds. Common random numbers (CRN): the arrival process, the first copy's
-server choice, and the first copy's service time are identical for every
-``k`` under the same seed, which makes paired k=2 vs k=1 comparisons (and
-hence threshold estimation) low-variance.
+Common random numbers (CRN): the arrival process, the first copy's server
+choice, and the first copy's service time are identical for every ``k``
+under the same seed, which makes paired k=2 vs k=1 comparisons (and hence
+threshold estimation) low-variance.
+
+Fused sweep engine — design note
+--------------------------------
+
+Every paper figure sweeps the same simulator over a (seed, load, k) grid,
+and the pre-refactor code ran one sequential ``lax.scan`` per grid cell
+from Python (``replication_gain`` alone ran ``2 * n_seeds`` full passes).
+``sweep`` replaces those loops with ONE ``lax.scan`` over arrivals whose
+carry stacks the per-server next-free times for the whole grid:
+
+    free:  (S, B, K, N)   S seeds x B loads x K replication factors
+                          x N servers
+
+The scan step ``vmap``s a single-cell update (gather k server-free times,
+max with the arrival time, add service, scatter back, min-reduce) over the
+three grid axes. Randomness is sampled ONCE per seed at ``k_max = max(ks)``
+and every k-slice consumes a prefix of the same copy set / service draws,
+so the CRN coupling of the sequential path is preserved exactly: the k=1
+slice sees bit-identical inputs to the old ``simulate_grid(key, ..., k=1)``.
+
+The engine never materializes an ``(S, B, K, M)`` response array. Instead
+it folds each response into streaming statistics inside the scan:
+
+  * a Kahan-compensated post-warmup sum (=> exact-to-float32 means), and
+  * a log-spaced histogram sketch of ``n_bins`` buckets spanning
+    [HIST_LO, HIST_HI], from which percentiles are read as geometric bin
+    midpoints (relative error <= half a bin width, ~0.5% at the default
+    2048 bins over 8 decades).
+
+Memory is therefore O(S*B*K*(N + n_bins)) independent of the number of
+arrivals M, while the sequential path needed O(B*M) per call.
+
+Crucially the jitted engine core is distribution-agnostic: service times
+are sampled in a small per-distribution jit and passed in as arrays, so
+sweeping 15 service-time families (Figure 2) compiles the expensive scan
+exactly once instead of 2 * n_seeds times per family.
+
+``simulate`` / ``simulate_grid`` remain for callers that need raw
+per-arrival response times (tests, exact percentiles); they are thin
+wrappers over the same single-cell step function.
 """
 from __future__ import annotations
 
@@ -28,6 +66,13 @@ from repro.core.distributions import ServiceDist
 
 Array = jax.Array
 
+# Log-spaced histogram sketch bounds (unit-mean service times => responses
+# live well inside [1e-3, 1e5]; values outside clamp to the edge bins).
+HIST_LO = 1e-3
+HIST_HI = 1e5
+DEFAULT_BINS = 2048
+DEFAULT_PERCENTILES = (50.0, 90.0, 99.0, 99.9)
+
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
@@ -37,13 +82,11 @@ class SimConfig:
     client_overhead: float = 0.0  # latency penalty added to replicated requests
 
 
-def _sample_inputs(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int):
-    """Draw all randomness up front. Column 0 of servers/services is shared
-    by every k (CRN)."""
-    n, m = cfg.n_servers, cfg.n_arrivals
-    k_gap, k_srv0, k_srvx, k_svc = jax.random.split(key, 4)
-    # Unit-rate exponential gaps; scaled by the actual rate at sim time so the
-    # same key yields a coupled arrival process across loads.
+def _arrival_part(key: Array, n: int, m: int, k_max: int):
+    """Distribution-independent randomness: unit-rate exponential gaps
+    (scaled by the actual rate at sim time so the same key yields a coupled
+    arrival process across loads) and the per-request copy sets."""
+    k_gap, k_srv0, k_srvx, _ = jax.random.split(key, 4)
     unit_gaps = jax.random.exponential(k_gap, (m,))
     first = jax.random.randint(k_srv0, (m,), 0, n)
     if k_max > 1:
@@ -56,31 +99,54 @@ def _sample_inputs(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int):
         servers = jnp.concatenate([first[:, None], extra], axis=1)
     else:
         servers = first[:, None]
-    # Per-copy fold_in keys so copy j's service times are identical for every
-    # k_max (CRN: k=1 and k=2 share the first copy's service draw).
-    services = jnp.stack(
+    return unit_gaps, servers
+
+
+def _service_part(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int):
+    """Per-copy fold_in keys so copy j's service times are identical for
+    every k_max (CRN: k=1 and k=2 share the first copy's service draw)."""
+    m = cfg.n_arrivals
+    _, _, _, k_svc = jax.random.split(key, 4)
+    return jnp.stack(
         [dist.sample(jax.random.fold_in(k_svc, j), (m,)) for j in range(k_max)],
         axis=1)
+
+
+def _sample_inputs(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int):
+    """Draw all randomness up front. Column 0 of servers/services is shared
+    by every k (CRN)."""
+    unit_gaps, servers = _arrival_part(key, cfg.n_servers, cfg.n_arrivals,
+                                       k_max)
+    services = _service_part(key, dist, cfg, k_max)
     return unit_gaps, servers, services
+
+
+def _step_cell(free: Array, t: Array, srv: Array, svc: Array, mask: Array,
+               overhead: Array) -> tuple[Array, Array]:
+    """One arrival at one (seed, load, k) grid cell. free (N,), t scalar,
+    srv/svc/mask (k_max,) -> (new free, response)."""
+    start = jnp.maximum(free[srv], t)
+    finish = start + svc
+    # srv entries are distinct; masked copies rewrite their old value (no-op)
+    free = free.at[srv].set(jnp.where(mask, finish, free[srv]))
+    resp = jnp.min(jnp.where(mask, finish, jnp.inf)) - t + overhead
+    return free, resp
 
 
 def _scan_sim(arrivals: Array, servers: Array, services: Array, n_servers: int,
               overhead: float) -> Array:
     """Run the FIFO replication DES. arrivals (M,), servers (M,k), services
     (M,k) -> response times (M,)."""
+    k = servers.shape[1]
+    ovh = jnp.asarray(overhead if k > 1 else 0.0, jnp.float32)
+    mask = jnp.ones((k,), bool)
 
     def step(free: Array, inp):
         t, srv, svc = inp
-        start = jnp.maximum(free[srv], t)
-        finish = start + svc
-        free = free.at[srv].set(finish)  # srv entries are distinct
-        return free, jnp.min(finish) - t
+        return _step_cell(free, t, srv, svc, mask, ovh)
 
     free0 = jnp.zeros((n_servers,))
     _, resp = jax.lax.scan(step, free0, (arrivals, servers, services))
-    k = servers.shape[1]
-    if k > 1 and overhead != 0.0:
-        resp = resp + overhead
     return resp
 
 
@@ -114,7 +180,7 @@ def _warm(resp: Array, cfg: SimConfig) -> Array:
 
 
 def summarize(resp: Array, cfg: SimConfig,
-              percentiles=(50.0, 90.0, 99.0, 99.9)) -> dict[str, Array]:
+              percentiles=DEFAULT_PERCENTILES) -> dict[str, Array]:
     """Post-warmup mean + percentiles along the last axis."""
     r = _warm(resp, cfg)
     out = {"mean": jnp.mean(r, axis=-1)}
@@ -123,24 +189,200 @@ def summarize(resp: Array, cfg: SimConfig,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Fused sweep engine
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_servers", "n_arrivals", "k_max",
+                                   "n_seeds"))
+def _sample_sweep_arrivals(key: Array, n_servers: int, n_arrivals: int,
+                           k_max: int, n_seeds: int):
+    """(S,M) unit gaps + (S,M,k_max) copy sets. Distribution-independent and
+    keyed only on the shape-bearing config fields (NOT the whole SimConfig),
+    so its (one, comparatively expensive) compile is shared by every family
+    — and every client_overhead / warmup variant — a benchmark sweeps."""
+    keys = jax.random.split(key, n_seeds)
+    return jax.vmap(
+        lambda kk: _arrival_part(kk, n_servers, n_arrivals, k_max))(keys)
+
+
+def _sample_sweep_services(key: Array, dist: ServiceDist, cfg: SimConfig,
+                           k_max: int, n_seeds: int):
+    """(S,M,k_max) service draws. Deliberately NOT jitted: eager sampling
+    reuses jax's per-op caches across distributions, so sweeping 15 families
+    costs 15 x ~20ms instead of 15 x ~1s of per-family jit compiles (the
+    PRNG bits are identical either way)."""
+    keys = jax.random.split(key, n_seeds)
+    return jnp.stack([_service_part(keys[s], dist, cfg, k_max)
+                      for s in range(n_seeds)], axis=0)
+
+
+def _sample_sweep_inputs(key: Array, dist: ServiceDist, cfg: SimConfig,
+                         k_max: int, n_seeds: int):
+    """Per-seed randomness for the engine: (S,M) gaps, (S,M,k_max) servers /
+    services. Bit-identical to ``n_seeds`` sequential ``_sample_inputs``
+    calls on ``jax.random.split(key, n_seeds)``."""
+    unit_gaps, servers = _sample_sweep_arrivals(
+        key, cfg.n_servers, cfg.n_arrivals, k_max, n_seeds)
+    services = _sample_sweep_services(key, dist, cfg, k_max, n_seeds)
+    return unit_gaps, servers, services
+
+
+@partial(jax.jit, static_argnames=("n_servers", "n_bins"))
+def _sweep_engine(unit_gaps: Array, servers: Array, services: Array,
+                  rates: Array, k_mask: Array, ovh_vec: Array,
+                  warmup_start: Array, qs: Array, *, n_servers: int,
+                  n_bins: int):
+    """Distribution-agnostic fused core. One scan over M arrivals with the
+    stacked (S,B,K,N) server-free carry; streaming post-warmup mean (Kahan)
+    and log-histogram quantile sketch. Returns (mean (S,B,K),
+    quantiles (Q,S,B,K))."""
+    S, M = unit_gaps.shape
+    B = rates.shape[0]
+    K = k_mask.shape[0]
+    need_hist = qs.shape[0] > 0
+
+    cum = jnp.cumsum(unit_gaps, axis=1)  # (S, M) unit-rate arrival times
+
+    # vmap the single-cell step over k, then loads, then seeds.
+    cell_k = jax.vmap(_step_cell, in_axes=(0, None, None, None, 0, 0))
+    cell_bk = jax.vmap(cell_k, in_axes=(0, 0, None, None, None, None))
+    cell_sbk = jax.vmap(cell_bk, in_axes=(0, 0, 0, 0, None, None))
+
+    log_lo = jnp.log(jnp.float32(HIST_LO))
+    scale = (n_bins - 1) / (jnp.log(jnp.float32(HIST_HI)) - log_lo)
+    cells = S * B * K
+    cell_base = jnp.arange(cells, dtype=jnp.int32) * n_bins
+
+    def step(carry, inp):
+        free, ssum, comp, hist = carry
+        i, c, srv, svc = inp
+        t = c[:, None] / rates[None, :]                       # (S, B)
+        free, resp = cell_sbk(free, t, srv, svc, k_mask, ovh_vec)
+        warm = (i >= warmup_start).astype(resp.dtype)
+        # Kahan-compensated sum: sequential f32 accumulation over ~1e5
+        # terms would otherwise cost ~1e-4 relative error on the mean,
+        # which is the signal threshold bisection keys on.
+        y = resp * warm - comp
+        tot = ssum + y
+        comp = (tot - ssum) - y
+        ssum = tot
+        if need_hist:
+            idx = ((jnp.log(resp) - log_lo) * scale).astype(jnp.int32)
+            idx = jnp.clip(idx, 0, n_bins - 1)
+            flat = cell_base + idx.reshape(-1)
+            hist = hist.at[flat].add(warm)
+        return (free, ssum, comp, hist), None
+
+    zeros = jnp.zeros((S, B, K))
+    hist0 = jnp.zeros((cells * n_bins,) if need_hist else (0,))
+    carry0 = (jnp.zeros((S, B, K, n_servers)), zeros, zeros, hist0)
+    xs = (jnp.arange(M), cum.T, jnp.moveaxis(servers, 1, 0),
+          jnp.moveaxis(services, 1, 0))
+    (free, ssum, comp, hist), _ = jax.lax.scan(step, carry0, xs)
+
+    count = (M - warmup_start).astype(ssum.dtype)
+    mean = ssum / count
+    if not need_hist:
+        return mean, jnp.zeros((0, S, B, K))
+    hist = hist.reshape(S, B, K, n_bins)
+    cdf = jnp.cumsum(hist, axis=-1)                           # (S,B,K,n_bins)
+    targets = qs[:, None, None, None] / 100.0 * count         # (Q,1,1,1)
+    # first bin where the cdf reaches the target mass
+    bin_idx = jnp.argmax(cdf[None] >= targets[..., None], axis=-1)
+    # geometric midpoint of the selected bin
+    quant = jnp.exp(log_lo + (bin_idx + 0.5) / scale)
+    return mean, quant
+
+
+def sweep(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig, *,
+          ks: tuple[int, ...] = (1, 2), n_seeds: int = 2,
+          percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
+          n_bins: int = DEFAULT_BINS) -> dict[str, Array]:
+    """Fused multi-(k, seed, load) sweep. Returns post-warmup summaries,
+    each of shape ``(n_seeds, len(rhos), len(ks))``:
+
+      ``mean``          streaming mean response
+      ``p<q>``          histogram-sketch percentile per entry of
+                        ``percentiles`` (pass ``()`` to skip the sketch
+                        entirely — e.g. threshold estimation needs means
+                        only)
+      ``count``         post-warmup arrivals per cell (scalar)
+
+    CRN layout: seed s, k-slice j of this sweep sees bit-identical inputs
+    to ``simulate_grid(split(key, n_seeds)[s], dist, rhos, cfg, ks[j])``.
+    """
+    ks = tuple(int(k) for k in ks)
+    k_max = max(ks)
+    rhos = jnp.asarray(rhos)
+    unit_gaps, servers, services = _sample_sweep_inputs(
+        key, dist, cfg, k_max, n_seeds)
+    return _sweep_summaries(unit_gaps, servers, services, rhos, cfg,
+                            ks=ks, percentiles=tuple(percentiles),
+                            n_bins=n_bins)
+
+
+def _sweep_summaries(unit_gaps: Array, servers: Array, services: Array,
+                     rhos: Array, cfg: SimConfig, *, ks: tuple[int, ...],
+                     percentiles: tuple[float, ...],
+                     n_bins: int) -> dict[str, Array]:
+    """Run the engine on pre-sampled inputs (see ``sweep`` / ``sweep_dists``)."""
+    k_max = max(ks)
+    k_mask = jnp.asarray([[j < k for j in range(k_max)] for k in ks])
+    ovh_vec = jnp.asarray(
+        [cfg.client_overhead if k > 1 else 0.0 for k in ks], jnp.float32)
+    warmup_start = jnp.asarray(int(cfg.n_arrivals * cfg.warmup_frac))
+    qs = jnp.asarray(percentiles, jnp.float32)
+    mean, quant = _sweep_engine(
+        unit_gaps, servers, services, cfg.n_servers * rhos, k_mask, ovh_vec,
+        warmup_start, qs, n_servers=cfg.n_servers, n_bins=n_bins)
+    out = {"mean": mean,
+           "count": cfg.n_arrivals - int(cfg.n_arrivals * cfg.warmup_frac)}
+    for qi, p in enumerate(percentiles):
+        out[f"p{p:g}"] = quant[qi]
+    return out
+
+
+def sweep_dists(key: Array, dist_list, rhos: Array, cfg: SimConfig, *,
+                ks: tuple[int, ...] = (1, 2), n_seeds: int = 2,
+                percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
+                n_bins: int = DEFAULT_BINS) -> dict[str, Array]:
+    """Sweep MANY service-time distributions in one engine call by stacking
+    them along the seed axis. Summaries come back with a leading dist axis:
+    ``(len(dist_list), n_seeds, len(rhos), len(ks))``. Every distribution
+    sees the same per-seed keys (paired comparisons across dists)."""
+    ks = tuple(int(k) for k in ks)
+    k_max = max(ks)
+    rhos = jnp.asarray(rhos)
+    # every distribution sees the same key, hence the same arrival process
+    # and copy sets (CRN across dists): sample them once and tile.
+    gaps1, servers1 = _sample_sweep_arrivals(
+        key, cfg.n_servers, cfg.n_arrivals, k_max, n_seeds)
+    d = len(dist_list)
+    unit_gaps = jnp.tile(gaps1, (d, 1))
+    servers = jnp.tile(servers1, (d, 1, 1))
+    services = jnp.concatenate(
+        [_sample_sweep_services(key, dd, cfg, k_max, n_seeds)
+         for dd in dist_list], axis=0)
+    out = _sweep_summaries(unit_gaps, servers, services, rhos, cfg, ks=ks,
+                           percentiles=tuple(percentiles), n_bins=n_bins)
+    return {k: (v.reshape((d, n_seeds) + v.shape[1:])
+                if isinstance(v, jax.Array) else v)
+            for k, v in out.items()}
+
+
 def mean_response(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig,
                   k: int, n_seeds: int = 1) -> Array:
     """Post-warmup mean response (B,) averaged over ``n_seeds`` seeds."""
-    keys = jax.random.split(key, n_seeds)
-    means = []
-    for s in range(n_seeds):
-        resp = simulate_grid(keys[s], dist, rhos, cfg, k)
-        means.append(jnp.mean(_warm(resp, cfg), axis=-1))
-    return jnp.mean(jnp.stack(means), axis=0)
+    out = sweep(key, dist, rhos, cfg, ks=(k,), n_seeds=n_seeds,
+                percentiles=())
+    return jnp.mean(out["mean"][:, :, 0], axis=0)
 
 
 def replication_gain(key: Array, dist: ServiceDist, rhos: Array,
                      cfg: SimConfig, k: int = 2, n_seeds: int = 2) -> Array:
     """mean_k1(rho) - mean_k(rho), CRN-paired per seed. Positive = k helps."""
-    keys = jax.random.split(key, n_seeds)
-    gains = []
-    for s in range(n_seeds):
-        r1 = simulate_grid(keys[s], dist, rhos, cfg, 1)
-        rk = simulate_grid(keys[s], dist, rhos, cfg, k)
-        gains.append(jnp.mean(_warm(r1, cfg), -1) - jnp.mean(_warm(rk, cfg), -1))
-    return jnp.mean(jnp.stack(gains), axis=0)
+    out = sweep(key, dist, rhos, cfg, ks=(1, k), n_seeds=n_seeds,
+                percentiles=())
+    m = out["mean"]  # (S, B, 2)
+    return jnp.mean(m[:, :, 0] - m[:, :, 1], axis=0)

@@ -5,11 +5,19 @@ helps mean response time". The paper's results: 1/3 for exponential service
 (Theorem 1), ~25.82% for deterministic service (conjectured global worst
 case), approaching 50% for sufficiently heavy-tailed service.
 
-Two estimators:
+Three estimators, all driven by the fused sweep engine in
+``repro.core.queueing`` (one jitted scan per evaluation, batched over
+seeds x loads x k):
+
   * ``threshold_bisect`` — bisection on the sign of the CRN-paired gain
-    mean_k1(rho) - mean_k2(rho). Precise; used by tests.
-  * ``threshold_grid``  — one coupled grid sweep + crossing interpolation.
-    Cheap; used by the Figure 2/3 benchmarks which need dozens of thresholds.
+    mean_k1(rho) - mean_k2(rho). Both bracket probes ride in a single
+    batched sweep call; each midpoint is one fused sweep. Precise; used by
+    tests.
+  * ``threshold_grid``  — ONE fused sweep over the whole load grid +
+    crossing interpolation.
+  * ``threshold_grid_batch`` — many distributions in ONE engine call
+    (stacked along the seed axis); used by the Figure 2/3 benchmarks which
+    need dozens of thresholds.
 """
 from __future__ import annotations
 
@@ -17,9 +25,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distributions import ServiceDist
-from repro.core.queueing import SimConfig, replication_gain
+from repro.core.queueing import SimConfig, replication_gain, sweep, sweep_dists
 
 Array = jax.Array
+
+
+def _paired_gain(mean: Array) -> Array:
+    """(S, B, 2) sweep means -> (B,) seed-averaged CRN-paired gain."""
+    return jnp.mean(mean[:, :, 0] - mean[:, :, 1], axis=0)
 
 
 def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
@@ -31,33 +44,29 @@ def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
     paper studies). Returns the estimated crossing point; if replication
     helps on the whole interval, returns ``hi`` (threshold >= hi).
     """
-    def gain_at(rho: float, skey: Array) -> float:
-        g = replication_gain(skey, dist, jnp.asarray([rho]), cfg, k=k,
-                             n_seeds=n_seeds)
-        return float(g[0])
-
-    keys = jax.random.split(key, iters + 2)
-    if gain_at(hi, keys[-1]) > 0.0:
+    keys = jax.random.split(key, iters + 1)
+    # both bracket probes in one batched (seeds x {lo,hi} x {1,k}) sweep
+    bracket = sweep(keys[-1], dist, jnp.asarray([lo, hi]), cfg, ks=(1, k),
+                    n_seeds=n_seeds, percentiles=())
+    g_lo, g_hi = (float(g) for g in _paired_gain(bracket["mean"]))
+    if g_hi > 0.0:
         return hi
-    if gain_at(lo, keys[-2]) < 0.0:
+    if g_lo < 0.0:
         return lo
     a, b = lo, hi
     for i in range(iters):
         mid = 0.5 * (a + b)
-        if gain_at(mid, keys[i]) > 0.0:
+        g = replication_gain(keys[i], dist, jnp.asarray([mid]), cfg, k=k,
+                             n_seeds=n_seeds)
+        if float(g[0]) > 0.0:
             a = mid
         else:
             b = mid
     return 0.5 * (a + b)
 
 
-def threshold_grid(key: Array, dist: ServiceDist, cfg: SimConfig, *,
-                   k: int = 2, rhos: Array | None = None,
-                   n_seeds: int = 2) -> float:
-    """Grid sweep + linear interpolation of the first sign change."""
-    if rhos is None:
-        rhos = jnp.linspace(0.05, 0.495, 24)
-    g = replication_gain(key, dist, rhos, cfg, k=k, n_seeds=n_seeds)
+def _interp_crossing(rhos: Array, g: Array) -> float:
+    """Linear interpolation of the first sign change of g(rho)."""
     g = jnp.asarray(g)
     neg = jnp.where(g < 0.0)[0]
     if neg.size == 0:
@@ -69,3 +78,32 @@ def threshold_grid(key: Array, dist: ServiceDist, cfg: SimConfig, *,
     x0, x1 = float(rhos[i - 1]), float(rhos[i])
     y0, y1 = float(g[i - 1]), float(g[i])
     return x0 + (x1 - x0) * y0 / (y0 - y1)
+
+
+def _default_rhos() -> Array:
+    return jnp.linspace(0.05, 0.495, 24)
+
+
+def threshold_grid(key: Array, dist: ServiceDist, cfg: SimConfig, *,
+                   k: int = 2, rhos: Array | None = None,
+                   n_seeds: int = 2) -> float:
+    """ONE fused sweep over the load grid + crossing interpolation."""
+    if rhos is None:
+        rhos = _default_rhos()
+    g = replication_gain(key, dist, rhos, cfg, k=k, n_seeds=n_seeds)
+    return _interp_crossing(rhos, g)
+
+
+def threshold_grid_batch(key: Array, dist_list, cfg: SimConfig, *,
+                         k: int = 2, rhos: Array | None = None,
+                         n_seeds: int = 2) -> list[float]:
+    """Thresholds for MANY distributions from a single fused engine call
+    (distributions stack along the engine's seed axis, so e.g. all 15
+    Figure 2 families run in one scan)."""
+    if rhos is None:
+        rhos = _default_rhos()
+    out = sweep_dists(key, dist_list, rhos, cfg, ks=(1, k), n_seeds=n_seeds,
+                      percentiles=())
+    m = out["mean"]  # (D, S, B, 2)
+    g = jnp.mean(m[:, :, :, 0] - m[:, :, :, 1], axis=1)  # (D, B)
+    return [_interp_crossing(rhos, g[d]) for d in range(len(dist_list))]

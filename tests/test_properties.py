@@ -2,8 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import analytic, distributions as dists, queueing
 from repro.core.hedging import HedgePolicy

@@ -1,0 +1,133 @@
+"""Fused sweep-engine tests: CRN coupling, equivalence with the sequential
+``simulate_grid`` path, batched-distribution sweeps, and the jit-cache
+memoization contract of the distribution factories."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import distributions as dists, queueing, threshold
+
+CFG = queueing.SimConfig(n_servers=10, n_arrivals=10_000)
+RHOS = jnp.asarray([0.1, 0.3])
+
+
+def _reference_summaries(key, dist, rhos, cfg, ks, n_seeds):
+    """Pre-refactor path: one simulate_grid scan per (seed, k)."""
+    keys = jax.random.split(key, n_seeds)
+    mean = jnp.zeros((n_seeds, len(rhos), len(ks)))
+    p99 = jnp.zeros_like(mean)
+    for s in range(n_seeds):
+        for j, k in enumerate(ks):
+            r = queueing._warm(
+                queueing.simulate_grid(keys[s], dist, rhos, cfg, k), cfg)
+            mean = mean.at[s, :, j].set(jnp.mean(r, axis=-1))
+            p99 = p99.at[s, :, j].set(jnp.percentile(r, 99.0, axis=-1))
+    return mean, p99
+
+
+class TestSweepEquivalence:
+    def test_means_match_simulate_grid_path(self):
+        key = jax.random.PRNGKey(0)
+        out = queueing.sweep(key, dists.exponential(), RHOS, CFG, ks=(1, 2),
+                             n_seeds=2)
+        ref_mean, ref_p99 = _reference_summaries(
+            key, dists.exponential(), RHOS, CFG, (1, 2), 2)
+        # identical sample paths => float-tolerance agreement on the mean
+        assert jnp.allclose(out["mean"], ref_mean, rtol=1e-4)
+        # histogram-sketch percentiles: within half a log-bin (~0.5%)
+        assert jnp.allclose(out["p99"], ref_p99, rtol=0.02)
+
+    def test_replication_gain_matches_reference(self):
+        key = jax.random.PRNGKey(1)
+        g = queueing.replication_gain(key, dists.pareto(2.5), RHOS, CFG,
+                                      n_seeds=2)
+        ref_mean, _ = _reference_summaries(
+            key, dists.pareto(2.5), RHOS, CFG, (1, 2), 2)
+        ref_g = jnp.mean(ref_mean[:, :, 0] - ref_mean[:, :, 1], axis=0)
+        assert jnp.allclose(g, ref_g, atol=1e-3)
+
+    def test_threshold_grid_matches_reference(self):
+        key = jax.random.PRNGKey(2)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=30_000)
+        rhos = jnp.linspace(0.1, 0.45, 8)
+        t_fused = threshold.threshold_grid(key, dists.exponential(), cfg,
+                                           rhos=rhos, n_seeds=2)
+        keys = jax.random.split(key, 2)
+        gains = []
+        for s in range(2):
+            r1 = queueing.simulate_grid(keys[s], dists.exponential(), rhos,
+                                        cfg, 1)
+            r2 = queueing.simulate_grid(keys[s], dists.exponential(), rhos,
+                                        cfg, 2)
+            gains.append(jnp.mean(queueing._warm(r1, cfg), -1)
+                         - jnp.mean(queueing._warm(r2, cfg), -1))
+        t_ref = threshold._interp_crossing(rhos,
+                                           jnp.mean(jnp.stack(gains), 0))
+        assert t_fused == pytest.approx(t_ref, abs=0.01)
+
+    def test_sweep_dists_stacks_cleanly(self):
+        key = jax.random.PRNGKey(3)
+        ds = [dists.exponential(), dists.two_point(0.9)]
+        batched = queueing.sweep_dists(key, ds, RHOS, CFG, ks=(1, 2),
+                                       n_seeds=2, percentiles=())
+        assert batched["mean"].shape == (2, 2, 2, 2)
+        for d_idx, d in enumerate(ds):
+            single = queueing.sweep(key, d, RHOS, CFG, ks=(1, 2), n_seeds=2,
+                                    percentiles=())
+            assert jnp.allclose(batched["mean"][d_idx], single["mean"],
+                                rtol=1e-5)
+
+
+class TestSweepCRN:
+    def test_k_slices_share_first_copy(self):
+        # the k=1 slice and the k=2 slice of one sweep consume the same
+        # first-copy server choice and service draw (CRN): at near-zero load
+        # the k=2 mean can only be lower.
+        key = jax.random.PRNGKey(4)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=5_000)
+        out = queueing.sweep(key, dists.pareto(2.1), jnp.asarray([0.001]),
+                             cfg, ks=(1, 2), n_seeds=1, percentiles=())
+        m1, m2 = float(out["mean"][0, 0, 0]), float(out["mean"][0, 0, 1])
+        assert m2 <= m1
+
+    def test_sampled_inputs_prefix_property(self):
+        # k=1 and k=2 share the first copy's server choice + service draw
+        # under one key, for every seed of the batched sampler.
+        key = jax.random.PRNGKey(5)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=200)
+        d = dists.exponential()
+        g1, s1, v1 = queueing._sample_sweep_inputs(key, d, cfg, 1, 3)
+        g2, s2, v2 = queueing._sample_sweep_inputs(key, d, cfg, 2, 3)
+        assert jnp.array_equal(g1, g2)
+        assert jnp.array_equal(s1[:, :, 0], s2[:, :, 0])
+        assert jnp.array_equal(v1[:, :, 0], v2[:, :, 0])
+        # and the batched sampler matches the sequential per-seed sampler
+        keys = jax.random.split(key, 3)
+        for s in range(3):
+            g_ref, s_ref, v_ref = queueing._sample_inputs(keys[s], d, cfg, 2)
+            assert jnp.array_equal(g2[s], g_ref)
+            assert jnp.array_equal(s2[s], s_ref)
+            assert jnp.array_equal(v2[s], v_ref)
+
+
+class TestFactoryMemoization:
+    def test_scalar_factories_are_memoized(self):
+        assert dists.pareto(2.1) is dists.pareto(2.1)
+        assert dists.weibull(0.7) is dists.weibull(0.7)
+        assert dists.two_point(0.5) is dists.two_point(0.5)
+        assert dists.exponential() is dists.exponential()
+        assert dists.deterministic() is dists.deterministic()
+        assert dists.scaled(dists.exponential(), 2.0) is dists.scaled(
+            dists.exponential(), 2.0)
+
+    def test_distinct_params_distinct_objects(self):
+        assert dists.pareto(2.1) is not dists.pareto(2.2)
+
+    def test_memoized_dist_hits_jit_cache(self):
+        cfg = queueing.SimConfig(n_servers=5, n_arrivals=500)
+        key = jax.random.PRNGKey(6)
+        queueing.simulate(key, dists.pareto(3.3), jnp.float32(0.2), cfg, k=1)
+        n0 = queueing.simulate._cache_size()
+        # rebuilding the "same" distribution must not retrace
+        queueing.simulate(key, dists.pareto(3.3), jnp.float32(0.2), cfg, k=1)
+        assert queueing.simulate._cache_size() == n0
