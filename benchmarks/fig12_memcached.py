@@ -3,7 +3,8 @@ replication a net loss beyond ~10% load; the stub measurement bounds the
 overhead at ~9% of mean service.
 
 The gain curve comes from one fused ``queueing.sweep`` over
-(seeds x loads x {k=1, k=2})."""
+(seeds x loads x {k=1, k=2}); pass ``chunk_size`` to stream arrivals
+through the chunked engine (None preserves the pre-sampled behavior)."""
 from __future__ import annotations
 
 import jax
@@ -13,16 +14,19 @@ from benchmarks.common import Row, timed
 from repro.core import queueing, storage_sim
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False,
+        chunk_size: int | None = None) -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(5)
     dist, ms_scale, ovh = storage_sim.service_dist(storage_sim.MEMCACHED)
     loads = jnp.asarray([0.1, 0.3, 0.5, 0.7, 0.9])
-    cfg = queueing.SimConfig(n_servers=20, n_arrivals=60_000,
+    cfg = queueing.SimConfig(n_servers=20,
+                             n_arrivals=4_000 if smoke else 60_000,
                              client_overhead=ovh)
 
     def work():
-        return queueing.replication_gain(key, dist, loads, cfg, n_seeds=2)
+        return queueing.replication_gain(key, dist, loads, cfg, n_seeds=2,
+                                         chunk_size=chunk_size)
 
     g, us = timed(work)
     for i, rho in enumerate(loads):

@@ -10,14 +10,15 @@ from benchmarks.common import Row, timed
 from repro.core import analytic, dns
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
     pop = dns.DNSPopulation()
     key = jax.random.PRNGKey(6)
+    n = 20_000 if smoke else 400_000
 
     def work():
         ranking = dns.rank_servers(key, pop)
-        lat = dns.sample_latencies(jax.random.PRNGKey(7), pop, 400_000)
+        lat = dns.sample_latencies(jax.random.PRNGKey(7), pop, n)
         return ranking, lat
 
     (ranking, lat), us = timed(work)

@@ -17,12 +17,13 @@ CFG = queueing.SimConfig(n_servers=20, n_arrivals=80_000)
 LOADS = jnp.asarray([0.1, 0.2, 0.3, 0.4, 0.45])
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(0)
+    cfg = queueing.SimConfig(n_servers=20, n_arrivals=4_000) if smoke else CFG
     for dist in (dists.deterministic(), dists.pareto(2.1)):
         def work(dist=dist):
-            out = queueing.sweep(key, dist, LOADS, CFG, ks=(1, 2), n_seeds=1)
+            out = queueing.sweep(key, dist, LOADS, cfg, ks=(1, 2), n_seeds=1)
             jax.block_until_ready(out["mean"])
             return out
 

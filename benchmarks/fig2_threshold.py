@@ -21,13 +21,14 @@ FAMILIES = {
 }
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(1)
+    cfg = queueing.SimConfig(n_servers=20, n_arrivals=4_000) if smoke else CFG
     entries = [(fam, x, dist) for fam, fam_entries in FAMILIES.items()
                for x, dist in fam_entries]
     ths, us = timed(lambda: threshold.threshold_grid_batch(
-        key, [dist for _, _, dist in entries], CFG, n_seeds=2))
+        key, [dist for _, _, dist in entries], cfg, n_seeds=2))
     for (fam, x, dist), t in zip(entries, ths):
         var = "inf" if dist.variance is None else f"{dist.variance:.2f}"
         rows.append((f"fig2/{fam}/x={x:g}", us / len(entries),

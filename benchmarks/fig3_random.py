@@ -16,15 +16,17 @@ from repro.core import queueing, threshold
 CFG = queueing.SimConfig(n_servers=20, n_arrivals=40_000)
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(2)
+    cfg = queueing.SimConfig(n_servers=20, n_arrivals=4_000) if smoke else CFG
+    n_draws = 3 if smoke else 8
     rhos = jnp.linspace(0.1, 0.495, 14)
-    for support in (2, 10, 100):
+    for support in (2, 10) if smoke else (2, 10, 100):
         for alpha, label in ((None, "uniform"), (0.1, "dirichlet0.1")):
             def work():
                 batch = []
-                for i in range(8):
+                for i in range(n_draws):
                     k1, _ = jax.random.split(
                         jax.random.fold_in(key, support * 100 + i))
                     batch.append(dists.random_discrete(
@@ -34,7 +36,7 @@ def run() -> list[Row]:
                 _, k2 = jax.random.split(
                     jax.random.fold_in(key, support * 100))
                 return threshold.threshold_grid_batch(
-                    k2, batch, CFG, rhos=rhos, n_seeds=1)
+                    k2, batch, cfg, rhos=rhos, n_seeds=1)
 
             ths, us = timed(work)
             rows.append((f"fig3/N={support}/{label}", us,

@@ -17,11 +17,12 @@ from repro.core import queueing, threshold
 DISTS = (dists.deterministic(), dists.exponential(), dists.pareto(2.1))
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(3)
-    for c in (0.0, 0.05, 0.15, 0.3, 0.6, 1.0):
-        cfg = queueing.SimConfig(n_servers=20, n_arrivals=40_000,
+    n_arrivals = 4_000 if smoke else 40_000
+    for c in (0.0, 0.3) if smoke else (0.0, 0.05, 0.15, 0.3, 0.6, 1.0):
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=n_arrivals,
                                  client_overhead=c)
         ths, us = timed(lambda cf=cfg: threshold.threshold_grid_batch(
             key, list(DISTS), cf, n_seeds=2))

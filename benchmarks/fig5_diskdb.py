@@ -26,12 +26,14 @@ VARIANTS = {
 LOADS = jnp.asarray([0.1, 0.2, 0.3, 0.4])
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(4)
-    for name, scfg in VARIANTS.items():
+    variants = (dict(list(VARIANTS.items())[:2]) if smoke else VARIANTS)
+    for name, scfg in variants.items():
         dist, ms_scale, ovh = storage_sim.service_dist(scfg)
-        cfg = queueing.SimConfig(n_servers=20, n_arrivals=60_000,
+        cfg = queueing.SimConfig(n_servers=20,
+                                 n_arrivals=4_000 if smoke else 60_000,
                                  client_overhead=ovh)
 
         def work(dist=dist, cfg=cfg):

@@ -4,6 +4,9 @@ Prints ``name,us_per_call,derived`` CSV. ``--only fig14`` runs one module.
 ``--json PATH`` additionally writes the rows as a JSON list (one object per
 row: name / us_per_call / derived) so the perf trajectory is
 machine-readable across PRs (e.g. ``--json BENCH_queueing.json``).
+``--smoke`` runs every module at tiny sizes — CI uses ``--json --smoke``
+to refresh the perf-trajectory artifact on every push without paying for
+full-size sweeps.
 """
 from __future__ import annotations
 
@@ -19,6 +22,8 @@ def main() -> None:
                     help="substring filter on module names")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH as a JSON list")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: exercise every module quickly")
     args = ap.parse_args()
 
     from benchmarks import (fig1_queueing, fig2_threshold, fig3_random,
@@ -37,7 +42,7 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         try:
-            for row_name, us, derived in mod.run():
+            for row_name, us, derived in mod.run(smoke=args.smoke):
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
                 collected.append({"name": row_name,
                                   "us_per_call": round(us, 1),

@@ -22,8 +22,9 @@ def _sampler(seed: int):
     return sample
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
+    n_reqs = 15 if smoke else 80
     for k in (1, 2):
         def work(k=k):
             engines = [SimulatedEngine(_sampler(i), name=f"s{i}")
@@ -33,13 +34,13 @@ def run() -> list[Row]:
                 meter=LoadMeter(alpha=0.0, init=0.0), seed=3)
             try:
                 lats = [sched.submit(np.zeros(2, np.int32)).latency
-                        for _ in range(80)]
+                        for _ in range(n_reqs)]
             finally:
                 sched.shutdown()
             return np.asarray(lats)
 
         lat, us = timed(work)
-        rows.append((f"serving/k={k}", us / 80,
+        rows.append((f"serving/k={k}", us / n_reqs,
                      f"mean_ms={lat.mean() * 1e3:.2f};"
                      f"p90_ms={np.percentile(lat, 90) * 1e3:.2f};"
                      f"p99_ms={np.percentile(lat, 99) * 1e3:.2f}"))

@@ -1,16 +1,23 @@
-"""Sweep-engine speedup: pre-refactor sequential path vs fused engine on the
-Figure 2 threshold sweep (15 service-time families).
+"""Sweep-engine speedup + chunk-streaming benchmarks.
 
-The "old" path is a faithful reimplementation of the pre-refactor code: one
-jitted ``lax.scan`` per (seed, k) from Python — ``2 * n_seeds`` full passes
-per distribution — with the distribution a static jit argument, so every
-family recompiles both k-variants. The fused path estimates ALL 15
-thresholds from one distribution-agnostic engine call
-(``threshold.threshold_grid_batch``).
+Part 1 — pre-refactor sequential path vs fused engine on the Figure 2
+threshold sweep (15 service-time families). The "old" path is a faithful
+reimplementation of the pre-refactor code: one jitted ``lax.scan`` per
+(seed, k) from Python — ``2 * n_seeds`` full passes per distribution —
+with the distribution a static jit argument, so every family recompiles
+both k-variants. The fused path estimates ALL 15 thresholds from one
+distribution-agnostic engine call (``threshold.threshold_grid_batch``).
 
-Emits per-family rows plus a ``sweep_engine/total`` row whose derived field
-carries the end-to-end speedup (target: >= 5x) and the max |threshold
-delta| between the two paths."""
+Part 2 — chunk-streamed vs pre-sampled engine: same thresholds via
+``chunk_size=4096`` (thresholds must match within the load-grid
+interpolation tolerance), wall clock for both, and the peak
+randomness-input footprint each path materializes (the chunked path's is
+independent of ``n_arrivals``). Finishes with a large-``n_arrivals``
+streamed sweep (2M arrivals by default) that the pre-sampled path would
+need ~40 MB/seed of inputs for — the chunked engine holds ~80 KB/seed.
+
+Emits per-family rows plus ``sweep_engine/total`` (end-to-end old-vs-fused
+speedup, target >= 5x) and ``sweep_engine/chunked*`` rows."""
 from __future__ import annotations
 
 import time
@@ -30,10 +37,14 @@ FAMILY_PARAMS = {
     "two_point": (0.1, 0.5, 0.8, 0.95, 0.99),
 }
 
+CHUNK = 4096
 
-def _entries():
+
+def _entries(smoke: bool):
+    params = ({fam: ps[:1] for fam, ps in FAMILY_PARAMS.items()} if smoke
+              else FAMILY_PARAMS)
     return [(fam, x, dists.FAMILIES[fam](x))
-            for fam, params in FAMILY_PARAMS.items() for x in params]
+            for fam, ps in params.items() for x in ps]
 
 
 def _threshold_grid_reference(key, dist, cfg, *, k=2, rhos=None, n_seeds=2):
@@ -52,10 +63,19 @@ def _threshold_grid_reference(key, dist, cfg, *, k=2, rhos=None, n_seeds=2):
     return threshold._interp_crossing(rhos, g)
 
 
-def run() -> list[Row]:
+def _input_bytes(cfg: queueing.SimConfig, n: int, k_max: int = 2) -> int:
+    """Bytes of pre-sampled randomness per seed for ``n`` arrivals: one f32
+    gap + k_max i32 servers + k_max f32 services per arrival."""
+    del cfg
+    return n * 4 * (1 + 2 * k_max)
+
+
+def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(1)
-    entries = _entries()
+    cfg = (queueing.SimConfig(n_servers=20, n_arrivals=5_000) if smoke
+           else CFG)
+    entries = _entries(smoke)
 
     # --- old path: one scan per (family, seed, k), dist static in jit ----
     old_us = []
@@ -63,14 +83,14 @@ def run() -> list[Row]:
     old_ths = []
     for fam, x, dist in entries:
         t1 = time.perf_counter()
-        old_ths.append(_threshold_grid_reference(key, dist, CFG, n_seeds=2))
+        old_ths.append(_threshold_grid_reference(key, dist, cfg, n_seeds=2))
         old_us.append((time.perf_counter() - t1) * 1e6)
     old_total = time.perf_counter() - t0
 
     # --- fused path: every family in ONE engine call ---------------------
     t0 = time.perf_counter()
     new_ths = threshold.threshold_grid_batch(
-        key, [dist for _, _, dist in entries], CFG, n_seeds=2)
+        key, [dist for _, _, dist in entries], cfg, n_seeds=2)
     new_total = time.perf_counter() - t0
     new_us = new_total * 1e6 / len(entries)
 
@@ -85,4 +105,46 @@ def run() -> list[Row]:
     rows.append(("sweep_engine/total", old_total * 1e6,
                  f"old_s={old_total:.2f};fused_s={new_total:.2f};"
                  f"speedup={speedup:.1f}x;max_threshold_delta={max_delta:.4f}"))
+
+    # --- chunked vs pre-sampled: thresholds must agree within the load
+    # grid's interpolation tolerance (grid step ~0.02) ---------------------
+    rhos = jnp.linspace(0.05, 0.495, 24)
+    grid_step = float(rhos[1] - rhos[0])
+    chunk_delta = 0.0
+    for dist in (dists.exponential(), dists.pareto(2.2)):
+        t0 = time.perf_counter()
+        th_un = threshold.threshold_grid(key, dist, cfg, rhos=rhos,
+                                         n_seeds=2)
+        un_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        th_ch = threshold.threshold_grid(key, dist, cfg, rhos=rhos,
+                                         n_seeds=2, chunk_size=CHUNK)
+        ch_s = time.perf_counter() - t0
+        chunk_delta = max(chunk_delta, abs(th_un - th_ch))
+        rows.append((f"sweep_engine/chunked/{dist.name}", ch_s * 1e6,
+                     f"unchunked={th_un:.3f};chunked={th_ch:.3f};"
+                     f"delta={abs(th_un - th_ch):.4f};"
+                     f"tol={grid_step:.3f};"
+                     f"match={abs(th_un - th_ch) <= grid_step};"
+                     f"unchunked_s={un_s:.2f};chunked_s={ch_s:.2f}"))
+
+    # --- streamed large-n_arrivals sweep: peak input memory is set by
+    # chunk_size, not n_arrivals --------------------------------------------
+    big_m = 200_000 if smoke else 2_000_000
+    big_cfg = queueing.SimConfig(n_servers=20, n_arrivals=big_m)
+    t0 = time.perf_counter()
+    out = queueing.sweep(key, dists.exponential(), jnp.asarray([0.3]),
+                         big_cfg, ks=(1, 2), n_seeds=1, chunk_size=CHUNK)
+    jax.block_until_ready(out["mean"])
+    big_s = time.perf_counter() - t0
+    rows.append((f"sweep_engine/chunked_{big_m // 1000}k", big_s * 1e6,
+                 f"chunk={CHUNK};mean_k1={float(out['mean'][0, 0, 0]):.4f};"
+                 f"p99_k2={float(out['p99'][0, 0, 1]):.3f};"
+                 f"input_kb_chunked={_input_bytes(big_cfg, CHUNK) // 1024};"
+                 f"input_kb_presampled="
+                 f"{_input_bytes(big_cfg, big_m) // 1024};"
+                 f"arrivals_per_s={big_m / big_s:.0f}"))
+    rows.append(("sweep_engine/chunked_total", 0.0,
+                 f"max_threshold_delta={chunk_delta:.4f};"
+                 f"interp_tol={grid_step:.3f}"))
     return rows

@@ -8,14 +8,15 @@ from benchmarks.common import Row, timed
 from repro.core import analytic
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False) -> list[Row]:
     rows: list[Row] = []
     m = analytic.TCPModel()
     key = jax.random.PRNGKey(8)
+    n = 20_000 if smoke else 400_000
 
     def work():
-        t1 = analytic.handshake_times(key, m, 400_000, duplicated=False)
-        t2 = analytic.handshake_times(key, m, 400_000, duplicated=True)
+        t1 = analytic.handshake_times(key, m, n, duplicated=False)
+        t2 = analytic.handshake_times(key, m, n, duplicated=True)
         return t1, t2
 
     (t1, t2), us = timed(work)

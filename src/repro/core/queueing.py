@@ -34,21 +34,53 @@ so the CRN coupling of the sequential path is preserved exactly: the k=1
 slice sees bit-identical inputs to the old ``simulate_grid(key, ..., k=1)``.
 
 The engine never materializes an ``(S, B, K, M)`` response array. Instead
-it folds each response into streaming statistics inside the scan:
+it folds each response into streaming statistics:
 
   * a Kahan-compensated post-warmup sum (=> exact-to-float32 means), and
   * a log-spaced histogram sketch of ``n_bins`` buckets spanning
     [HIST_LO, HIST_HI], from which percentiles are read as geometric bin
     midpoints (relative error <= half a bin width, ~0.5% at the default
-    2048 bins over 8 decades).
+    2048 bins over 8 decades). The per-arrival one-hot scatter of PR 2 is
+    gone: responses are staged in blocks of ``_SKETCH_BLOCK`` scan steps
+    and folded into the histogram by the Pallas ``hist_sketch`` kernel
+    (``repro.kernels.hist_sketch``), which contracts skinny 0/1 indicator
+    matrices on the MXU and keeps the accumulator in VMEM (interpret mode
+    off-TPU).
 
-Memory is therefore O(S*B*K*(N + n_bins)) independent of the number of
-arrivals M, while the sequential path needed O(B*M) per call.
+Chunk streaming (``chunk_size``)
+--------------------------------
 
-Crucially the jitted engine core is distribution-agnostic: service times
-are sampled in a small per-distribution jit and passed in as arrays, so
-sweeping 15 service-time families (Figure 2) compiles the expensive scan
-exactly once instead of 2 * n_seeds times per family.
+With ``chunk_size=None`` all randomness is pre-sampled, so host memory
+caps ``n_arrivals`` at O(S * M * k_max). Passing ``chunk_size=T`` streams
+the sweep instead: arrivals are processed in fixed-size chunks whose
+gaps / copy sets / service times are freshly sampled per chunk, and only
+the (S,B,K,N) free-time grid plus the streaming summaries cross chunk
+boundaries. Peak memory is O(S * T * k_max + S*B*K*(N + n_bins)),
+independent of ``n_arrivals`` — 10M-arrival sweeps run on a laptop.
+
+Key-splitting / CRN contract (chunked mode):
+
+  * Chunk ``c`` (arrivals ``[c*T, min((c+1)*T, M))``) draws ALL of its
+    randomness from ``jax.random.fold_in(key, c)`` through the same
+    samplers the unchunked engine uses, at ``n_arrivals=T``. The stream
+    is a pure function of ``(key, chunk_size)``: reruns are bit-identical
+    and chunk ``c``'s draws do not depend on how many chunks follow.
+  * Every CRN pairing of the unchunked engine holds within each chunk —
+    the arrival process is shared across loads, copy sets are nested
+    across k (k=2's extra server is one of k=3's), copy j's service draw
+    is shared by every k >= j, and ``sweep_dists`` gives all
+    distributions the same arrival process — so paired comparisons
+    (replication gain, thresholds) stay low-variance under chunking.
+  * Different ``chunk_size`` values consume the key differently: the
+    resulting summaries are statistically identical (same process, same
+    estimator) but not bit-identical. ``chunk_size=None`` keeps the PR 2
+    contract: seed ``s``, k-slice ``j`` sees bit-identical inputs to
+    ``simulate_grid(split(key, n_seeds)[s], dist, rhos, cfg, ks[j])``.
+
+Each chunk also rebases times to its own start (the free-time carry is
+kept relative to the last chunk boundary), so float32 arrival times stay
+O(chunk duration) instead of growing to O(total sim time) — long streams
+LOSE no precision to the cumsum, unlike the pre-sampled path.
 
 ``simulate`` / ``simulate_grid`` remain for callers that need raw
 per-arrival response times (tests, exact percentiles); they are thin
@@ -57,21 +89,24 @@ wrappers over the same single-cell step function.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.distributions import ServiceDist
+from repro.kernels.hist_sketch import ops as hist_ops
+from repro.kernels.hist_sketch.ops import (DEFAULT_BINS, HIST_HI,  # noqa: F401
+                                           HIST_LO)
 
 Array = jax.Array
 
-# Log-spaced histogram sketch bounds (unit-mean service times => responses
-# live well inside [1e-3, 1e5]; values outside clamp to the edge bins).
-HIST_LO = 1e-3
-HIST_HI = 1e5
-DEFAULT_BINS = 2048
 DEFAULT_PERCENTILES = (50.0, 90.0, 99.0, 99.9)
+
+# Scan steps staged per hist_sketch kernel call; chunk lengths are padded
+# up to a multiple of this with zero-weight no-op arrivals.
+_SKETCH_BLOCK = 512
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,77 +263,150 @@ def _sample_sweep_inputs(key: Array, dist: ServiceDist, cfg: SimConfig,
     return unit_gaps, servers, services
 
 
-@partial(jax.jit, static_argnames=("n_servers", "n_bins"))
-def _sweep_engine(unit_gaps: Array, servers: Array, services: Array,
-                  rates: Array, k_mask: Array, ovh_vec: Array,
-                  warmup_start: Array, qs: Array, *, n_servers: int,
-                  n_bins: int):
-    """Distribution-agnostic fused core. One scan over M arrivals with the
-    stacked (S,B,K,N) server-free carry; streaming post-warmup mean (Kahan)
-    and log-histogram quantile sketch. Returns (mean (S,B,K),
-    quantiles (Q,S,B,K))."""
-    S, M = unit_gaps.shape
-    B = rates.shape[0]
-    K = k_mask.shape[0]
-    need_hist = qs.shape[0] > 0
+@partial(jax.jit, static_argnames=("n_servers", "n_bins", "block"))
+def _sweep_chunk(free: Array, ssum: Array, comp: Array, hist: Array,
+                 unit_gaps: Array, servers: Array, services: Array,
+                 start: Array, n_valid: Array, warmup_start: Array,
+                 rates: Array, k_mask: Array, ovh_vec: Array, *,
+                 n_servers: int, n_bins: int, block: int):
+    """Distribution-agnostic fused core over ONE chunk of arrivals.
 
-    cum = jnp.cumsum(unit_gaps, axis=1)  # (S, M) unit-rate arrival times
+    Carry threaded across chunks: ``free`` (S,B,K,N) server-free times
+    RELATIVE to the chunk-start arrival time, ``ssum``/``comp`` (S,B,K)
+    Kahan mean state, ``hist`` (S*B*K, n_bins) sketch counts (shape (0, 0)
+    skips the sketch). Per-chunk inputs: ``unit_gaps`` (S,T), ``servers``/
+    ``services`` (S,T,k_max), ``start`` = global index of the chunk's
+    first step, ``n_valid`` = real (non-padding) steps. Steps past
+    ``n_valid`` are masked to zero-gap / zero-service / zero-weight no-ops
+    — they can only bump an idle server's free time up to the chunk-end
+    arrival time, which no later arrival (all at times >= it) can observe.
+
+    When the sketch is on, the scan is staged in ``block``-step sub-blocks
+    whose responses are folded into ``hist`` by the Pallas hist_sketch
+    kernel — no per-step scatter, no (S,B,K,T) materialization beyond one
+    block. Returns the carry with ``free`` rebased to the chunk-end time.
+    """
+    S, T = unit_gaps.shape
+    need_hist = hist.size > 0
+    if need_hist:
+        assert T % block == 0, (T, block)
+
+    i = jnp.arange(T)
+    valid = i < n_valid                                       # (T,)
+    warm = (valid & (start + i >= warmup_start)).astype(jnp.float32)
+    gaps = unit_gaps * valid
+    services = services * valid[None, :, None]
+    cum = jnp.cumsum(gaps, axis=1)      # (S, T) offsets from chunk start
 
     # vmap the single-cell step over k, then loads, then seeds.
     cell_k = jax.vmap(_step_cell, in_axes=(0, None, None, None, 0, 0))
     cell_bk = jax.vmap(cell_k, in_axes=(0, 0, None, None, None, None))
     cell_sbk = jax.vmap(cell_bk, in_axes=(0, 0, 0, 0, None, None))
 
-    log_lo = jnp.log(jnp.float32(HIST_LO))
-    scale = (n_bins - 1) / (jnp.log(jnp.float32(HIST_HI)) - log_lo)
-    cells = S * B * K
-    cell_base = jnp.arange(cells, dtype=jnp.int32) * n_bins
-
     def step(carry, inp):
-        free, ssum, comp, hist = carry
-        i, c, srv, svc = inp
+        free, ssum, comp = carry
+        c, w, srv, svc = inp
         t = c[:, None] / rates[None, :]                       # (S, B)
         free, resp = cell_sbk(free, t, srv, svc, k_mask, ovh_vec)
-        warm = (i >= warmup_start).astype(resp.dtype)
-        # Kahan-compensated sum: sequential f32 accumulation over ~1e5
+        # Kahan-compensated sum: sequential f32 accumulation over ~1e5+
         # terms would otherwise cost ~1e-4 relative error on the mean,
         # which is the signal threshold bisection keys on.
-        y = resp * warm - comp
+        y = resp * w - comp
         tot = ssum + y
         comp = (tot - ssum) - y
-        ssum = tot
-        if need_hist:
-            idx = ((jnp.log(resp) - log_lo) * scale).astype(jnp.int32)
-            idx = jnp.clip(idx, 0, n_bins - 1)
-            flat = cell_base + idx.reshape(-1)
-            hist = hist.at[flat].add(warm)
-        return (free, ssum, comp, hist), None
+        return (free, tot, comp), (resp if need_hist else None)
 
-    zeros = jnp.zeros((S, B, K))
-    hist0 = jnp.zeros((cells * n_bins,) if need_hist else (0,))
-    carry0 = (jnp.zeros((S, B, K, n_servers)), zeros, zeros, hist0)
-    xs = (jnp.arange(M), cum.T, jnp.moveaxis(servers, 1, 0),
+    xs = (cum.T, warm, jnp.moveaxis(servers, 1, 0),
           jnp.moveaxis(services, 1, 0))
-    (free, ssum, comp, hist), _ = jax.lax.scan(step, carry0, xs)
+    if need_hist:
+        xs = jax.tree.map(
+            lambda x: x.reshape((T // block, block) + x.shape[1:]), xs)
 
-    count = (M - warmup_start).astype(ssum.dtype)
-    mean = ssum / count
-    if not need_hist:
-        return mean, jnp.zeros((0, S, B, K))
-    hist = hist.reshape(S, B, K, n_bins)
-    cdf = jnp.cumsum(hist, axis=-1)                           # (S,B,K,n_bins)
-    targets = qs[:, None, None, None] / 100.0 * count         # (Q,1,1,1)
-    # first bin where the cdf reaches the target mass
-    bin_idx = jnp.argmax(cdf[None] >= targets[..., None], axis=-1)
-    # geometric midpoint of the selected bin
-    quant = jnp.exp(log_lo + (bin_idx + 0.5) / scale)
-    return mean, quant
+        def outer(carry, xs_blk):
+            free, ssum, comp, hist = carry
+            (free, ssum, comp), resp = jax.lax.scan(
+                step, (free, ssum, comp), xs_blk)
+            idx = hist_ops.bin_indices(resp.reshape(block, -1),
+                                       xs_blk[1][:, None], n_bins=n_bins)
+            hist = hist + hist_ops.hist_accum(idx, n_bins=n_bins,
+                                              block_t=block)
+            return (free, ssum, comp, hist), None
+
+        (free, ssum, comp, hist), _ = jax.lax.scan(
+            outer, (free, ssum, comp, hist), xs)
+    else:
+        (free, ssum, comp), _ = jax.lax.scan(step, (free, ssum, comp), xs)
+
+    # rebase to the chunk-end arrival time so floats stay O(chunk duration)
+    free = free - (cum[:, -1][:, None] / rates[None, :])[..., None, None]
+    return free, ssum, comp, hist
+
+
+def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
+                ks: tuple[int, ...], percentiles: tuple[float, ...],
+                n_bins: int, chunk_size: int | None) -> dict[str, Array]:
+    """Drive ``_sweep_chunk`` over the whole arrival stream.
+
+    ``sampler(chunk_idx, chunk_len)`` returns that chunk's
+    ``(unit_gaps (S,T), servers (S,T,k_max), services (S,T,k_max))`` —
+    one call over the full stream when ``chunk_size`` is None.
+    """
+    k_max = max(ks)
+    K = len(ks)
+    S, B = n_seeds_total, rhos.shape[0]
+    rates = cfg.n_servers * rhos
+    k_mask = jnp.asarray([[j < k for j in range(k_max)] for k in ks])
+    ovh_vec = jnp.asarray(
+        [cfg.client_overhead if k > 1 else 0.0 for k in ks], jnp.float32)
+    m = cfg.n_arrivals
+    warmup_start = int(m * cfg.warmup_frac)
+    need_hist = len(percentiles) > 0
+
+    free = jnp.zeros((S, B, K, cfg.n_servers))
+    ssum = comp = jnp.zeros((S, B, K))
+    hist = (jnp.zeros((S * B * K, n_bins)) if need_hist
+            else jnp.zeros((0, 0)))
+
+    t_chunk = m if chunk_size is None else min(int(chunk_size), m)
+    n_chunks = math.ceil(m / t_chunk)
+    block = min(_SKETCH_BLOCK, t_chunk)
+    pad = (-t_chunk) % block if need_hist else 0
+
+    for c in range(n_chunks):
+        unit_gaps, servers, services = sampler(c, t_chunk)
+        if pad:
+            unit_gaps = jnp.pad(unit_gaps, ((0, 0), (0, pad)))
+            servers = jnp.pad(servers, ((0, 0), (0, pad), (0, 0)))
+            services = jnp.pad(services, ((0, 0), (0, pad), (0, 0)))
+        start = c * t_chunk
+        free, ssum, comp, hist = _sweep_chunk(
+            free, ssum, comp, hist, unit_gaps, servers, services,
+            jnp.asarray(start), jnp.asarray(min(t_chunk, m - start)),
+            jnp.asarray(warmup_start), rates, k_mask, ovh_vec,
+            n_servers=cfg.n_servers, n_bins=n_bins, block=block)
+
+    count = m - warmup_start
+    out: dict[str, Array] = {"mean": ssum / count, "count": count}
+    if need_hist:
+        quant = hist_ops.sketch_quantiles(
+            hist.reshape(S, B, K, n_bins),
+            jnp.asarray(percentiles, jnp.float32))            # (Q,S,B,K)
+        for qi, p in enumerate(percentiles):
+            out[f"p{p:g}"] = quant[qi]
+    return out
+
+
+def _chunk_key(key: Array, chunk_idx: int, chunk_size: int | None) -> Array:
+    """The key-splitting contract: chunk c draws from fold_in(key, c);
+    the unchunked stream consumes ``key`` itself (PR 2 compatible)."""
+    return key if chunk_size is None else jax.random.fold_in(key, chunk_idx)
 
 
 def sweep(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig, *,
           ks: tuple[int, ...] = (1, 2), n_seeds: int = 2,
           percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
-          n_bins: int = DEFAULT_BINS) -> dict[str, Array]:
+          n_bins: int = DEFAULT_BINS,
+          chunk_size: int | None = None) -> dict[str, Array]:
     """Fused multi-(k, seed, load) sweep. Returns post-warmup summaries,
     each of shape ``(n_seeds, len(rhos), len(ks))``:
 
@@ -309,80 +417,83 @@ def sweep(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig, *,
                         only)
       ``count``         post-warmup arrivals per cell (scalar)
 
-    CRN layout: seed s, k-slice j of this sweep sees bit-identical inputs
-    to ``simulate_grid(split(key, n_seeds)[s], dist, rhos, cfg, ks[j])``.
+    ``chunk_size=None`` pre-samples the whole stream; an int streams
+    arrivals in chunks of that many steps so peak memory is independent
+    of ``cfg.n_arrivals`` (see the module design note).
+
+    Key-splitting / CRN contract: with ``chunk_size=None``, seed s,
+    k-slice j sees bit-identical inputs to
+    ``simulate_grid(split(key, n_seeds)[s], dist, rhos, cfg, ks[j])``.
+    With ``chunk_size=T``, chunk c's randomness is drawn from
+    ``fold_in(key, c)`` at ``n_arrivals=T`` through the same per-seed
+    samplers, so results are a reproducible pure function of
+    ``(key, chunk_size)`` and all within-sweep CRN pairings (across k,
+    loads, seeds) are preserved inside every chunk.
     """
     ks = tuple(int(k) for k in ks)
     k_max = max(ks)
     rhos = jnp.asarray(rhos)
-    unit_gaps, servers, services = _sample_sweep_inputs(
-        key, dist, cfg, k_max, n_seeds)
-    return _sweep_summaries(unit_gaps, servers, services, rhos, cfg,
-                            ks=ks, percentiles=tuple(percentiles),
-                            n_bins=n_bins)
 
+    def sampler(c: int, t: int):
+        ccfg = dataclasses.replace(cfg, n_arrivals=t)
+        return _sample_sweep_inputs(_chunk_key(key, c, chunk_size), dist,
+                                    ccfg, k_max, n_seeds)
 
-def _sweep_summaries(unit_gaps: Array, servers: Array, services: Array,
-                     rhos: Array, cfg: SimConfig, *, ks: tuple[int, ...],
-                     percentiles: tuple[float, ...],
-                     n_bins: int) -> dict[str, Array]:
-    """Run the engine on pre-sampled inputs (see ``sweep`` / ``sweep_dists``)."""
-    k_max = max(ks)
-    k_mask = jnp.asarray([[j < k for j in range(k_max)] for k in ks])
-    ovh_vec = jnp.asarray(
-        [cfg.client_overhead if k > 1 else 0.0 for k in ks], jnp.float32)
-    warmup_start = jnp.asarray(int(cfg.n_arrivals * cfg.warmup_frac))
-    qs = jnp.asarray(percentiles, jnp.float32)
-    mean, quant = _sweep_engine(
-        unit_gaps, servers, services, cfg.n_servers * rhos, k_mask, ovh_vec,
-        warmup_start, qs, n_servers=cfg.n_servers, n_bins=n_bins)
-    out = {"mean": mean,
-           "count": cfg.n_arrivals - int(cfg.n_arrivals * cfg.warmup_frac)}
-    for qi, p in enumerate(percentiles):
-        out[f"p{p:g}"] = quant[qi]
-    return out
+    return _run_engine(sampler, n_seeds, rhos, cfg, ks=ks,
+                       percentiles=tuple(percentiles), n_bins=n_bins,
+                       chunk_size=chunk_size)
 
 
 def sweep_dists(key: Array, dist_list, rhos: Array, cfg: SimConfig, *,
                 ks: tuple[int, ...] = (1, 2), n_seeds: int = 2,
                 percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
-                n_bins: int = DEFAULT_BINS) -> dict[str, Array]:
+                n_bins: int = DEFAULT_BINS,
+                chunk_size: int | None = None) -> dict[str, Array]:
     """Sweep MANY service-time distributions in one engine call by stacking
     them along the seed axis. Summaries come back with a leading dist axis:
     ``(len(dist_list), n_seeds, len(rhos), len(ks))``. Every distribution
-    sees the same per-seed keys (paired comparisons across dists)."""
+    sees the same per-seed keys (paired comparisons across dists);
+    ``chunk_size`` streams arrivals exactly as in ``sweep``."""
     ks = tuple(int(k) for k in ks)
     k_max = max(ks)
     rhos = jnp.asarray(rhos)
-    # every distribution sees the same key, hence the same arrival process
-    # and copy sets (CRN across dists): sample them once and tile.
-    gaps1, servers1 = _sample_sweep_arrivals(
-        key, cfg.n_servers, cfg.n_arrivals, k_max, n_seeds)
     d = len(dist_list)
-    unit_gaps = jnp.tile(gaps1, (d, 1))
-    servers = jnp.tile(servers1, (d, 1, 1))
-    services = jnp.concatenate(
-        [_sample_sweep_services(key, dd, cfg, k_max, n_seeds)
-         for dd in dist_list], axis=0)
-    out = _sweep_summaries(unit_gaps, servers, services, rhos, cfg, ks=ks,
-                           percentiles=tuple(percentiles), n_bins=n_bins)
+
+    def sampler(c: int, t: int):
+        ck = _chunk_key(key, c, chunk_size)
+        ccfg = dataclasses.replace(cfg, n_arrivals=t)
+        # every distribution sees the same key, hence the same arrival
+        # process and copy sets (CRN across dists): sample once and tile.
+        gaps1, servers1 = _sample_sweep_arrivals(
+            ck, cfg.n_servers, t, k_max, n_seeds)
+        services = jnp.concatenate(
+            [_sample_sweep_services(ck, dd, ccfg, k_max, n_seeds)
+             for dd in dist_list], axis=0)
+        return (jnp.tile(gaps1, (d, 1)), jnp.tile(servers1, (d, 1, 1)),
+                services)
+
+    out = _run_engine(sampler, d * n_seeds, rhos, cfg, ks=ks,
+                      percentiles=tuple(percentiles), n_bins=n_bins,
+                      chunk_size=chunk_size)
     return {k: (v.reshape((d, n_seeds) + v.shape[1:])
                 if isinstance(v, jax.Array) else v)
             for k, v in out.items()}
 
 
 def mean_response(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig,
-                  k: int, n_seeds: int = 1) -> Array:
+                  k: int, n_seeds: int = 1,
+                  chunk_size: int | None = None) -> Array:
     """Post-warmup mean response (B,) averaged over ``n_seeds`` seeds."""
     out = sweep(key, dist, rhos, cfg, ks=(k,), n_seeds=n_seeds,
-                percentiles=())
+                percentiles=(), chunk_size=chunk_size)
     return jnp.mean(out["mean"][:, :, 0], axis=0)
 
 
 def replication_gain(key: Array, dist: ServiceDist, rhos: Array,
-                     cfg: SimConfig, k: int = 2, n_seeds: int = 2) -> Array:
+                     cfg: SimConfig, k: int = 2, n_seeds: int = 2,
+                     chunk_size: int | None = None) -> Array:
     """mean_k1(rho) - mean_k(rho), CRN-paired per seed. Positive = k helps."""
     out = sweep(key, dist, rhos, cfg, ks=(1, k), n_seeds=n_seeds,
-                percentiles=())
+                percentiles=(), chunk_size=chunk_size)
     m = out["mean"]  # (S, B, 2)
     return jnp.mean(m[:, :, 0] - m[:, :, 1], axis=0)

@@ -7,12 +7,17 @@ case), approaching 50% for sufficiently heavy-tailed service.
 
 Three estimators, all driven by the fused sweep engine in
 ``repro.core.queueing`` (one jitted scan per evaluation, batched over
-seeds x loads x k):
+seeds x loads x k; every estimator takes ``chunk_size`` and streams the
+engine when it is set):
 
   * ``threshold_bisect`` — bisection on the sign of the CRN-paired gain
     mean_k1(rho) - mean_k2(rho). Both bracket probes ride in a single
-    batched sweep call; each midpoint is one fused sweep. Precise; used by
-    tests.
+    batched sweep call, and the bisection itself is SPECULATIVE: each
+    engine call evaluates the current midpoint AND both possible next
+    midpoints as one batched 3-load sweep, so two bisection levels
+    resolve per call (the engine's wall clock is dominated by the scan
+    over arrivals, not the load axis — a 3-load call costs ~the same as
+    a 1-load call). Precise; used by tests.
   * ``threshold_grid``  — ONE fused sweep over the whole load grid +
     crossing interpolation.
   * ``threshold_grid_batch`` — many distributions in ONE engine call
@@ -37,31 +42,61 @@ def _paired_gain(mean: Array) -> Array:
 
 def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
                      k: int = 2, lo: float = 0.02, hi: float = 0.499,
-                     iters: int = 10, n_seeds: int = 3) -> float:
-    """Bisection on the CRN-paired replication gain.
+                     iters: int = 10, n_seeds: int = 3,
+                     speculative: bool = True,
+                     chunk_size: int | None = None) -> float:
+    """Speculative bisection on the CRN-paired replication gain.
 
     Assumes the gain changes sign once on [lo, hi] (true for every family the
     paper studies). Returns the estimated crossing point; if replication
     helps on the whole interval, returns ``hi`` (threshold >= hi).
+
+    With ``speculative=True`` each engine call evaluates the midpoint plus
+    the two candidate next midpoints (the quarter points) in one batched
+    sweep: the midpoint's sign picks the surviving half, whose quarter
+    point — already evaluated — resolves a second level. ``iters`` counts
+    bisection LEVELS either way, so the interval shrinks by 2**iters with
+    about half the engine calls.
     """
     keys = jax.random.split(key, iters + 1)
     # both bracket probes in one batched (seeds x {lo,hi} x {1,k}) sweep
     bracket = sweep(keys[-1], dist, jnp.asarray([lo, hi]), cfg, ks=(1, k),
-                    n_seeds=n_seeds, percentiles=())
+                    n_seeds=n_seeds, percentiles=(), chunk_size=chunk_size)
     g_lo, g_hi = (float(g) for g in _paired_gain(bracket["mean"]))
     if g_hi > 0.0:
         return hi
     if g_lo < 0.0:
         return lo
     a, b = lo, hi
-    for i in range(iters):
+    level = call = 0
+    while level < iters:
         mid = 0.5 * (a + b)
-        g = replication_gain(keys[i], dist, jnp.asarray([mid]), cfg, k=k,
-                             n_seeds=n_seeds)
-        if float(g[0]) > 0.0:
-            a = mid
+        if speculative and level + 1 < iters:
+            # midpoint + both possible next midpoints, one engine call
+            probes = jnp.asarray([0.5 * (a + mid), mid, 0.5 * (mid + b)])
+            out = sweep(keys[call], dist, probes, cfg, ks=(1, k),
+                        n_seeds=n_seeds, percentiles=(),
+                        chunk_size=chunk_size)
+            g_q_lo, g_mid, g_q_hi = (float(g)
+                                     for g in _paired_gain(out["mean"]))
+            if g_mid > 0.0:
+                a, g_next, nxt = mid, g_q_hi, float(probes[2])
+            else:
+                b, g_next, nxt = mid, g_q_lo, float(probes[0])
+            if g_next > 0.0:
+                a = nxt
+            else:
+                b = nxt
+            level += 2
         else:
-            b = mid
+            g = replication_gain(keys[call], dist, jnp.asarray([mid]), cfg,
+                                 k=k, n_seeds=n_seeds, chunk_size=chunk_size)
+            if float(g[0]) > 0.0:
+                a = mid
+            else:
+                b = mid
+            level += 1
+        call += 1
     return 0.5 * (a + b)
 
 
@@ -85,25 +120,27 @@ def _default_rhos() -> Array:
 
 
 def threshold_grid(key: Array, dist: ServiceDist, cfg: SimConfig, *,
-                   k: int = 2, rhos: Array | None = None,
-                   n_seeds: int = 2) -> float:
+                   k: int = 2, rhos: Array | None = None, n_seeds: int = 2,
+                   chunk_size: int | None = None) -> float:
     """ONE fused sweep over the load grid + crossing interpolation."""
     if rhos is None:
         rhos = _default_rhos()
-    g = replication_gain(key, dist, rhos, cfg, k=k, n_seeds=n_seeds)
+    g = replication_gain(key, dist, rhos, cfg, k=k, n_seeds=n_seeds,
+                         chunk_size=chunk_size)
     return _interp_crossing(rhos, g)
 
 
 def threshold_grid_batch(key: Array, dist_list, cfg: SimConfig, *,
                          k: int = 2, rhos: Array | None = None,
-                         n_seeds: int = 2) -> list[float]:
+                         n_seeds: int = 2,
+                         chunk_size: int | None = None) -> list[float]:
     """Thresholds for MANY distributions from a single fused engine call
     (distributions stack along the engine's seed axis, so e.g. all 15
     Figure 2 families run in one scan)."""
     if rhos is None:
         rhos = _default_rhos()
     out = sweep_dists(key, dist_list, rhos, cfg, ks=(1, k), n_seeds=n_seeds,
-                      percentiles=())
+                      percentiles=(), chunk_size=chunk_size)
     m = out["mean"]  # (D, S, B, 2)
     g = jnp.mean(m[:, :, :, 0] - m[:, :, :, 1], axis=1)  # (D, B)
     return [_interp_crossing(rhos, g[d]) for d in range(len(dist_list))]

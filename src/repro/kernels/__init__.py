@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the architecture substrate's compute hot spots.
 
-The paper's own contribution is scheduling-level (no custom kernel), but
-the LM substrate has four: flash_attention (prefill/train), decode_attention
-(flash-decoding over ring/dense caches), ssd_scan (Mamba-2 intra-chunk),
-rglru_scan (RG-LRU linear recurrence). Each subpackage is
+The paper's own contribution is scheduling-level, and hist_sketch is the
+one kernel in its service: the sweep engine's streaming log-histogram
+percentile sketch, accumulated in VMEM over blocks of simulator steps
+instead of a per-arrival scatter. The LM substrate has four more:
+flash_attention (prefill/train), decode_attention (flash-decoding over
+ring/dense caches), ssd_scan (Mamba-2 intra-chunk), rglru_scan (RG-LRU
+linear recurrence). Each subpackage is
 kernel.py (pl.pallas_call + BlockSpec VMEM tiling) / ops.py (jit wrapper,
 interpret-mode on CPU) / ref.py (pure-jnp oracle used by tests).
 """

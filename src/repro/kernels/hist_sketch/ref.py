@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the histogram-sketch kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hist_accum_ref(idx: jax.Array, *, n_bins: int) -> jax.Array:
+    """idx (T, C) int32 in [-1, n_bins) -> per-cell counts (C, n_bins) f32.
+
+    Bit-exact semantics the kernel must reproduce: each valid (t, c) entry
+    adds exactly 1.0 to ``out[c, idx[t, c]]``; ``idx == -1`` entries add
+    nothing.
+    """
+    t, c = idx.shape
+    valid = (idx >= 0).astype(jnp.float32)
+    cols = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32)[None, :], (t, c))
+    safe = jnp.clip(idx, 0, n_bins - 1)
+    return jnp.zeros((c, n_bins), jnp.float32).at[cols, safe].add(valid)

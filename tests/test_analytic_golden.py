@@ -1,0 +1,80 @@
+"""Golden tests: the chunk-streamed simulator pinned against closed forms.
+
+These use arrival counts (1M+) that the pre-sampled engine would need
+tens of MB of per-seed inputs for — the chunked engine streams them with
+peak memory set by ``chunk_size``. At these sample sizes the Monte-Carlo
+error on the mean is well under 1%, so the tolerances below genuinely pin
+the simulator to the analytics:
+
+  * M/M/1 mean response 1/(1-rho) at several loads (k=1, exponential),
+  * the paper's min-of-two-M/M/1 approximation 1/(2(1-2rho)) for k=2,
+  * the M/M/1 response-time p99 (Exp(1-rho) quantile) via the Pallas
+    histogram sketch, and
+  * Theorem 1: the exponential k=2 threshold at rho = 1/3.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import analytic, distributions as dists, queueing, threshold
+
+CHUNK = 8_192
+N_ARRIVALS = 1_000_000
+RHOS_K1 = (0.2, 0.5, 0.7)
+RHOS_K2 = (0.1, 0.25)
+
+
+@pytest.fixture(scope="module")
+def k1_summaries():
+    cfg = queueing.SimConfig(n_servers=20, n_arrivals=N_ARRIVALS)
+    return queueing.sweep(jax.random.PRNGKey(100), dists.exponential(),
+                          jnp.asarray(RHOS_K1), cfg, ks=(1,), n_seeds=1,
+                          percentiles=(99.0,), chunk_size=CHUNK)
+
+
+@pytest.fixture(scope="module")
+def k2_means():
+    cfg = queueing.SimConfig(n_servers=20, n_arrivals=N_ARRIVALS)
+    out = queueing.sweep(jax.random.PRNGKey(101), dists.exponential(),
+                         jnp.asarray(RHOS_K2), cfg, ks=(2,), n_seeds=1,
+                         percentiles=(), chunk_size=CHUNK)
+    return out["mean"][0, :, 0]
+
+
+class TestMM1Golden:
+    @pytest.mark.parametrize("i,rho", enumerate(RHOS_K1))
+    def test_mean_matches_closed_form(self, k1_summaries, i, rho):
+        sim = float(k1_summaries["mean"][0, i, 0])
+        expect = float(analytic.mm1_mean(rho))  # 1 / (1 - rho)
+        assert sim == pytest.approx(expect, rel=0.02)
+
+    @pytest.mark.parametrize("i,rho", enumerate(RHOS_K1))
+    def test_p99_matches_exponential_response(self, k1_summaries, i, rho):
+        # M/M/1 response ~ Exp(1 - rho) => p99 = ln(100) / (1 - rho);
+        # read through the histogram sketch (one log-bin ~ 0.9% rel).
+        sim = float(k1_summaries[f"p{99.0:g}"][0, i, 0])
+        expect = math.log(100.0) / (1.0 - rho)
+        assert sim == pytest.approx(expect, rel=0.05)
+
+
+class TestReplicatedGolden:
+    @pytest.mark.parametrize("i,rho", enumerate(RHOS_K2))
+    def test_k2_mean_matches_min_of_two_mm1(self, k2_means, i, rho):
+        # each copy ~ M/M/1 at load 2*rho; min of two independent
+        # Exp(1-2rho) samples has mean 1/(2(1-2rho)). The independence
+        # approximation holds to a few % at N=20 servers.
+        sim = float(k2_means[i])
+        expect = float(analytic.mm1_replicated_mean(rho, 2))
+        assert sim == pytest.approx(expect, rel=0.05)
+
+
+class TestTheorem1Golden:
+    def test_exponential_threshold_is_one_third(self):
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=300_000)
+        est = threshold.threshold_bisect(
+            jax.random.PRNGKey(102), dists.exponential(), cfg, iters=8,
+            n_seeds=2, chunk_size=CHUNK)
+        assert est == pytest.approx(analytic.THRESHOLD_EXPONENTIAL,
+                                    abs=0.02)

@@ -1,0 +1,55 @@
+"""Every benchmark module's entry point imports and runs at tiny sizes
+(the same ``smoke=True`` path CI exercises via ``benchmarks/run.py
+--smoke``), so a refactor of the engine API cannot silently strand a
+figure reproduction."""
+import importlib
+import sys
+from pathlib import Path
+
+import pytest
+
+# benchmarks/ is a repo-root package (not under src/); make it importable
+# the same way benchmarks/run.py is invoked from the repo root.
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+# Fast modules run in full; the heavy simulators get a trimmed marker so a
+# plain tier-1 run still covers every entry point without minutes of wall
+# clock dominated by two modules.
+MODULES = [
+    "fig1_queueing",
+    "fig2_threshold",
+    "fig3_random",
+    "fig4_overhead",
+    "fig5_diskdb",
+    "fig12_memcached",
+    "fig15_dns",
+    "tab_tcp",
+    "serving_hedge",
+    "roofline",
+    "sweep_engine",
+    "fig14_network",
+]
+
+
+@pytest.mark.parametrize("name", MODULES)
+def test_benchmark_entry_runs_smoke(name):
+    mod = importlib.import_module(f"benchmarks.{name}")
+    rows = mod.run(smoke=True)
+    assert isinstance(rows, list) and rows, name
+    for row in rows:
+        label, us, derived = row
+        assert isinstance(label, str) and label
+        assert float(us) >= 0.0
+        assert isinstance(derived, str)
+        assert "ERROR" not in label, (label, derived)
+
+
+def test_fig12_accepts_chunked_engine_config():
+    import benchmarks.fig12_memcached as fig12
+    rows = fig12.run(smoke=True, chunk_size=1_024)
+    assert rows and all("ERROR" not in r[0] for r in rows)
+
+
+def test_run_harness_importable():
+    import benchmarks.run as run_mod
+    assert callable(run_mod.main)

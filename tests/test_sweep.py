@@ -110,6 +110,94 @@ class TestSweepCRN:
             assert jnp.array_equal(v2[s], v_ref)
 
 
+class TestChunkedSweep:
+    """Chunk-streamed engine: agreement with the pre-sampled path,
+    invariance to chunk_size, and the fold_in(key, chunk) reproducibility
+    contract."""
+
+    CFG = queueing.SimConfig(n_servers=10, n_arrivals=24_000)
+
+    def test_chunked_matches_unchunked_within_tolerance(self):
+        # different random streams (fold_in per chunk vs one pre-sample),
+        # same process: summaries agree to Monte-Carlo tolerance.
+        key = jax.random.PRNGKey(20)
+        un = queueing.sweep(key, dists.exponential(), RHOS, self.CFG,
+                            ks=(1, 2), n_seeds=2)
+        ch = queueing.sweep(key, dists.exponential(), RHOS, self.CFG,
+                            ks=(1, 2), n_seeds=2, chunk_size=4096)
+        assert ch["count"] == un["count"]
+        assert jnp.allclose(ch["mean"], un["mean"], rtol=0.08)
+        assert jnp.allclose(ch["p99"], un["p99"], rtol=0.25)
+
+    def test_chunk_size_invariance_statistical(self):
+        # 1k vs 4k chunks, same key: different key consumption, same
+        # process => statistically identical summaries.
+        key = jax.random.PRNGKey(21)
+        s1 = queueing.sweep(key, dists.exponential(), RHOS, self.CFG,
+                            ks=(1, 2), n_seeds=2, chunk_size=1_000)
+        s4 = queueing.sweep(key, dists.exponential(), RHOS, self.CFG,
+                            ks=(1, 2), n_seeds=2, chunk_size=4_000)
+        assert jnp.allclose(s1["mean"], s4["mean"], rtol=0.08)
+        assert jnp.allclose(s1["p99"], s4["p99"], rtol=0.25)
+
+    def test_chunked_rerun_bit_identical(self):
+        # the chunked stream is a pure function of (key, chunk_size)
+        key = jax.random.PRNGKey(22)
+        a = queueing.sweep(key, dists.pareto(2.5), RHOS, self.CFG,
+                           ks=(1, 2), n_seeds=1, chunk_size=3_000)
+        b = queueing.sweep(key, dists.pareto(2.5), RHOS, self.CFG,
+                           ks=(1, 2), n_seeds=1, chunk_size=3_000)
+        assert jnp.array_equal(a["mean"], b["mean"])
+        assert jnp.array_equal(a["p99"], b["p99"])
+
+    def test_chunked_crn_pairing_across_k(self):
+        # CRN holds inside every chunk: at near-zero load the k=2 slice
+        # can only beat the k=1 slice (shared first-copy draws).
+        key = jax.random.PRNGKey(23)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=6_000)
+        out = queueing.sweep(key, dists.pareto(2.1), jnp.asarray([0.001]),
+                             cfg, ks=(1, 2), n_seeds=1, percentiles=(),
+                             chunk_size=1_000)
+        assert float(out["mean"][0, 0, 1]) <= float(out["mean"][0, 0, 0])
+
+    def test_ragged_final_chunk_and_odd_chunk_size(self):
+        # chunk_size that divides neither n_arrivals nor the sketch block:
+        # padding/masking must not distort the summaries.
+        key = jax.random.PRNGKey(24)
+        ch = queueing.sweep(key, dists.exponential(), RHOS, self.CFG,
+                            ks=(1, 2), n_seeds=2, chunk_size=1_700)
+        un = queueing.sweep(key, dists.exponential(), RHOS, self.CFG,
+                            ks=(1, 2), n_seeds=2)
+        assert jnp.allclose(ch["mean"], un["mean"], rtol=0.08)
+
+    def test_chunked_sweep_dists_matches_single_sweeps(self):
+        # the stacked-distribution driver shares each chunk's arrival
+        # process across dists and matches per-dist chunked sweeps exactly
+        key = jax.random.PRNGKey(25)
+        ds = [dists.exponential(), dists.two_point(0.9)]
+        batched = queueing.sweep_dists(key, ds, RHOS, CFG, ks=(1, 2),
+                                       n_seeds=2, percentiles=(),
+                                       chunk_size=2_500)
+        assert batched["mean"].shape == (2, 2, 2, 2)
+        for d_idx, d in enumerate(ds):
+            single = queueing.sweep(key, d, RHOS, CFG, ks=(1, 2), n_seeds=2,
+                                    percentiles=(), chunk_size=2_500)
+            assert jnp.allclose(batched["mean"][d_idx], single["mean"],
+                                rtol=1e-5)
+
+    def test_threshold_grid_chunked_close_to_unchunked(self):
+        key = jax.random.PRNGKey(26)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=30_000)
+        rhos = jnp.linspace(0.1, 0.45, 8)
+        t_un = threshold.threshold_grid(key, dists.exponential(), cfg,
+                                        rhos=rhos, n_seeds=2)
+        t_ch = threshold.threshold_grid(key, dists.exponential(), cfg,
+                                        rhos=rhos, n_seeds=2,
+                                        chunk_size=8_192)
+        # within one grid step of each other (independent streams)
+        assert abs(t_un - t_ch) <= float(rhos[1] - rhos[0])
+
+
 class TestFactoryMemoization:
     def test_scalar_factories_are_memoized(self):
         assert dists.pareto(2.1) is dists.pareto(2.1)
