@@ -1,10 +1,16 @@
-"""Shared benchmark utilities: timing + CSV rows `name,us_per_call,derived`."""
+"""Shared benchmark utilities: timing + CSV rows `name,us_per_call,derived`.
+
+Rows that executed under a device mesh may append a 4th element — the
+mesh shape tuple — which ``run.py`` records as the row's ``mesh``
+provenance in the JSON artifact (3-element rows get ``mesh: null``).
+"""
 from __future__ import annotations
 
 import time
 from typing import Any, Callable
 
 Row = tuple[str, float, str]
+ShardedRow = tuple[str, float, str, tuple[int, ...]]
 
 
 def timed(fn: Callable[[], Any]) -> tuple[Any, float]:

@@ -1,19 +1,31 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. ``--only fig14`` runs one module.
-``--json PATH`` additionally writes the rows as a JSON list (one object per
-row: name / us_per_call / derived) so the perf trajectory is
-machine-readable across PRs (e.g. ``--json BENCH_queueing.json``).
+``--json PATH`` additionally writes the rows as a JSON list so the perf
+trajectory is machine-readable across PRs (e.g. ``--json
+BENCH_queueing.json``). Each JSON row records execution provenance next
+to the measurement — ``backend`` / ``device_count`` of the process plus
+the ``mesh`` shape the row ran under (``null`` for unsharded rows) — so
+BENCH_*.json trajectories are comparable across machines.
 ``--smoke`` runs every module at tiny sizes — CI uses ``--json --smoke``
 to refresh the perf-trajectory artifact on every push without paying for
-full-size sweeps.
+full-size sweeps. ``--devices N`` builds an N-way ``"cells"`` sweep mesh
+and hands it to mesh-aware modules (currently ``sweep_engine``), which
+then emit sharded rows; on CPU export
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import time
+from pathlib import Path
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; make `from benchmarks import ...` work from any invocation.
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:
@@ -24,7 +36,23 @@ def main() -> None:
                     help="also write rows to PATH as a JSON list")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes: exercise every module quickly")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="run mesh-aware modules through the sharded "
+                         "cell-plan engine on an N-device 'cells' mesh")
     args = ap.parse_args()
+
+    import jax
+
+    mesh = None
+    if args.devices:
+        n = min(args.devices, jax.device_count())
+        if n < args.devices:
+            print(f"# --devices {args.devices} clamped to {n} "
+                  f"(visible devices; on CPU set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count={args.devices})",
+                  file=sys.stderr)
+        from repro.launch.mesh import make_sweep_mesh
+        mesh = make_sweep_mesh(n)
 
     from benchmarks import (fig1_queueing, fig2_threshold, fig3_random,
                             fig4_overhead, fig5_diskdb, fig12_memcached,
@@ -34,6 +62,9 @@ def main() -> None:
                fig4_overhead, fig5_diskdb, fig12_memcached, fig14_network,
                fig15_dns, tab_tcp, serving_hedge, roofline]
 
+    provenance = {"backend": jax.default_backend(),
+                  "device_count": jax.device_count()}
+
     print("name,us_per_call,derived")
     collected: list[dict[str, object]] = []
     t0 = time.time()
@@ -41,16 +72,27 @@ def main() -> None:
         name = mod.__name__.split(".")[-1]
         if args.only and args.only not in name:
             continue
+        kwargs = {"smoke": args.smoke}
+        if mesh is not None and "mesh" in inspect.signature(
+                mod.run).parameters:
+            kwargs["mesh"] = mesh
         try:
-            for row_name, us, derived in mod.run(smoke=args.smoke):
+            for row in mod.run(**kwargs):
+                # rows are (name, us, derived) or, for sharded rows,
+                # (name, us, derived, mesh_shape) — see benchmarks.common
+                row_name, us, derived = row[:3]
+                row_mesh = (list(row[3])
+                            if len(row) > 3 and row[3] is not None else None)
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
                 collected.append({"name": row_name,
                                   "us_per_call": round(us, 1),
-                                  "derived": derived})
+                                  "derived": derived,
+                                  "mesh": row_mesh, **provenance})
         except Exception as e:  # keep the harness going
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             collected.append({"name": f"{name}/ERROR", "us_per_call": 0,
-                              "derived": f"{type(e).__name__}:{e}"})
+                              "derived": f"{type(e).__name__}:{e}",
+                              "mesh": None, **provenance})
             import traceback
             traceback.print_exc(file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)

@@ -16,8 +16,17 @@ independent of ``n_arrivals``). Finishes with a large-``n_arrivals``
 streamed sweep (2M arrivals by default) that the pre-sampled path would
 need ~40 MB/seed of inputs for — the chunked engine holds ~80 KB/seed.
 
+Part 3 — sharded cell-plan execution (``mesh`` argument, wired through
+``run.py --devices``): the same chunked sweep and the Fig 2 threshold
+batch run through ``repro.distributed.sweep_shard`` on a 1-D "cells"
+mesh, recording whether the bit-identity contract against the unsharded
+engine held (``bit_identical=``) and carrying the mesh shape as JSON
+provenance (the contract itself is enforced by tier-1 / CI tests, not
+by the benchmark — a violation must still produce rows).
+
 Emits per-family rows plus ``sweep_engine/total`` (end-to-end old-vs-fused
-speedup, target >= 5x) and ``sweep_engine/chunked*`` rows."""
+speedup, target >= 5x), ``sweep_engine/chunked*`` and (with a mesh)
+``sweep_engine/sharded*`` rows."""
 from __future__ import annotations
 
 import time
@@ -25,7 +34,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row
+from benchmarks.common import Row, ShardedRow
 from repro.core import distributions as dists
 from repro.core import queueing, threshold
 
@@ -70,7 +79,57 @@ def _input_bytes(cfg: queueing.SimConfig, n: int, k_max: int = 2) -> int:
     return n * 4 * (1 + 2 * k_max)
 
 
-def run(smoke: bool = False) -> list[Row]:
+def _sharded_rows(key, cfg: queueing.SimConfig, mesh,
+                  smoke: bool) -> list[ShardedRow]:
+    """Sharded-vs-unsharded on the chunked sweep + threshold batch: wall
+    clock both ways, bit-identity asserted, mesh shape as provenance."""
+    from repro.distributed.sweep_shard import sweep_sharded
+
+    shape = tuple(mesh.devices.shape)
+    n_dev = mesh.devices.size
+    rows: list[ShardedRow] = []
+
+    rhos = jnp.linspace(0.1, 0.4, 3 if smoke else 8)
+    n_seeds = 2
+    d = dists.exponential()
+    kw = dict(ks=(1, 2), n_seeds=n_seeds, chunk_size=CHUNK)
+    t0 = time.perf_counter()
+    un = queueing.sweep(key, d, rhos, cfg, **kw)
+    jax.block_until_ready(un["mean"])
+    un_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sh = sweep_sharded(key, d, rhos, cfg, mesh=mesh, **kw)
+    jax.block_until_ready(sh["mean"])
+    sh_s = time.perf_counter() - t0
+    # bit_identical=False in a row is the signal a contract violation
+    # leaves behind — never raise here, or the diagnostic row (and the
+    # module's other rows) would be dropped before reaching the JSON
+    # artifact. Tier-1 / the multi-device CI job enforce the contract.
+    bit = all(bool(jnp.array_equal(un[f], sh[f]))
+              for f in ("mean", "p50", "p99"))
+    cells = n_seeds * rhos.shape[0] * 2
+    rows.append((f"sweep_engine/sharded/sweep_d{n_dev}", sh_s * 1e6,
+                 f"cells={cells};devices={n_dev};bit_identical={bit};"
+                 f"unsharded_s={un_s:.2f};sharded_s={sh_s:.2f}", shape))
+
+    fams = [dists.pareto(2.5), dists.weibull(0.7), dists.two_point(0.8)]
+    t0 = time.perf_counter()
+    th_un = threshold.threshold_grid_batch(key, fams, cfg, n_seeds=2,
+                                           chunk_size=CHUNK)
+    un_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    th_sh = threshold.threshold_grid_batch(key, fams, cfg, n_seeds=2,
+                                           chunk_size=CHUNK, mesh=mesh)
+    sh_s = time.perf_counter() - t0
+    bit = th_un == th_sh
+    rows.append((f"sweep_engine/sharded/thresholds_d{n_dev}", sh_s * 1e6,
+                 f"families={len(fams)};devices={n_dev};"
+                 f"bit_identical={bit};unsharded_s={un_s:.2f};"
+                 f"sharded_s={sh_s:.2f}", shape))
+    return rows
+
+
+def run(smoke: bool = False, mesh=None) -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(1)
     cfg = (queueing.SimConfig(n_servers=20, n_arrivals=5_000) if smoke
@@ -147,4 +206,8 @@ def run(smoke: bool = False) -> list[Row]:
     rows.append(("sweep_engine/chunked_total", 0.0,
                  f"max_threshold_delta={chunk_delta:.4f};"
                  f"interp_tol={grid_step:.3f}"))
+
+    # --- sharded cell-plan execution: bit-identity + mesh provenance ----
+    if mesh is not None:
+        rows.extend(_sharded_rows(key, cfg, mesh, smoke))
     return rows

@@ -1,0 +1,103 @@
+"""Cell-plan construction for the sweep engine.
+
+The fused engine's summaries are stacked over three axes — seeds ``S``
+(dist-stacked for ``sweep_dists``), loads ``B``, replication factors
+``K`` — but every (s, b, k) grid cell is an independent simulation:
+per-cell server free-times, Kahan mean state, and histogram rows never
+interact. A ``CellPlan`` makes that independence explicit by flattening
+the stacked axes into ONE cell axis of length ``S * B * K`` (C-order:
+seed slowest, k fastest, matching ``reshape(S, B, K)``), padded up to a
+multiple of ``pad_to`` so the cell axis divides a device mesh evenly.
+
+Each cell carries its coordinates (``seed_idx`` / ``load_idx`` /
+``k_idx``) plus a validity mask. Pad cells alias cell 0's coordinates so
+they simulate real, finite work (no NaN/inf poisoning a shared buffer or
+a collective) but are marked invalid and sliced away by ``unflatten``
+before any summary is read — a pad cell cannot contribute to a Kahan
+mean or a hist_sketch bin of a real cell because no per-cell state is
+ever reduced across the cell axis.
+
+Both execution layers consume the same plan: the single-device driver in
+``repro.core.queueing`` builds an unpadded plan (``pad_to=1``) and the
+sharded driver in ``repro.distributed.sweep_shard`` pads to the mesh
+size. Cell RANDOMNESS is keyed by the seed coordinate alone (chunk seed
+keys indexed with ``seed_idx``), never by position on the cell axis or
+device placement — which is what makes sharded and unsharded execution
+bit-identical for any device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    """Flattened (seed, load, k) sweep grid with mesh-friendly padding."""
+
+    n_seeds: int
+    n_loads: int
+    n_ks: int
+    n_cells: int       # S * B * K real cells
+    n_padded: int      # n_cells rounded up to a multiple of pad_to
+    seed_idx: Array    # (n_padded,) int32 — seed coordinate per cell
+    load_idx: Array    # (n_padded,) int32 — load coordinate per cell
+    k_idx: Array       # (n_padded,) int32 — replication coordinate per cell
+    valid: Array       # (n_padded,) bool  — False for pad cells
+
+    @property
+    def stacked_shape(self) -> tuple[int, int, int]:
+        return (self.n_seeds, self.n_loads, self.n_ks)
+
+
+def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
+                   pad_to: int = 1) -> CellPlan:
+    """Flatten an (S, B, K) grid into a padded cell axis.
+
+    Cell ``c`` maps to coordinates ``(c // (B*K), (c // K) % B, c % K)``
+    — C-order, so ``unflatten`` is a plain ``reshape(S, B, K)`` of the
+    first ``n_cells`` entries. Pad cells (when ``S*B*K`` is not a
+    multiple of ``pad_to``) copy cell 0's coordinates and are flagged
+    ``valid=False``.
+    """
+    if min(n_seeds, n_loads, n_ks, pad_to) < 1:
+        raise ValueError(
+            f"all plan axes must be >= 1, got {(n_seeds, n_loads, n_ks)} "
+            f"pad_to={pad_to}")
+    n_cells = n_seeds * n_loads * n_ks
+    n_padded = -(-n_cells // pad_to) * pad_to
+    c = np.arange(n_padded)
+    k_idx = c % n_ks
+    load_idx = (c // n_ks) % n_loads
+    seed_idx = c // (n_ks * n_loads)
+    pad = slice(n_cells, n_padded)
+    seed_idx[pad] = load_idx[pad] = k_idx[pad] = 0
+    return CellPlan(
+        n_seeds=n_seeds, n_loads=n_loads, n_ks=n_ks,
+        n_cells=n_cells, n_padded=n_padded,
+        seed_idx=jnp.asarray(seed_idx, jnp.int32),
+        load_idx=jnp.asarray(load_idx, jnp.int32),
+        k_idx=jnp.asarray(k_idx, jnp.int32),
+        valid=jnp.asarray(c < n_cells))
+
+
+def unflatten(plan: CellPlan, x: Array) -> Array:
+    """Per-cell values ``(n_padded, ...)`` -> stacked ``(S, B, K, ...)``,
+    dropping pad cells. The inverse of ``flatten`` on valid cells."""
+    return x[:plan.n_cells].reshape(plan.stacked_shape + x.shape[1:])
+
+
+def flatten(plan: CellPlan, x: Array) -> Array:
+    """Stacked ``(S, B, K, ...)`` -> per-cell ``(n_padded, ...)``. Pad
+    cells receive copies of cell 0's row (finite, mask-dropped later)."""
+    flat = jnp.reshape(x, (plan.n_cells,) + x.shape[3:])
+    n_pad = plan.n_padded - plan.n_cells
+    if n_pad:
+        flat = jnp.concatenate(
+            [flat, jnp.broadcast_to(flat[:1], (n_pad,) + flat.shape[1:])])
+    return flat

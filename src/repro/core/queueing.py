@@ -76,6 +76,25 @@ Key-splitting / CRN contract (chunked mode):
     estimator) but not bit-identical. ``chunk_size=None`` keeps the PR 2
     contract: seed ``s``, k-slice ``j`` sees bit-identical inputs to
     ``simulate_grid(split(key, n_seeds)[s], dist, rhos, cfg, ks[j])``.
+  * Sharding invariance: the sharded executor
+    (``repro.distributed.sweep_shard``) derives every cell's randomness
+    from its SEED COORDINATE in the cell plan — chunk ``c``, seed ``s``
+    draws from ``split(fold_in(key, c), n_seeds)[s]`` (``split(key,
+    n_seeds)[s]`` unchunked) no matter which device owns the cell — and
+    pad cells are sliced away before any summary is read. For the same
+    ``(key, chunk_size)``, sharded and unsharded sweeps (and the
+    thresholds derived from them) are therefore bit-identical for ANY
+    device count.
+
+Execution layers
+----------------
+
+The engine is split into plan construction (``repro.core.cellplan``
+flattens the stacked (S, B, K) axes into one padded cell axis), the
+per-chunk body (``_sweep_chunk_cells``, one flat cell axis), and
+finalization (``_finalize_summary``). ``_run_engine`` below drives the
+body on a single device; ``repro.distributed.sweep_shard`` drives the
+SAME body under ``shard_map`` over a 1-D ``"cells"`` device mesh.
 
 Each chunk also rebases times to its own start (the free-time carry is
 kept relative to the last chunk boundary), so float32 arrival times stay
@@ -95,6 +114,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import cellplan
 from repro.core.distributions import ServiceDist
 from repro.kernels.hist_sketch import ops as hist_ops
 from repro.kernels.hist_sketch.ops import (DEFAULT_BINS, HIST_HI,  # noqa: F401
@@ -264,27 +284,40 @@ def _sample_sweep_inputs(key: Array, dist: ServiceDist, cfg: SimConfig,
 
 
 @partial(jax.jit, static_argnames=("n_servers", "n_bins", "block"))
-def _sweep_chunk(free: Array, ssum: Array, comp: Array, hist: Array,
-                 unit_gaps: Array, servers: Array, services: Array,
-                 start: Array, n_valid: Array, warmup_start: Array,
-                 rates: Array, k_mask: Array, ovh_vec: Array, *,
-                 n_servers: int, n_bins: int, block: int):
-    """Distribution-agnostic fused core over ONE chunk of arrivals.
+def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
+                       unit_gaps: Array, servers: Array, services: Array,
+                       start: Array, n_valid: Array, warmup_start: Array,
+                       seed_idx: Array, rates: Array, k_mask: Array,
+                       ovh: Array, *, n_servers: int, n_bins: int,
+                       block: int):
+    """Distribution-agnostic fused core over ONE chunk of arrivals, on a
+    flat cell axis (see ``repro.core.cellplan``).
 
-    Carry threaded across chunks: ``free`` (S,B,K,N) server-free times
-    RELATIVE to the chunk-start arrival time, ``ssum``/``comp`` (S,B,K)
-    Kahan mean state, ``hist`` (S*B*K, n_bins) sketch counts (shape (0, 0)
-    skips the sketch). Per-chunk inputs: ``unit_gaps`` (S,T), ``servers``/
-    ``services`` (S,T,k_max), ``start`` = global index of the chunk's
-    first step, ``n_valid`` = real (non-padding) steps. Steps past
-    ``n_valid`` are masked to zero-gap / zero-service / zero-weight no-ops
-    — they can only bump an idle server's free time up to the chunk-end
-    arrival time, which no later arrival (all at times >= it) can observe.
+    Per-cell carry threaded across chunks: ``free`` (C,N) server-free
+    times RELATIVE to the chunk-start arrival time, ``ssum``/``comp``
+    (C,) Kahan mean state, ``hist`` (C, n_bins) sketch counts (shape
+    (0, 0) skips the sketch). Sampled inputs stay at SEED granularity —
+    ``unit_gaps`` (S,T), ``servers``/``services`` (S,T,k_max) — and
+    ``seed_idx`` (C,) maps each cell to its input row, so one sampled
+    row is shared by all (load, k) cells of a seed: the gather happens
+    per scan step on a (S,k_max) slice, and the (C,T,...) expansion is
+    never materialized. The sharded driver runs this same body per
+    shard with the inputs replicated and ``seed_idx`` restricted to the
+    local cells (global seed indices, sharded over the mesh).
+    ``rates``/``ovh`` (C,) and ``k_mask`` (C,k_max) are per-cell
+    parameters gathered from the plan's coordinates.
 
-    When the sketch is on, the scan is staged in ``block``-step sub-blocks
-    whose responses are folded into ``hist`` by the Pallas hist_sketch
-    kernel — no per-step scatter, no (S,B,K,T) materialization beyond one
-    block. Returns the carry with ``free`` rebased to the chunk-end time.
+    ``start`` is the global index of the chunk's first step; ``n_valid``
+    the real (non-padding) steps. Steps past ``n_valid`` are masked to
+    zero-gap / zero-service / zero-weight no-ops — they can only bump an
+    idle server's free time up to the chunk-end arrival time, which no
+    later arrival (all at times >= it) can observe.
+
+    When the sketch is on, the scan is staged in ``block``-step
+    sub-blocks whose responses are folded into ``hist`` by the Pallas
+    hist_sketch kernel — no per-step scatter, no (C,T) materialization
+    beyond one block. Returns the carry with ``free`` rebased to the
+    chunk-end time.
     """
     S, T = unit_gaps.shape
     need_hist = hist.size > 0
@@ -298,23 +331,30 @@ def _sweep_chunk(free: Array, ssum: Array, comp: Array, hist: Array,
     services = services * valid[None, :, None]
     cum = jnp.cumsum(gaps, axis=1)      # (S, T) offsets from chunk start
 
-    # vmap the single-cell step over k, then loads, then seeds.
-    cell_k = jax.vmap(_step_cell, in_axes=(0, None, None, None, 0, 0))
-    cell_bk = jax.vmap(cell_k, in_axes=(0, 0, None, None, None, None))
-    cell_sbk = jax.vmap(cell_bk, in_axes=(0, 0, 0, 0, None, None))
+    cell_c = jax.vmap(_step_cell)       # one lane per cell of the flat axis
 
     def step(carry, inp):
         free, ssum, comp = carry
-        c, w, srv, svc = inp
-        t = c[:, None] / rates[None, :]                       # (S, B)
-        free, resp = cell_sbk(free, t, srv, svc, k_mask, ovh_vec)
+        c, w, srv, svc = inp                          # (S,), (), (S,k), (S,k)
+        t = c[seed_idx] / rates                       # (C,)
+        free, resp = cell_c(free, t, srv[seed_idx], svc[seed_idx],
+                            k_mask, ovh)
         # Kahan-compensated sum: sequential f32 accumulation over ~1e5+
         # terms would otherwise cost ~1e-4 relative error on the mean,
-        # which is the signal threshold bisection keys on.
-        y = resp * w - comp
+        # which is the signal threshold bisection keys on. Two guards
+        # keep the update's rounding EXACTLY the same in every
+        # compilation (the sharded-vs-unsharded bit-identity contract):
+        # the 0/1 warmup weight is applied via select, not multiply (a
+        # `resp * w - comp` multiply-subtract invites FMA contraction),
+        # and an optimization_barrier hides `tot` from XLA's algebraic
+        # simplifier, which would otherwise rewrite `(tot - ssum) - y`
+        # — compensation terms it sees as algebraically zero — depending
+        # on the surrounding fusion context.
+        y = jnp.where(w > 0, resp, 0.0) - comp
         tot = ssum + y
-        comp = (tot - ssum) - y
-        return (free, tot, comp), (resp if need_hist else None)
+        tot_b, y_b = jax.lax.optimization_barrier((tot, y))
+        comp = (tot_b - ssum) - y_b
+        return (free, tot_b, comp), (resp if need_hist else None)
 
     xs = (cum.T, warm, jnp.moveaxis(servers, 1, 0),
           jnp.moveaxis(services, 1, 0))
@@ -326,8 +366,8 @@ def _sweep_chunk(free: Array, ssum: Array, comp: Array, hist: Array,
             free, ssum, comp, hist = carry
             (free, ssum, comp), resp = jax.lax.scan(
                 step, (free, ssum, comp), xs_blk)
-            idx = hist_ops.bin_indices(resp.reshape(block, -1),
-                                       xs_blk[1][:, None], n_bins=n_bins)
+            idx = hist_ops.bin_indices(resp, xs_blk[1][:, None],
+                                       n_bins=n_bins)
             hist = hist + hist_ops.hist_accum(idx, n_bins=n_bins,
                                               block_t=block)
             return (free, ssum, comp, hist), None
@@ -338,68 +378,147 @@ def _sweep_chunk(free: Array, ssum: Array, comp: Array, hist: Array,
         (free, ssum, comp), _ = jax.lax.scan(step, (free, ssum, comp), xs)
 
     # rebase to the chunk-end arrival time so floats stay O(chunk duration)
-    free = free - (cum[:, -1][:, None] / rates[None, :])[..., None, None]
+    free = free - (cum[:, -1][seed_idx] / rates)[:, None]
     return free, ssum, comp, hist
 
 
-def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
-                ks: tuple[int, ...], percentiles: tuple[float, ...],
-                n_bins: int, chunk_size: int | None) -> dict[str, Array]:
-    """Drive ``_sweep_chunk`` over the whole arrival stream.
+# --- plan construction / finalization shared by both execution layers ----
 
-    ``sampler(chunk_idx, chunk_len)`` returns that chunk's
-    ``(unit_gaps (S,T), servers (S,T,k_max), services (S,T,k_max))`` —
-    one call over the full stream when ``chunk_size`` is None.
-    """
+def _plan_cell_params(plan: cellplan.CellPlan, rhos: Array, cfg: SimConfig,
+                      ks: tuple[int, ...]):
+    """Per-cell engine parameters gathered from the plan's coordinates:
+    arrival rates (C,), copy masks (C,k_max), client overheads (C,)."""
     k_max = max(ks)
-    K = len(ks)
-    S, B = n_seeds_total, rhos.shape[0]
-    rates = cfg.n_servers * rhos
+    rates = cfg.n_servers * jnp.asarray(rhos)
     k_mask = jnp.asarray([[j < k for j in range(k_max)] for k in ks])
-    ovh_vec = jnp.asarray(
+    ovh = jnp.asarray(
         [cfg.client_overhead if k > 1 else 0.0 for k in ks], jnp.float32)
-    m = cfg.n_arrivals
-    warmup_start = int(m * cfg.warmup_frac)
-    need_hist = len(percentiles) > 0
+    return rates[plan.load_idx], k_mask[plan.k_idx], ovh[plan.k_idx]
 
-    free = jnp.zeros((S, B, K, cfg.n_servers))
-    ssum = comp = jnp.zeros((S, B, K))
-    hist = (jnp.zeros((S * B * K, n_bins)) if need_hist
+
+def _init_cell_state(plan: cellplan.CellPlan, cfg: SimConfig, n_bins: int,
+                     need_hist: bool):
+    """Zeroed per-cell carry: free times, Kahan state, sketch counts."""
+    free = jnp.zeros((plan.n_padded, cfg.n_servers))
+    ssum = comp = jnp.zeros((plan.n_padded,))
+    hist = (jnp.zeros((plan.n_padded, n_bins)) if need_hist
             else jnp.zeros((0, 0)))
+    return free, ssum, comp, hist
 
+
+def _chunk_layout(cfg: SimConfig, chunk_size: int | None, need_hist: bool):
+    """(chunk length, #chunks, sketch block, pad-to-block) of a stream."""
+    m = cfg.n_arrivals
     t_chunk = m if chunk_size is None else min(int(chunk_size), m)
     n_chunks = math.ceil(m / t_chunk)
     block = min(_SKETCH_BLOCK, t_chunk)
     pad = (-t_chunk) % block if need_hist else 0
+    return t_chunk, n_chunks, block, pad
 
-    for c in range(n_chunks):
-        unit_gaps, servers, services = sampler(c, t_chunk)
-        if pad:
-            unit_gaps = jnp.pad(unit_gaps, ((0, 0), (0, pad)))
-            servers = jnp.pad(servers, ((0, 0), (0, pad), (0, 0)))
-            services = jnp.pad(services, ((0, 0), (0, pad), (0, 0)))
-        start = c * t_chunk
-        free, ssum, comp, hist = _sweep_chunk(
-            free, ssum, comp, hist, unit_gaps, servers, services,
-            jnp.asarray(start), jnp.asarray(min(t_chunk, m - start)),
-            jnp.asarray(warmup_start), rates, k_mask, ovh_vec,
-            n_servers=cfg.n_servers, n_bins=n_bins, block=block)
 
-    count = m - warmup_start
-    out: dict[str, Array] = {"mean": ssum / count, "count": count}
-    if need_hist:
+def _pad_chunk_inputs(unit_gaps: Array, servers: Array, services: Array,
+                      pad: int):
+    """Zero-pad a chunk's sampled inputs up to the sketch-block multiple."""
+    if pad:
+        unit_gaps = jnp.pad(unit_gaps, ((0, 0), (0, pad)))
+        servers = jnp.pad(servers, ((0, 0), (0, pad), (0, 0)))
+        services = jnp.pad(services, ((0, 0), (0, pad), (0, 0)))
+    return unit_gaps, servers, services
+
+
+def _finalize_summary(plan: cellplan.CellPlan, ssum: Array, hist: Array,
+                      count: int,
+                      percentiles: tuple[float, ...]) -> dict[str, Array]:
+    """Per-cell streaming state -> stacked (S,B,K) summaries. This is the
+    single point where the sharded executor's device-local buffers are
+    gathered (``unflatten`` slices pad cells away first, so they cannot
+    contribute to any summary)."""
+    out: dict[str, Array] = {
+        "mean": cellplan.unflatten(plan, ssum) / count, "count": count}
+    if len(percentiles) > 0:
         quant = hist_ops.sketch_quantiles(
-            hist.reshape(S, B, K, n_bins),
+            cellplan.unflatten(plan, hist),
             jnp.asarray(percentiles, jnp.float32))            # (Q,S,B,K)
         for qi, p in enumerate(percentiles):
             out[f"p{p:g}"] = quant[qi]
     return out
 
 
+def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
+                ks: tuple[int, ...], percentiles: tuple[float, ...],
+                n_bins: int, chunk_size: int | None) -> dict[str, Array]:
+    """Drive ``_sweep_chunk_cells`` over the whole arrival stream on one
+    device: unpadded cell plan, seed-level sampled inputs shared by each
+    seed's (load, k) cells.
+
+    ``sampler(chunk_idx, chunk_len)`` returns that chunk's
+    ``(unit_gaps (S,T), servers (S,T,k_max), services (S,T,k_max))`` —
+    one call over the full stream when ``chunk_size`` is None.
+    """
+    m = cfg.n_arrivals
+    plan = cellplan.make_cell_plan(n_seeds_total, rhos.shape[0], len(ks))
+    rates_c, k_mask_c, ovh_c = _plan_cell_params(plan, rhos, cfg, ks)
+    warmup_start = int(m * cfg.warmup_frac)
+    need_hist = len(percentiles) > 0
+    t_chunk, n_chunks, block, pad = _chunk_layout(cfg, chunk_size, need_hist)
+    free, ssum, comp, hist = _init_cell_state(plan, cfg, n_bins, need_hist)
+
+    for c in range(n_chunks):
+        unit_gaps, servers, services = _pad_chunk_inputs(
+            *sampler(c, t_chunk), pad)
+        start = c * t_chunk
+        free, ssum, comp, hist = _sweep_chunk_cells(
+            free, ssum, comp, hist, unit_gaps, servers, services,
+            jnp.asarray(start), jnp.asarray(min(t_chunk, m - start)),
+            jnp.asarray(warmup_start), plan.seed_idx, rates_c, k_mask_c,
+            ovh_c, n_servers=cfg.n_servers, n_bins=n_bins, block=block)
+
+    return _finalize_summary(plan, ssum, hist, m - warmup_start,
+                             percentiles)
+
+
 def _chunk_key(key: Array, chunk_idx: int, chunk_size: int | None) -> Array:
     """The key-splitting contract: chunk c draws from fold_in(key, c);
     the unchunked stream consumes ``key`` itself (PR 2 compatible)."""
     return key if chunk_size is None else jax.random.fold_in(key, chunk_idx)
+
+
+def _sweep_sampler(key: Array, dist: ServiceDist, cfg: SimConfig,
+                   k_max: int, n_seeds: int, chunk_size: int | None):
+    """The per-chunk sampler closure behind ``sweep``. Shared — by this
+    exact function, not a copy — with the sharded executor, so the two
+    paths cannot drift apart on the CRN-critical sampling code the
+    bit-identity contract depends on."""
+
+    def sampler(c: int, t: int):
+        ccfg = dataclasses.replace(cfg, n_arrivals=t)
+        return _sample_sweep_inputs(_chunk_key(key, c, chunk_size), dist,
+                                    ccfg, k_max, n_seeds)
+
+    return sampler
+
+
+def _sweep_dists_sampler(key: Array, dist_list, cfg: SimConfig,
+                         k_max: int, n_seeds: int,
+                         chunk_size: int | None):
+    """The per-chunk sampler closure behind ``sweep_dists`` (shared with
+    the sharded executor, like ``_sweep_sampler``). Every distribution
+    sees the same key, hence the same arrival process and copy sets
+    (CRN across dists): arrivals are sampled once and tiled."""
+    d = len(dist_list)
+
+    def sampler(c: int, t: int):
+        ck = _chunk_key(key, c, chunk_size)
+        ccfg = dataclasses.replace(cfg, n_arrivals=t)
+        gaps1, servers1 = _sample_sweep_arrivals(
+            ck, cfg.n_servers, t, k_max, n_seeds)
+        services = jnp.concatenate(
+            [_sample_sweep_services(ck, dd, ccfg, k_max, n_seeds)
+             for dd in dist_list], axis=0)
+        return (jnp.tile(gaps1, (d, 1)), jnp.tile(servers1, (d, 1, 1)),
+                services)
+
+    return sampler
 
 
 def sweep(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig, *,
@@ -434,11 +553,7 @@ def sweep(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig, *,
     k_max = max(ks)
     rhos = jnp.asarray(rhos)
 
-    def sampler(c: int, t: int):
-        ccfg = dataclasses.replace(cfg, n_arrivals=t)
-        return _sample_sweep_inputs(_chunk_key(key, c, chunk_size), dist,
-                                    ccfg, k_max, n_seeds)
-
+    sampler = _sweep_sampler(key, dist, cfg, k_max, n_seeds, chunk_size)
     return _run_engine(sampler, n_seeds, rhos, cfg, ks=ks,
                        percentiles=tuple(percentiles), n_bins=n_bins,
                        chunk_size=chunk_size)
@@ -459,19 +574,8 @@ def sweep_dists(key: Array, dist_list, rhos: Array, cfg: SimConfig, *,
     rhos = jnp.asarray(rhos)
     d = len(dist_list)
 
-    def sampler(c: int, t: int):
-        ck = _chunk_key(key, c, chunk_size)
-        ccfg = dataclasses.replace(cfg, n_arrivals=t)
-        # every distribution sees the same key, hence the same arrival
-        # process and copy sets (CRN across dists): sample once and tile.
-        gaps1, servers1 = _sample_sweep_arrivals(
-            ck, cfg.n_servers, t, k_max, n_seeds)
-        services = jnp.concatenate(
-            [_sample_sweep_services(ck, dd, ccfg, k_max, n_seeds)
-             for dd in dist_list], axis=0)
-        return (jnp.tile(gaps1, (d, 1)), jnp.tile(servers1, (d, 1, 1)),
-                services)
-
+    sampler = _sweep_dists_sampler(key, dist_list, cfg, k_max, n_seeds,
+                                   chunk_size)
     out = _run_engine(sampler, d * n_seeds, rhos, cfg, ks=ks,
                       percentiles=tuple(percentiles), n_bins=n_bins,
                       chunk_size=chunk_size)
@@ -491,9 +595,19 @@ def mean_response(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig,
 
 def replication_gain(key: Array, dist: ServiceDist, rhos: Array,
                      cfg: SimConfig, k: int = 2, n_seeds: int = 2,
-                     chunk_size: int | None = None) -> Array:
-    """mean_k1(rho) - mean_k(rho), CRN-paired per seed. Positive = k helps."""
-    out = sweep(key, dist, rhos, cfg, ks=(1, k), n_seeds=n_seeds,
-                percentiles=(), chunk_size=chunk_size)
+                     chunk_size: int | None = None,
+                     mesh: jax.sharding.Mesh | None = None) -> Array:
+    """mean_k1(rho) - mean_k(rho), CRN-paired per seed. Positive = k helps.
+
+    ``mesh`` routes the sweep through the sharded cell-plan executor
+    (bit-identical to the local path; see the module CRN contract)."""
+    if mesh is not None:
+        from repro.distributed.sweep_shard import sweep_sharded
+        out = sweep_sharded(key, dist, rhos, cfg, ks=(1, k),
+                            n_seeds=n_seeds, percentiles=(),
+                            chunk_size=chunk_size, mesh=mesh)
+    else:
+        out = sweep(key, dist, rhos, cfg, ks=(1, k), n_seeds=n_seeds,
+                    percentiles=(), chunk_size=chunk_size)
     m = out["mean"]  # (S, B, 2)
     return jnp.mean(m[:, :, 0] - m[:, :, 1], axis=0)

@@ -8,7 +8,11 @@ case), approaching 50% for sufficiently heavy-tailed service.
 Three estimators, all driven by the fused sweep engine in
 ``repro.core.queueing`` (one jitted scan per evaluation, batched over
 seeds x loads x k; every estimator takes ``chunk_size`` and streams the
-engine when it is set):
+engine when it is set, and ``mesh`` to route every probe batch through
+the sharded cell-plan executor ``repro.distributed.sweep_shard`` — the
+probe loads ride the engine's flattened cell axis, so one sharded call
+still serves a whole bracket, and results stay bit-identical to the
+unsharded path):
 
   * ``threshold_bisect`` — bisection on the sign of the CRN-paired gain
     mean_k1(rho) - mean_k2(rho). Both bracket probes ride in a single
@@ -40,11 +44,25 @@ def _paired_gain(mean: Array) -> Array:
     return jnp.mean(mean[:, :, 0] - mean[:, :, 1], axis=0)
 
 
+def _engines(mesh):
+    """(sweep, sweep_dists) — local pair, or the sharded cell-plan
+    executors bound to ``mesh`` (bit-identical; lazy import keeps
+    core free of the distributed layer unless sharding is requested)."""
+    if mesh is None:
+        return sweep, sweep_dists
+    from functools import partial
+
+    from repro.distributed import sweep_shard
+    return (partial(sweep_shard.sweep_sharded, mesh=mesh),
+            partial(sweep_shard.sweep_dists_sharded, mesh=mesh))
+
+
 def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
                      k: int = 2, lo: float = 0.02, hi: float = 0.499,
                      iters: int = 10, n_seeds: int = 3,
                      speculative: bool = True,
-                     chunk_size: int | None = None) -> float:
+                     chunk_size: int | None = None,
+                     mesh=None) -> float:
     """Speculative bisection on the CRN-paired replication gain.
 
     Assumes the gain changes sign once on [lo, hi] (true for every family the
@@ -58,10 +76,12 @@ def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
     bisection LEVELS either way, so the interval shrinks by 2**iters with
     about half the engine calls.
     """
+    sweep_fn, _ = _engines(mesh)
     keys = jax.random.split(key, iters + 1)
     # both bracket probes in one batched (seeds x {lo,hi} x {1,k}) sweep
-    bracket = sweep(keys[-1], dist, jnp.asarray([lo, hi]), cfg, ks=(1, k),
-                    n_seeds=n_seeds, percentiles=(), chunk_size=chunk_size)
+    bracket = sweep_fn(keys[-1], dist, jnp.asarray([lo, hi]), cfg,
+                       ks=(1, k), n_seeds=n_seeds, percentiles=(),
+                       chunk_size=chunk_size)
     g_lo, g_hi = (float(g) for g in _paired_gain(bracket["mean"]))
     if g_hi > 0.0:
         return hi
@@ -74,9 +94,9 @@ def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
         if speculative and level + 1 < iters:
             # midpoint + both possible next midpoints, one engine call
             probes = jnp.asarray([0.5 * (a + mid), mid, 0.5 * (mid + b)])
-            out = sweep(keys[call], dist, probes, cfg, ks=(1, k),
-                        n_seeds=n_seeds, percentiles=(),
-                        chunk_size=chunk_size)
+            out = sweep_fn(keys[call], dist, probes, cfg, ks=(1, k),
+                           n_seeds=n_seeds, percentiles=(),
+                           chunk_size=chunk_size)
             g_q_lo, g_mid, g_q_hi = (float(g)
                                      for g in _paired_gain(out["mean"]))
             if g_mid > 0.0:
@@ -90,7 +110,8 @@ def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
             level += 2
         else:
             g = replication_gain(keys[call], dist, jnp.asarray([mid]), cfg,
-                                 k=k, n_seeds=n_seeds, chunk_size=chunk_size)
+                                 k=k, n_seeds=n_seeds, chunk_size=chunk_size,
+                                 mesh=mesh)
             if float(g[0]) > 0.0:
                 a = mid
             else:
@@ -121,26 +142,30 @@ def _default_rhos() -> Array:
 
 def threshold_grid(key: Array, dist: ServiceDist, cfg: SimConfig, *,
                    k: int = 2, rhos: Array | None = None, n_seeds: int = 2,
-                   chunk_size: int | None = None) -> float:
+                   chunk_size: int | None = None, mesh=None) -> float:
     """ONE fused sweep over the load grid + crossing interpolation."""
     if rhos is None:
         rhos = _default_rhos()
     g = replication_gain(key, dist, rhos, cfg, k=k, n_seeds=n_seeds,
-                         chunk_size=chunk_size)
+                         chunk_size=chunk_size, mesh=mesh)
     return _interp_crossing(rhos, g)
 
 
 def threshold_grid_batch(key: Array, dist_list, cfg: SimConfig, *,
                          k: int = 2, rhos: Array | None = None,
                          n_seeds: int = 2,
-                         chunk_size: int | None = None) -> list[float]:
+                         chunk_size: int | None = None,
+                         mesh=None) -> list[float]:
     """Thresholds for MANY distributions from a single fused engine call
     (distributions stack along the engine's seed axis, so e.g. all 15
-    Figure 2 families run in one scan)."""
+    Figure 2 families run in one scan — sharded over the cell axis when
+    ``mesh`` is given)."""
     if rhos is None:
         rhos = _default_rhos()
-    out = sweep_dists(key, dist_list, rhos, cfg, ks=(1, k), n_seeds=n_seeds,
-                      percentiles=(), chunk_size=chunk_size)
+    _, sweep_dists_fn = _engines(mesh)
+    out = sweep_dists_fn(key, dist_list, rhos, cfg, ks=(1, k),
+                         n_seeds=n_seeds, percentiles=(),
+                         chunk_size=chunk_size)
     m = out["mean"]  # (D, S, B, 2)
     g = jnp.mean(m[:, :, :, 0] - m[:, :, :, 1], axis=1)  # (D, B)
     return [_interp_crossing(rhos, g[d]) for d in range(len(dist_list))]

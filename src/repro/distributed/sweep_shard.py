@@ -1,0 +1,202 @@
+"""Sharded cell-plan execution layer for the chunked sweep engine.
+
+``sweep_sharded`` / ``sweep_dists_sharded`` are drop-in, BIT-IDENTICAL
+replacements for ``repro.core.queueing.sweep`` / ``sweep_dists`` that run
+the engine's per-chunk scan body under ``shard_map`` over a 1-D
+``"cells"`` device mesh (``repro.launch.mesh.make_sweep_mesh``). The
+(seed x load x k) grid — dist-stacked along the seed axis for
+``sweep_dists_sharded`` — is flattened by ``repro.core.cellplan`` into
+one cell axis padded to a multiple of the mesh size, and every device
+owns ``n_padded / n_devices`` cells end to end:
+
+  * Per-cell state is DEVICE-LOCAL for the whole stream: server
+    free-time grids, Kahan mean state, and hist_sketch rows live in the
+    local shard of the scan carry, and the Pallas histogram kernel runs
+    per shard on its local (block, C/D) response blocks — the kernel's
+    per-cell grid maps 1:1 onto the sharded axis. Nothing is
+    communicated between chunks.
+  * Cell randomness derives from cell COORDINATES, never device
+    placement: chunk ``c``, seed ``s`` draws from
+    ``split(fold_in(key, c), n_seeds)[s]`` through the exact unsharded
+    samplers, executed per seed on the host and broadcast into the mesh
+    (chunk inputs are O(S x chunk_size) — small by construction, that
+    is the point of chunking). Each device then gathers its own cells'
+    seed rows step-by-step inside the scan via the sharded
+    ``seed_idx`` map.
+  * The ONLY gather of results is at summary finalization
+    (``queueing._finalize_summary``), after the last chunk: pad cells
+    are sliced away there, so they never reach a mean or a histogram
+    summary.
+
+Why host-side sampling and not per-cell sampling inside the shard: XLA's
+codegen for the transcendental sampling transforms (log / pow) is only
+approximately rounded, and the chosen expansion varies with tensor shape
+and fusion context — a ``(C/D, T)``-shaped in-shard sampler produces
+1-ULP-different draws for different device counts D, silently breaking
+the CRN contract's sharding-invariance guarantee (observed on CPU at
+~17% of draws for T=1700). Sampling once per seed on the host keeps the
+op shapes — and therefore the bits — literally identical to the
+unsharded engine. For the same reason the chunk BODY is its own XLA
+program, mirroring the unsharded driver's sampler/body split, rather
+than being fused with anything else.
+
+Probe batches from ``threshold_bisect(mesh=...)`` ride the load axis of
+the plan, so one sharded engine call still serves all brackets.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cellplan, queueing
+from repro.core.distributions import ServiceDist
+from repro.launch.mesh import make_sweep_mesh
+
+try:  # public API (jax >= 0.6); the experimental module was removed
+    from jax import shard_map as _shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map).parameters else "check_rep")
+
+Array = jax.Array
+
+
+def _shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """shard_map with replication checking off: pallas_call (the
+    hist_sketch kernel) has no replication rule, and every spec we pass
+    is explicit — nothing is inferred."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: False})
+
+
+@functools.lru_cache(maxsize=None)
+def _body_fn(mesh: jax.sharding.Mesh, n_servers: int, n_bins: int,
+             block: int):
+    """Build (and cache) the jitted, shard_mapped chunk-body executor.
+
+    The carry and the per-cell parameters are sharded over ``"cells"``;
+    the seed-level sampled inputs are replicated (each device reads only
+    its cells' rows via the sharded ``seed_idx``). Cached per mesh so
+    repeated engine calls (threshold bisection!) reuse the wrapper and
+    its jit cache.
+    """
+    def chunk_body(free, ssum, comp, hist, seed_idx, rates, k_mask, ovh,
+                   unit_gaps, servers, services, start, n_valid,
+                   warmup_start):
+        return queueing._sweep_chunk_cells(
+            free, ssum, comp, hist, unit_gaps, servers, services, start,
+            n_valid, warmup_start, seed_idx, rates, k_mask, ovh,
+            n_servers=n_servers, n_bins=n_bins, block=block)
+
+    cells = P("cells")
+    return jax.jit(_shard_map_unchecked(
+        chunk_body, mesh,
+        in_specs=(cells,) * 8 + (P(),) * 6,
+        out_specs=(cells,) * 4))
+
+
+def _sweep_cells_sharded(sampler, n_seeds_total: int,
+                         rhos: Array, cfg: queueing.SimConfig, *,
+                         ks: tuple[int, ...],
+                         percentiles: tuple[float, ...], n_bins: int,
+                         chunk_size: int | None,
+                         mesh: jax.sharding.Mesh | None) -> dict[str, Array]:
+    """Drive the shard_mapped chunk body over the whole arrival stream.
+
+    ``sampler(chunk_idx, chunk_len)`` is the SAME host-side per-seed
+    sampler closure the unsharded ``_run_engine`` consumes — identical
+    randomness by construction.
+    """
+    mesh = make_sweep_mesh() if mesh is None else mesh
+    if tuple(mesh.axis_names) != ("cells",):
+        raise ValueError(f"expected a 1-D ('cells',) mesh "
+                         f"(make_sweep_mesh), got axes {mesh.axis_names}")
+    m = cfg.n_arrivals
+    plan = cellplan.make_cell_plan(n_seeds_total, rhos.shape[0], len(ks),
+                                   pad_to=mesh.devices.size)
+    rates_c, k_mask_c, ovh_c = queueing._plan_cell_params(plan, rhos, cfg,
+                                                          ks)
+    warmup_start = int(m * cfg.warmup_frac)
+    need_hist = len(percentiles) > 0
+    t_chunk, n_chunks, block, pad = queueing._chunk_layout(
+        cfg, chunk_size, need_hist)
+    free, ssum, comp, hist = queueing._init_cell_state(plan, cfg, n_bins,
+                                                       need_hist)
+    run_chunk = _body_fn(mesh, cfg.n_servers, n_bins, block)
+
+    for c in range(n_chunks):
+        unit_gaps, servers, services = queueing._pad_chunk_inputs(
+            *sampler(c, t_chunk), pad)
+        start = c * t_chunk
+        free, ssum, comp, hist = run_chunk(
+            free, ssum, comp, hist, plan.seed_idx, rates_c, k_mask_c,
+            ovh_c, unit_gaps, servers, services, jnp.asarray(start),
+            jnp.asarray(min(t_chunk, m - start)),
+            jnp.asarray(warmup_start))
+
+    return queueing._finalize_summary(plan, ssum, hist, m - warmup_start,
+                                      percentiles)
+
+
+def sweep_sharded(key: Array, dist: ServiceDist, rhos: Array,
+                  cfg: queueing.SimConfig, *, ks: tuple[int, ...] = (1, 2),
+                  n_seeds: int = 2,
+                  percentiles: tuple[float, ...]
+                  = queueing.DEFAULT_PERCENTILES,
+                  n_bins: int = queueing.DEFAULT_BINS,
+                  chunk_size: int | None = None,
+                  mesh: jax.sharding.Mesh | None = None) -> dict[str, Array]:
+    """``queueing.sweep`` across a device mesh: same signature plus
+    ``mesh`` (default: all visible devices), same summary shapes
+    ``(n_seeds, len(rhos), len(ks))``, and — per the CRN contract —
+    bit-identical results for the same ``(key, chunk_size)`` no matter
+    the device count."""
+    ks = tuple(int(k) for k in ks)
+    k_max = max(ks)
+    rhos = jnp.asarray(rhos)
+    # THE sampler queueing.sweep uses — shared code, not a copy, so the
+    # bit-identity contract cannot drift
+    sampler = queueing._sweep_sampler(key, dist, cfg, k_max, n_seeds,
+                                      chunk_size)
+    return _sweep_cells_sharded(
+        sampler, n_seeds, rhos, cfg, ks=ks,
+        percentiles=tuple(percentiles), n_bins=n_bins,
+        chunk_size=chunk_size, mesh=mesh)
+
+
+def sweep_dists_sharded(key: Array, dist_list, rhos: Array,
+                        cfg: queueing.SimConfig, *,
+                        ks: tuple[int, ...] = (1, 2), n_seeds: int = 2,
+                        percentiles: tuple[float, ...]
+                        = queueing.DEFAULT_PERCENTILES,
+                        n_bins: int = queueing.DEFAULT_BINS,
+                        chunk_size: int | None = None,
+                        mesh: jax.sharding.Mesh | None = None
+                        ) -> dict[str, Array]:
+    """``queueing.sweep_dists`` across a device mesh: distributions stack
+    along the plan's seed axis (every dist shares per-seed keys and the
+    same arrival process — CRN across dists), summaries come back
+    ``(len(dist_list), n_seeds, len(rhos), len(ks))``, bit-identical to
+    the unsharded engine."""
+    ks = tuple(int(k) for k in ks)
+    k_max = max(ks)
+    rhos = jnp.asarray(rhos)
+    dist_list = tuple(dist_list)
+    d = len(dist_list)
+
+    sampler = queueing._sweep_dists_sampler(key, dist_list, cfg, k_max,
+                                            n_seeds, chunk_size)
+    out = _sweep_cells_sharded(
+        sampler, d * n_seeds, rhos, cfg, ks=ks,
+        percentiles=tuple(percentiles), n_bins=n_bins,
+        chunk_size=chunk_size, mesh=mesh)
+    return {k: (v.reshape((d, n_seeds) + v.shape[1:])
+                if isinstance(v, jax.Array) else v)
+            for k, v in out.items()}

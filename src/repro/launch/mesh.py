@@ -19,3 +19,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_test_mesh(n_data: int = 2, n_model: int = 4) -> jax.sharding.Mesh:
     """Small mesh for CI tests (requires XLA host-device override)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_sweep_mesh(n_cells_axis: int | None = None) -> jax.sharding.Mesh:
+    """1-D mesh over the sweep engine's flattened cell axis.
+
+    ``repro.distributed.sweep_shard`` shards the (seed x load x k) cell
+    plan over the ``"cells"`` axis; the plan pads the cell count up to a
+    multiple of the mesh size, so any device count serves any grid.
+    ``n_cells_axis=None`` uses every visible device (on CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before
+    importing jax to get N virtual devices).
+    """
+    n = len(jax.devices()) if n_cells_axis is None else int(n_cells_axis)
+    return jax.make_mesh((n,), ("cells",))

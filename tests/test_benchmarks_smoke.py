@@ -37,11 +37,25 @@ def test_benchmark_entry_runs_smoke(name):
     rows = mod.run(smoke=True)
     assert isinstance(rows, list) and rows, name
     for row in rows:
-        label, us, derived = row
+        # sharded rows may carry a 4th element (mesh-shape provenance)
+        label, us, derived = row[:3]
         assert isinstance(label, str) and label
         assert float(us) >= 0.0
         assert isinstance(derived, str)
         assert "ERROR" not in label, (label, derived)
+
+
+def test_sweep_engine_sharded_rows_on_single_device_mesh():
+    """The mesh-aware path emits sharded rows with mesh provenance even
+    on a 1-device mesh (CI's multi-device job exercises 8)."""
+    import benchmarks.sweep_engine as se
+    from repro.launch.mesh import make_sweep_mesh
+    rows = se.run(smoke=True, mesh=make_sweep_mesh(1))
+    sharded = [r for r in rows if "sharded" in r[0]]
+    assert sharded, [r[0] for r in rows]
+    for row in sharded:
+        assert len(row) == 4 and tuple(row[3]) == (1,), row
+        assert "bit_identical=True" in row[2], row
 
 
 def test_fig12_accepts_chunked_engine_config():

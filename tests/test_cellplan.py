@@ -1,0 +1,98 @@
+"""Cell-plan tests: (S, B, K) <-> cell-axis round trips, padding mask
+correctness, and isolation of masked pad cells (they must never touch a
+real cell's Kahan mean or hist_sketch bins)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cellplan, distributions as dists, queueing
+
+
+class TestPlanCoordinates:
+    def test_c_order_coords(self):
+        plan = cellplan.make_cell_plan(2, 3, 2)
+        assert plan.n_cells == plan.n_padded == 12
+        assert plan.stacked_shape == (2, 3, 2)
+        for c in range(12):
+            s, b, k = c // 6, (c // 2) % 3, c % 2
+            assert (int(plan.seed_idx[c]), int(plan.load_idx[c]),
+                    int(plan.k_idx[c])) == (s, b, k)
+        assert bool(plan.valid.all())
+
+    def test_flatten_unflatten_roundtrip(self):
+        plan = cellplan.make_cell_plan(2, 3, 2, pad_to=8)  # 12 -> 16
+        x = jnp.arange(2 * 3 * 2 * 4.0).reshape(2, 3, 2, 4)
+        flat = cellplan.flatten(plan, x)
+        assert flat.shape == (16, 4)
+        assert jnp.array_equal(cellplan.unflatten(plan, flat), x)
+
+    def test_roundtrip_scalar_cells(self):
+        plan = cellplan.make_cell_plan(3, 2, 2, pad_to=5)  # 12 -> 15
+        x = jnp.arange(12.0).reshape(3, 2, 2)
+        assert jnp.array_equal(
+            cellplan.unflatten(plan, cellplan.flatten(plan, x)), x)
+
+    def test_padding_mask(self):
+        plan = cellplan.make_cell_plan(1, 3, 2, pad_to=8)  # 6 -> 8
+        assert (plan.n_cells, plan.n_padded) == (6, 8)
+        assert int(plan.valid.sum()) == 6
+        assert not bool(plan.valid[6:].any())
+        # pad cells alias cell 0's coordinates: finite, indexable work
+        assert jnp.array_equal(plan.seed_idx[6:], jnp.zeros(2, jnp.int32))
+        assert jnp.array_equal(plan.load_idx[6:], jnp.zeros(2, jnp.int32))
+        assert jnp.array_equal(plan.k_idx[6:], jnp.zeros(2, jnp.int32))
+
+    def test_divisible_needs_no_padding(self):
+        plan = cellplan.make_cell_plan(2, 2, 2, pad_to=8)
+        assert plan.n_cells == plan.n_padded == 8
+        assert bool(plan.valid.all())
+
+    def test_rejects_degenerate_axes(self):
+        with pytest.raises(ValueError):
+            cellplan.make_cell_plan(0, 3, 2)
+        with pytest.raises(ValueError):
+            cellplan.make_cell_plan(1, 1, 1, pad_to=0)
+
+
+class TestPadCellIsolation:
+    def test_pad_cells_never_contribute(self):
+        """Running the chunk body with a padded plan must leave every
+        valid cell's Kahan state and histogram rows bit-identical to the
+        unpadded run — pad cells do their (masked-off) work in their own
+        rows only."""
+        cfg = queueing.SimConfig(n_servers=5, n_arrivals=1024)
+        key = jax.random.PRNGKey(0)
+        ks = (1, 2)
+        rhos = jnp.asarray([0.2, 0.3, 0.4])
+        gaps, servers, services = queueing._sample_sweep_inputs(
+            key, dists.exponential(), cfg, 2, 1)
+
+        outs = {}
+        for pad_to in (1, 8):  # 6 cells -> unpadded vs padded to 8
+            plan = cellplan.make_cell_plan(1, 3, 2, pad_to=pad_to)
+            rates, k_mask, ovh = queueing._plan_cell_params(plan, rhos,
+                                                            cfg, ks)
+            state = queueing._init_cell_state(plan, cfg, 128, True)
+            state = queueing._sweep_chunk_cells(
+                *state, gaps, servers, services, jnp.asarray(0),
+                jnp.asarray(1024), jnp.asarray(100), plan.seed_idx,
+                rates, k_mask, ovh, n_servers=5, n_bins=128, block=512)
+            outs[pad_to] = state
+
+        for i, name in enumerate(("free", "ssum", "comp", "hist")):
+            a, b = outs[1][i], outs[8][i][:6]
+            assert jnp.array_equal(a, b), name
+
+    def test_finalize_drops_pad_cells(self):
+        plan = cellplan.make_cell_plan(1, 3, 2, pad_to=8)
+        ssum = jnp.arange(8.0)
+        # poison the pad rows: they must not reach the summary
+        ssum = ssum.at[6:].set(jnp.inf)
+        hist = jnp.zeros((8, 128)).at[:, 3].set(10.0)
+        hist = hist.at[6:].set(jnp.nan)
+        out = queueing._finalize_summary(plan, ssum, hist, 10, (99.0,))
+        assert out["mean"].shape == (1, 3, 2)
+        assert bool(jnp.all(jnp.isfinite(out["mean"])))
+        assert bool(jnp.all(jnp.isfinite(out["p99"])))
+        assert jnp.array_equal(out["mean"],
+                               (jnp.arange(6.0) / 10).reshape(1, 3, 2))

@@ -34,12 +34,34 @@ class TestHLOAnalysis:
         assert res["flops"] == pytest.approx(10 * one_matmul, rel=0.01)
 
     def test_collective_detection(self):
+        """A cross-device reduction must surface in ``collective_bytes``.
+
+        This branch needs real devices to compile a partitioned program;
+        skipping must be LOUD (a silent pass here once hid the fact that
+        no CI lane ever exercised collective detection — the multi-device
+        job runs it under 8 virtual devices)."""
         import jax
+        if jax.device_count() < 2:
+            pytest.skip("collective-detection branch NOT exercised: needs "
+                        ">= 2 devices (the multi-device CI job runs it "
+                        "under XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=8)")
         import jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch import hlo_analysis as ha
-        if jax.device_count() < 2:
-            pytest.skip("needs >1 device")
+
+        mesh = jax.make_mesh((2,), ("x",))
+        x = jax.device_put(jnp.ones((256, 128)),
+                           NamedSharding(mesh, P("x", None)))
+        w = jax.device_put(jnp.ones((128, 128)),
+                           NamedSharding(mesh, P(None, None)))
+        # row-sharded lhs, replicated output: forces a cross-device reduce
+        f = jax.jit(lambda a, b: (a @ b).sum(),
+                    out_shardings=NamedSharding(mesh, P()))
+        hlo = f.lower(x, w).compile().as_text()
+        res = ha.analyze(hlo)
+        assert sum(res["collective_bytes"].values()) > 0, \
+            res["collective_bytes"]
 
     def test_shape_bytes(self):
         from repro.launch.hlo_analysis import _shape_bytes

@@ -1,0 +1,155 @@
+"""Sharded cell-plan executor: bit-identity with the unsharded engine.
+
+The CRN contract (``queueing.py``) promises that for the same
+``(key, chunk_size)`` the sharded and unsharded engines agree BIT FOR
+BIT for any device count, because cell randomness derives from cell
+coordinates, never device placement.
+
+In-process tests run on a 1-device "cells" mesh — the full shard_map
+machinery without real sharding, so they execute in every tier-1 run.
+The subprocess test forces 8 host devices (the idiom of
+``test_distributed_exec.py``: the XLA override must not leak into the
+main test process) and checks cell counts both divisible and NOT
+divisible by the device count (exercising the pad/mask path), the
+dist-stacked driver, and threshold bisection.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import distributions as dists, queueing, threshold
+from repro.distributed import sweep_shard
+from repro.launch.mesh import make_sweep_mesh
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+CFG = queueing.SimConfig(n_servers=10, n_arrivals=6_000)
+RHOS = jnp.asarray([0.1, 0.3])
+
+
+def _assert_bit_identical(a, b, fields=("mean", "p50", "p99")):
+    assert a["count"] == b["count"]
+    for f in fields:
+        assert jnp.array_equal(a[f], b[f]), f
+
+
+class TestShardedSingleDeviceMesh:
+    def test_chunked_bit_identical(self):
+        key = jax.random.PRNGKey(0)
+        kw = dict(ks=(1, 2), n_seeds=2, chunk_size=1_700)  # ragged chunks
+        un = queueing.sweep(key, dists.exponential(), RHOS, CFG, **kw)
+        sh = sweep_shard.sweep_sharded(key, dists.exponential(), RHOS, CFG,
+                                       mesh=make_sweep_mesh(1), **kw)
+        _assert_bit_identical(un, sh)
+
+    def test_unchunked_bit_identical(self):
+        key = jax.random.PRNGKey(1)
+        kw = dict(ks=(1, 2), n_seeds=2)
+        un = queueing.sweep(key, dists.pareto(2.5), RHOS, CFG, **kw)
+        sh = sweep_shard.sweep_sharded(key, dists.pareto(2.5), RHOS, CFG,
+                                       mesh=make_sweep_mesh(1), **kw)
+        _assert_bit_identical(un, sh)
+
+    def test_sweep_dists_bit_identical(self):
+        key = jax.random.PRNGKey(2)
+        ds = (dists.exponential(), dists.two_point(0.9))
+        kw = dict(ks=(1, 2), n_seeds=2, percentiles=(), chunk_size=2_500)
+        un = queueing.sweep_dists(key, ds, RHOS, CFG, **kw)
+        sh = sweep_shard.sweep_dists_sharded(key, ds, RHOS, CFG,
+                                             mesh=make_sweep_mesh(1), **kw)
+        _assert_bit_identical(un, sh, fields=("mean",))
+        assert sh["mean"].shape == (2, 2, 2, 2)
+
+    def test_threshold_bisect_identical(self):
+        key = jax.random.PRNGKey(3)
+        kw = dict(iters=4, n_seeds=2, chunk_size=2_000)
+        t_un = threshold.threshold_bisect(key, dists.exponential(), CFG,
+                                          **kw)
+        t_sh = threshold.threshold_bisect(key, dists.exponential(), CFG,
+                                          mesh=make_sweep_mesh(1), **kw)
+        assert t_un == t_sh
+
+    def test_rejects_wrong_mesh_axes(self):
+        mesh = jax.make_mesh((1,), ("data",))
+        with pytest.raises(ValueError, match="cells"):
+            sweep_shard.sweep_sharded(jax.random.PRNGKey(0),
+                                      dists.exponential(), RHOS, CFG,
+                                      mesh=mesh)
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributions as dists, queueing, threshold
+from repro.distributed import sweep_shard
+from repro.launch.mesh import make_sweep_mesh
+
+assert jax.device_count() == 8
+mesh = make_sweep_mesh(8)
+cfg = queueing.SimConfig(n_servers=10, n_arrivals=5_000)
+key = jax.random.PRNGKey(0)
+
+def check(label, un, sh, fields=("mean", "p50", "p99")):
+    assert un["count"] == sh["count"], label
+    for f in fields:
+        assert jnp.array_equal(un[f], sh[f]), (label, f)
+    print(label, "bit-identical")
+
+# divisible: 2 seeds x 2 loads x 2 ks = 8 cells on 8 devices
+rhos = jnp.asarray([0.15, 0.35])
+kw = dict(ks=(1, 2), n_seeds=2, chunk_size=2_000)
+check("divisible",
+      queueing.sweep(key, dists.exponential(), rhos, cfg, **kw),
+      sweep_shard.sweep_sharded(key, dists.exponential(), rhos, cfg,
+                                mesh=mesh, **kw))
+
+# NOT divisible: 1 seed x 3 loads x 2 ks = 6 cells -> padded to 8
+rhos3 = jnp.asarray([0.1, 0.25, 0.4])
+kw = dict(ks=(1, 2), n_seeds=1, chunk_size=1_700)  # ragged final chunk
+check("non-divisible",
+      queueing.sweep(key, dists.pareto(2.5), rhos3, cfg, **kw),
+      sweep_shard.sweep_sharded(key, dists.pareto(2.5), rhos3, cfg,
+                                mesh=mesh, **kw))
+
+# unchunked, non-divisible
+kw = dict(ks=(1, 2), n_seeds=1)
+check("unchunked",
+      queueing.sweep(key, dists.two_point(0.9), rhos3, cfg, **kw),
+      sweep_shard.sweep_sharded(key, dists.two_point(0.9), rhos3, cfg,
+                                mesh=mesh, **kw))
+
+# dist-stacked, non-divisible: 2 dists x 1 seed x 3 loads x 2 ks = 12 -> 16
+ds = (dists.exponential(), dists.weibull(0.7))
+kw = dict(ks=(1, 2), n_seeds=1, percentiles=(), chunk_size=2_000)
+check("sweep_dists",
+      queueing.sweep_dists(key, ds, rhos3, cfg, **kw),
+      sweep_shard.sweep_dists_sharded(key, ds, rhos3, cfg, mesh=mesh,
+                                      **kw),
+      fields=("mean",))
+
+# threshold bisection: every probe batch rides the sharded cell axis
+kw = dict(iters=4, n_seeds=2, chunk_size=2_000)
+t_un = threshold.threshold_bisect(key, dists.exponential(), cfg, **kw)
+t_sh = threshold.threshold_bisect(key, dists.exponential(), cfg,
+                                  mesh=mesh, **kw)
+assert t_un == t_sh, (t_un, t_sh)
+print("threshold bit-identical")
+print("SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_matches_unsharded_8_devices():
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-2500:])
+    assert "SHARDED_OK" in out.stdout
