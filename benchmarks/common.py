@@ -1,16 +1,22 @@
 """Shared benchmark utilities: timing + CSV rows `name,us_per_call,derived`.
 
-Rows that executed under a device mesh may append a 4th element — the
-mesh shape tuple — which ``run.py`` records as the row's ``mesh``
-provenance in the JSON artifact (3-element rows get ``mesh: null``).
+Rows may append provenance elements past the 3-tuple core:
+
+  * 4th — the mesh shape tuple the row executed under (``None`` /
+    absent for unsharded rows); ``run.py`` records it as the row's
+    ``mesh`` field in the JSON artifact.
+  * 5th — the row's scenario provenance (``repro.core.scenario
+    .provenance``: policy, service model, mix, ks, overhead, dists) or
+    ``None``; ``run.py`` records it as the row's ``scenario`` field so
+    BENCH_*.json trajectories say WHICH point of the policy space they
+    measured.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Optional, Union
 
-Row = tuple[str, float, str]
-ShardedRow = tuple[str, float, str, tuple[int, ...]]
+Row = tuple  # (name, us, derived[, mesh_shape[, scenario]])
 
 
 def timed(fn: Callable[[], Any]) -> tuple[Any, float]:
@@ -19,6 +25,15 @@ def timed(fn: Callable[[], Any]) -> tuple[Any, float]:
     return out, (time.perf_counter() - t0) * 1e6
 
 
+def row_provenance(row: Row) -> tuple[Optional[list], Union[dict, list,
+                                                            None]]:
+    """(mesh, scenario) provenance of a row, tolerating the short forms."""
+    mesh = list(row[3]) if len(row) > 3 and row[3] is not None else None
+    scn = row[4] if len(row) > 4 else None
+    return mesh, scn
+
+
 def emit(rows: list[Row]) -> None:
-    for name, us, derived in rows:
+    for row in rows:
+        name, us, derived = row[:3]
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,89 @@
+"""Policy-space figure: Shah et al.'s headline crossover on the scenario
+engine — replication (k=2, replicate-all) helps exponential service at a
+load below the paper's 1/3 threshold under i.i.d. service, but HURTS once
+service times are server-dependent (the request-component ``mix`` -> 1
+collapses the threshold toward ~0.28), while Joshi-style cancellation
+(``CANCEL_ON_COMPLETE``) keeps replication profitable at every probed
+load.
+
+The whole (policy x model x mix x k x load) grid is ONE mixed-policy
+``queueing.run`` call — every variant rides the same cell plan and the
+same compiled scan body, sharded over ``mesh`` when ``run.py --devices``
+hands one in. Each row carries its scenario as JSON provenance
+(``benchmarks/run.py`` records it per row).
+
+Emits one row per scenario (CRN-paired gain at each probe load) plus a
+``fig_policy_space/crossover`` summary row asserting the headline:
+``gain_iid > 0 > gain_server_dependent`` at the probe load between the
+two thresholds."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core import distributions as dists, queueing, scenario as scn_mod
+from repro.core.scenario import CANCEL_ON_COMPLETE, SERVER_DEPENDENT, Scenario
+
+CFG = queueing.SimConfig(n_servers=20, n_arrivals=200_000)
+CHUNK = 4_096
+# 0.15: replication helps everywhere it is stable; 0.30: between the
+# server-dependent threshold (~0.28 at mix=1) and the paper's 1/3.
+RHOS = (0.15, 0.30)
+MIXES = (0.5, 1.0)
+
+
+def _scenarios() -> list[tuple[str, Scenario]]:
+    d = dists.exponential()
+    entries = [("iid", Scenario.paper_default(d, ks=(1, 2)))]
+    for mx in MIXES:
+        entries.append((f"server_dep_mix{mx:g}",
+                        Scenario(dists=d, service_model=SERVER_DEPENDENT,
+                                 mix=mx, ks=(1, 2))))
+    entries.append(("cancel",
+                    Scenario(dists=d, policy=CANCEL_ON_COMPLETE,
+                             ks=(1, 2))))
+    return entries
+
+
+def run(smoke: bool = False, mesh=None) -> list[Row]:
+    key = jax.random.PRNGKey(2)
+    cfg = (queueing.SimConfig(n_servers=20, n_arrivals=6_000) if smoke
+           else CFG)
+    n_seeds = 2 if smoke else 3
+    entries = _scenarios()
+    rhos = jnp.asarray(RHOS)
+    mesh_shape = tuple(mesh.devices.shape) if mesh is not None else None
+
+    t0 = time.perf_counter()
+    out = queueing.run(key, tuple(s for _, s in entries), rhos, cfg,
+                       n_seeds=n_seeds, percentiles=(), chunk_size=CHUNK,
+                       mesh=mesh)
+    jax.block_until_ready(out["mean"])
+    total_us = (time.perf_counter() - t0) * 1e6
+    m = jnp.mean(out["mean"], axis=0)  # (B, 2 * n_scenarios)
+
+    rows: list[Row] = []
+    gains = {}
+    for j, (name, scn) in enumerate(entries):
+        g = {r: float(m[i, 2 * j] - m[i, 2 * j + 1])
+             for i, r in enumerate(RHOS)}
+        gains[name] = g
+        derived = ";".join(f"gain@rho{r:g}={v:+.4f}" for r, v in g.items())
+        rows.append((f"fig_policy_space/{name}", total_us / len(entries),
+                     derived, mesh_shape, scn_mod.provenance(scn)))
+
+    # the headline: between the thresholds, IID helps and
+    # server-dependence flips the sign; cancellation helps everywhere.
+    rho_x = RHOS[-1]
+    crossover = (gains["iid"][rho_x] > 0.0
+                 > gains[f"server_dep_mix{MIXES[-1]:g}"][rho_x])
+    rows.append(("fig_policy_space/crossover", total_us,
+                 f"rho={rho_x};crossover={crossover};"
+                 f"cancel_helps_everywhere="
+                 f"{all(v > 0 for v in gains['cancel'].values())};"
+                 f"scenarios={len(entries)};seeds={n_seeds}",
+                 mesh_shape, None))
+    return rows

@@ -1,12 +1,16 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. ``--only fig14`` runs one module.
+Prints ``name,us_per_call,derived`` CSV. ``--only fig14`` runs one module
+(repeatable: ``--only sweep_engine --only fig_policy_space``).
 ``--json PATH`` additionally writes the rows as a JSON list so the perf
 trajectory is machine-readable across PRs (e.g. ``--json
 BENCH_queueing.json``). Each JSON row records execution provenance next
-to the measurement — ``backend`` / ``device_count`` of the process plus
-the ``mesh`` shape the row ran under (``null`` for unsharded rows) — so
-BENCH_*.json trajectories are comparable across machines.
+to the measurement — ``backend`` / ``device_count`` of the process, the
+``mesh`` shape the row ran under (``null`` for unsharded rows), and the
+``scenario`` the row measured (policy / service model / mix, from
+``repro.core.scenario.provenance``; ``null`` for rows that are not a
+queueing-scenario measurement) — so BENCH_*.json trajectories are
+comparable across machines AND across points of the policy space.
 ``--smoke`` runs every module at tiny sizes — CI uses ``--json --smoke``
 to refresh the perf-trajectory artifact on every push without paying for
 full-size sweeps. ``--devices N`` builds an N-way ``"cells"`` sweep mesh
@@ -30,8 +34,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="substring filter on module names")
+    ap.add_argument("--only", action="append", default=None,
+                    help="substring filter on module names (repeatable)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH as a JSON list")
     ap.add_argument("--smoke", action="store_true",
@@ -56,11 +60,13 @@ def main() -> None:
 
     from benchmarks import (fig1_queueing, fig2_threshold, fig3_random,
                             fig4_overhead, fig5_diskdb, fig12_memcached,
-                            fig14_network, fig15_dns, roofline,
-                            serving_hedge, sweep_engine, tab_tcp)
-    modules = [sweep_engine, fig1_queueing, fig2_threshold, fig3_random,
-               fig4_overhead, fig5_diskdb, fig12_memcached, fig14_network,
-               fig15_dns, tab_tcp, serving_hedge, roofline]
+                            fig14_network, fig15_dns, fig_policy_space,
+                            roofline, serving_hedge, sweep_engine, tab_tcp)
+    from benchmarks.common import row_provenance
+    modules = [sweep_engine, fig_policy_space, fig1_queueing,
+               fig2_threshold, fig3_random, fig4_overhead, fig5_diskdb,
+               fig12_memcached, fig14_network, fig15_dns, tab_tcp,
+               serving_hedge, roofline]
 
     provenance = {"backend": jax.default_backend(),
                   "device_count": jax.device_count()}
@@ -70,7 +76,7 @@ def main() -> None:
     t0 = time.time()
     for mod in modules:
         name = mod.__name__.split(".")[-1]
-        if args.only and args.only not in name:
+        if args.only and not any(o in name for o in args.only):
             continue
         kwargs = {"smoke": args.smoke}
         if mesh is not None and "mesh" in inspect.signature(
@@ -78,21 +84,21 @@ def main() -> None:
             kwargs["mesh"] = mesh
         try:
             for row in mod.run(**kwargs):
-                # rows are (name, us, derived) or, for sharded rows,
-                # (name, us, derived, mesh_shape) — see benchmarks.common
+                # rows are (name, us, derived[, mesh_shape[, scenario]])
+                # — see benchmarks.common
                 row_name, us, derived = row[:3]
-                row_mesh = (list(row[3])
-                            if len(row) > 3 and row[3] is not None else None)
+                row_mesh, row_scenario = row_provenance(row)
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
                 collected.append({"name": row_name,
                                   "us_per_call": round(us, 1),
                                   "derived": derived,
-                                  "mesh": row_mesh, **provenance})
+                                  "mesh": row_mesh,
+                                  "scenario": row_scenario, **provenance})
         except Exception as e:  # keep the harness going
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             collected.append({"name": f"{name}/ERROR", "us_per_call": 0,
                               "derived": f"{type(e).__name__}:{e}",
-                              "mesh": None, **provenance})
+                              "mesh": None, "scenario": None, **provenance})
             import traceback
             traceback.print_exc(file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)

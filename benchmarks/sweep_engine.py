@@ -34,11 +34,17 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, ShardedRow
+from benchmarks.common import Row
 from repro.core import distributions as dists
-from repro.core import queueing, threshold
+from repro.core import queueing, scenario as scn_mod, threshold
+from repro.core.scenario import Scenario
 
 CFG = queueing.SimConfig(n_servers=20, n_arrivals=50_000)
+
+
+def _paper_provenance(dist, ks=(1, 2)):
+    """Scenario provenance of a legacy paper-default sweep row."""
+    return scn_mod.provenance(Scenario.paper_default(dist, ks=ks))
 
 FAMILY_PARAMS = {
     "pareto": (6.0, 3.0, 2.5, 2.2, 2.05),
@@ -80,14 +86,14 @@ def _input_bytes(cfg: queueing.SimConfig, n: int, k_max: int = 2) -> int:
 
 
 def _sharded_rows(key, cfg: queueing.SimConfig, mesh,
-                  smoke: bool) -> list[ShardedRow]:
+                  smoke: bool) -> list[Row]:
     """Sharded-vs-unsharded on the chunked sweep + threshold batch: wall
     clock both ways, bit-identity asserted, mesh shape as provenance."""
     from repro.distributed.sweep_shard import sweep_sharded
 
     shape = tuple(mesh.devices.shape)
     n_dev = mesh.devices.size
-    rows: list[ShardedRow] = []
+    rows: list[Row] = []
 
     rhos = jnp.linspace(0.1, 0.4, 3 if smoke else 8)
     n_seeds = 2
@@ -110,7 +116,8 @@ def _sharded_rows(key, cfg: queueing.SimConfig, mesh,
     cells = n_seeds * rhos.shape[0] * 2
     rows.append((f"sweep_engine/sharded/sweep_d{n_dev}", sh_s * 1e6,
                  f"cells={cells};devices={n_dev};bit_identical={bit};"
-                 f"unsharded_s={un_s:.2f};sharded_s={sh_s:.2f}", shape))
+                 f"unsharded_s={un_s:.2f};sharded_s={sh_s:.2f}", shape,
+                 _paper_provenance(d)))
 
     fams = [dists.pareto(2.5), dists.weibull(0.7), dists.two_point(0.8)]
     t0 = time.perf_counter()
@@ -185,7 +192,8 @@ def run(smoke: bool = False, mesh=None) -> list[Row]:
                      f"delta={abs(th_un - th_ch):.4f};"
                      f"tol={grid_step:.3f};"
                      f"match={abs(th_un - th_ch) <= grid_step};"
-                     f"unchunked_s={un_s:.2f};chunked_s={ch_s:.2f}"))
+                     f"unchunked_s={un_s:.2f};chunked_s={ch_s:.2f}",
+                     None, _paper_provenance(dist)))
 
     # --- streamed large-n_arrivals sweep: peak input memory is set by
     # chunk_size, not n_arrivals --------------------------------------------
@@ -202,7 +210,8 @@ def run(smoke: bool = False, mesh=None) -> list[Row]:
                  f"input_kb_chunked={_input_bytes(big_cfg, CHUNK) // 1024};"
                  f"input_kb_presampled="
                  f"{_input_bytes(big_cfg, big_m) // 1024};"
-                 f"arrivals_per_s={big_m / big_s:.0f}"))
+                 f"arrivals_per_s={big_m / big_s:.0f}",
+                 None, _paper_provenance(dists.exponential())))
     rows.append(("sweep_engine/chunked_total", 0.0,
                  f"max_threshold_delta={chunk_delta:.4f};"
                  f"interp_tol={grid_step:.3f}"))

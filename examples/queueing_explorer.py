@@ -1,10 +1,19 @@
-"""Explore the replication queueing model interactively from the CLI:
-pick a service-time family and sweep loads / replication factors.
+"""Explore the replication policy space interactively from the CLI: pick a
+service-time family, a replication policy and a service model, and sweep
+loads / replication factors.
 
-The whole (load x k) table comes from ONE fused ``queueing.sweep`` call.
+The whole (load x k) table comes from ONE ``queueing.run`` call executing
+a declarative ``Scenario`` (policy, service model, mix, ks).
 
 Run:  PYTHONPATH=src python examples/queueing_explorer.py \
           --family pareto --param 2.1 --k 1 2 3
+
+``--policy cancel_on_complete`` switches to the Joshi et al. regime
+(losers vacate their queue slot at the winner's finish),
+``--policy replicate_to_idle`` only copies to idle servers, and
+``--service-model server_dependent --mix 0.8`` blends Shah et al.'s
+shared request component into every copy's service time (replication
+stops helping as ``--mix`` approaches 1).
 
 ``--chunk-size`` streams arrivals through the chunked engine so
 ``--arrivals`` can go into the millions without pre-sampling the whole
@@ -13,8 +22,10 @@ stream (the default, no chunking, preserves the old behavior).
 ``--devices N`` runs the sweep (and the threshold probes) through the
 sharded cell-plan executor on an N-device "cells" mesh — bit-identical
 to the local engine, but each device owns a slice of the (load x k)
-cells. On CPU, export ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-first to get N virtual devices.
+cells; the policy/model codes shard with the plan, so every policy rides
+the same path. On CPU, export
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first to get N
+virtual devices.
 """
 import argparse
 
@@ -23,6 +34,8 @@ import jax.numpy as jnp
 
 from repro.core import distributions as dists
 from repro.core import queueing, threshold
+from repro.core.scenario import (Policy, Scenario, ServiceModel,
+                                 parse_policy, parse_service_model)
 
 
 def main() -> None:
@@ -37,6 +50,16 @@ def main() -> None:
                     default=[0.1, 0.2, 0.3, 0.4])
     ap.add_argument("--servers", type=int, default=20)
     ap.add_argument("--arrivals", type=int, default=60_000)
+    ap.add_argument("--policy", default="replicate_all",
+                    choices=[p.name.lower() for p in Policy],
+                    help="replication policy (paper: replicate_all)")
+    ap.add_argument("--service-model", default="iid",
+                    choices=[m.name.lower() for m in ServiceModel],
+                    help="copy service-time model (paper: iid)")
+    ap.add_argument("--mix", type=float, default=0.5,
+                    help="server_dependent only: fraction of each copy's "
+                         "service time that is the shared request "
+                         "component (0 = iid, 1 = fully request-bound)")
     ap.add_argument("--chunk-size", type=int, default=None,
                     help="stream arrivals in chunks of this many steps "
                          "(memory independent of --arrivals)")
@@ -50,13 +73,14 @@ def main() -> None:
     dist = factory(args.param) if args.param is not None else factory()
     cfg = queueing.SimConfig(n_servers=args.servers,
                              n_arrivals=args.arrivals)
+    scn = Scenario(dists=dist, policy=parse_policy(args.policy),
+                   service_model=parse_service_model(args.service_model),
+                   mix=args.mix, ks=tuple(args.k))
     key = jax.random.PRNGKey(0)
     loads = jnp.asarray(args.loads)
 
-    # one fused sweep over all (load, k) cells
     mesh = None
     if args.devices:
-        from repro.distributed.sweep_shard import sweep_sharded
         from repro.launch.mesh import make_sweep_mesh
         n_dev = min(args.devices, jax.device_count())
         if n_dev < args.devices:
@@ -64,13 +88,16 @@ def main() -> None:
                   f"devices (on CPU set XLA_FLAGS="
                   f"--xla_force_host_platform_device_count={args.devices})")
         mesh = make_sweep_mesh(n_dev)
-        s = sweep_sharded(key, dist, loads, cfg, ks=tuple(args.k),
-                          n_seeds=1, chunk_size=args.chunk_size, mesh=mesh)
-    else:
-        s = queueing.sweep(key, dist, loads, cfg, ks=tuple(args.k),
-                           n_seeds=1, chunk_size=args.chunk_size)
 
-    print(f"service = {dist.name}, N = {args.servers}"
+    # one engine call over all (load, k) cells of the scenario
+    s = queueing.run(key, scn, loads, cfg, n_seeds=1,
+                     chunk_size=args.chunk_size, mesh=mesh)
+
+    model = scn.service_model.name.lower()
+    if scn.service_model is ServiceModel.SERVER_DEPENDENT:
+        model += f"(mix={scn.mix:g})"
+    print(f"service = {dist.name}, N = {args.servers}, "
+          f"policy = {scn.policy.name.lower()}, model = {model}"
           + (f", mesh = {mesh.devices.size}-way 'cells'" if mesh else ""))
     header = "load  " + "  ".join(f"k={k}: mean/p99" for k in args.k)
     print(header)
@@ -81,10 +108,10 @@ def main() -> None:
                          f"{float(s['p99'][0, i, j]):8.2f}")
         print(f"{float(rho):.2f} " + "  ".join(cells))
 
-    t = threshold.threshold_grid(key, dist, cfg, n_seeds=2,
+    t = threshold.threshold_grid(key, scn, cfg, n_seeds=2,
                                  chunk_size=args.chunk_size, mesh=mesh)
     print(f"\nestimated threshold load (k=2): {t:.3f} "
-          f"(paper: always in ~(0.26, 0.5) with no client overhead)")
+          f"(paper model: always in ~(0.26, 0.5) with no client overhead)")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,12 @@
 """Quickstart: the paper's result in 30 seconds.
 
-1. Simulate the replication queueing model (§2.1) and locate the threshold
-   load for exponential service — Theorem 1 says exactly 1/3.
-2. Wrap a flaky "service" in the hedged-call combinator and watch the tail
+1. Declare the paper's queueing model (§2.1) as a ``Scenario`` and run it
+   through the sweep engine; locate the threshold load for exponential
+   service — Theorem 1 says exactly 1/3.
+2. Step OFF the paper's point in the policy space: cancellation
+   (Joshi et al.) keeps replication helpful at loads where the paper's
+   replicate-all model has already flipped to harmful.
+3. Wrap a flaky "service" in the hedged-call combinator and watch the tail
    collapse.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -14,23 +18,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import analytic, distributions as dists, hedging, queueing, threshold
+from repro.core.scenario import CANCEL_ON_COMPLETE, Scenario
 
-# --- 1. the queueing model ---------------------------------------------
+# --- 1. the queueing model, as a declarative Scenario -------------------
 key = jax.random.PRNGKey(0)
 cfg = queueing.SimConfig(n_servers=20, n_arrivals=40_000)
 loads = jnp.asarray([0.1, 0.25, 0.4])
-gain = queueing.replication_gain(key, dists.exponential(), loads, cfg)
-print("replication gain (mean response, k=2 vs k=1):")
+paper = Scenario.paper_default(dists.exponential())  # replicate-all, iid
+gain = threshold.scenario_gain(key, paper, loads, cfg)
+print("replication gain (mean response, k=2 vs k=1, paper model):")
 for rho, g in zip(loads, gain):
     sign = "helps" if g > 0 else "hurts"
     print(f"  load {float(rho):.2f}: {float(g):+.3f}  ({sign})")
 
-t = threshold.threshold_bisect(key, dists.exponential(), cfg, iters=7,
-                               n_seeds=2)
+t = threshold.threshold_bisect(key, paper, cfg, iters=7, n_seeds=2)
 print(f"estimated threshold load = {t:.3f} "
       f"(Theorem 1: {analytic.THRESHOLD_EXPONENTIAL:.3f})")
 
-# --- 2. hedged calls ----------------------------------------------------
+# --- 2. one step into the policy space: cancel the losers ---------------
+cancel = Scenario(dists=dists.exponential(), policy=CANCEL_ON_COMPLETE)
+g_cancel = threshold.scenario_gain(key, cancel, loads, cfg)
+print("with CANCEL_ON_COMPLETE (losers vacate their queue slot):")
+for rho, g in zip(loads, g_cancel):
+    sign = "helps" if g > 0 else "hurts"
+    print(f"  load {float(rho):.2f}: {float(g):+.3f}  ({sign})")
+
+# --- 3. hedged calls ----------------------------------------------------
 rng = np.random.default_rng(0)
 
 

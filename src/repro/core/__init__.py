@@ -1,8 +1,10 @@
 """Core of the reproduction: the paper's replication-for-latency technique.
 
 - ``distributions`` / ``queueing`` / ``threshold``: §2.1 queueing model.
+- ``scenario``: declarative policy-space spec (replication policy,
+  service model, ks/overhead/warmup) executed by ``queueing.run``.
 - ``analytic``: Theorem 1 closed forms + §3.1 TCP handshake model.
 - ``hedging``: the runtime combinator (hedged dispatch, threshold policy).
 - ``storage_sim`` / ``dns`` / ``netsim``: the paper's application studies.
 """
-from repro.core import analytic, distributions, dns, hedging, queueing, storage_sim, threshold  # noqa: F401
+from repro.core import analytic, distributions, dns, hedging, queueing, scenario, storage_sim, threshold  # noqa: F401

@@ -43,6 +43,33 @@ def mm1_replicated_mean(rho, k: int = 2) -> Array:
     return jnp.where(rate > 0.0, 1.0 / (k * rate), jnp.inf)
 
 
+def mm1_cancel_bounds(rho, k: int = 2) -> tuple[Array, Array]:
+    """(lower, upper) analytic bounds on the mean response of M/M/1-style
+    replication WITH cancellation-on-complete (``Policy.CANCEL_ON_COMPLETE``,
+    unit-mean exponential service, per-server load ``rho``).
+
+    * Lower ``1/k``: the response includes the winning copy's full service
+      time, which is bounded below by the min over the k copies' draws —
+      mean ``1/k`` for exponentials. Tight as ``rho -> 0`` (both copies
+      start immediately, response -> E[min] = 1/k).
+    * Upper ``1/(1-rho)``: the unreplicated M/M/1 mean. For exponential
+      (memoryless) service with independent copies and
+      cancel-on-complete, redundancy never hurts — the exact-analysis
+      line of work on redundancy-d systems (Gardner et al.; Joshi et
+      al.'s replicate-vs-queue tradeoffs) — so the k=1 closed form is an
+      upper bound AT EVERY STABLE LOAD, including loads past the
+      replicate-all threshold 1/3 and past rho = 1/2 where replicate-all
+      is not even stable.
+
+    These sandwich the simulator's ``CANCEL_ON_COMPLETE`` mean; the gap
+    closes at light load (both -> 1/k as rho -> 0 only for the lower;
+    the simulation approaches the lower bound).
+    """
+    rho = jnp.asarray(rho)
+    lo = jnp.full_like(rho, 1.0 / k, dtype=jnp.float32)
+    return lo, mm1_mean(rho)
+
+
 def exponential_threshold(k: int = 2, overhead: float = 0.0) -> float:
     """Largest rho with mm1_replicated_mean(rho,k) + overhead < mm1_mean(rho).
 

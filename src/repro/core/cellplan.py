@@ -10,12 +10,18 @@ seed slowest, k fastest, matching ``reshape(S, B, K)``), padded up to a
 multiple of ``pad_to`` so the cell axis divides a device mesh evenly.
 
 Each cell carries its coordinates (``seed_idx`` / ``load_idx`` /
-``k_idx``) plus a validity mask. Pad cells alias cell 0's coordinates so
-they simulate real, finite work (no NaN/inf poisoning a shared buffer or
-a collective) but are marked invalid and sliced away by ``unflatten``
-before any summary is read — a pad cell cannot contribute to a Kahan
-mean or a hist_sketch bin of a real cell because no per-cell state is
-ever reduced across the cell axis.
+``k_idx``) plus a validity mask. Since the scenario API (PR 5), the
+k-axis is really a *variant* axis: next to (seed, load, k) every cell
+also carries its replication-policy and service-model CODES
+(``policy_code`` / ``model_code``, see ``repro.core.scenario``), so a
+mixed-policy grid is just a plan whose cells disagree on those two
+columns — the chunk body branches on them per cell via selects inside
+one compiled scan. Pad cells alias cell 0's coordinates (including its
+policy/model codes) so they simulate real, finite work (no NaN/inf
+poisoning a shared buffer or a collective) but are marked invalid and
+sliced away by ``unflatten`` before any summary is read — a pad cell
+cannot contribute to a Kahan mean or a hist_sketch bin of a real cell
+because no per-cell state is ever reduced across the cell axis.
 
 Both execution layers consume the same plan: the single-device driver in
 ``repro.core.queueing`` builds an unpadded plan (``pad_to=1``) and the
@@ -38,7 +44,7 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class CellPlan:
-    """Flattened (seed, load, k) sweep grid with mesh-friendly padding."""
+    """Flattened (seed, load, variant) sweep grid with mesh padding."""
 
     n_seeds: int
     n_loads: int
@@ -47,8 +53,10 @@ class CellPlan:
     n_padded: int      # n_cells rounded up to a multiple of pad_to
     seed_idx: Array    # (n_padded,) int32 — seed coordinate per cell
     load_idx: Array    # (n_padded,) int32 — load coordinate per cell
-    k_idx: Array       # (n_padded,) int32 — replication coordinate per cell
+    k_idx: Array       # (n_padded,) int32 — variant coordinate per cell
     valid: Array       # (n_padded,) bool  — False for pad cells
+    policy_code: Array  # (n_padded,) int32 — scenario.Policy per cell
+    model_code: Array   # (n_padded,) int32 — scenario.ServiceModel per cell
 
     @property
     def stacked_shape(self) -> tuple[int, int, int]:
@@ -56,7 +64,8 @@ class CellPlan:
 
 
 def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
-                   pad_to: int = 1) -> CellPlan:
+                   pad_to: int = 1,
+                   policies=None, models=None) -> CellPlan:
     """Flatten an (S, B, K) grid into a padded cell axis.
 
     Cell ``c`` maps to coordinates ``(c // (B*K), (c // K) % B, c % K)``
@@ -64,11 +73,21 @@ def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
     first ``n_cells`` entries. Pad cells (when ``S*B*K`` is not a
     multiple of ``pad_to``) copy cell 0's coordinates and are flagged
     ``valid=False``.
+
+    ``policies`` / ``models`` are per-VARIANT code sequences of length
+    ``n_ks`` (``repro.core.scenario`` ints); each cell inherits the
+    codes of its variant slot, pad cells inherit cell 0's. ``None``
+    means all cells run the paper default (code 0: replicate-all,
+    i.i.d. service).
     """
     if min(n_seeds, n_loads, n_ks, pad_to) < 1:
         raise ValueError(
             f"all plan axes must be >= 1, got {(n_seeds, n_loads, n_ks)} "
             f"pad_to={pad_to}")
+    for name, codes in (("policies", policies), ("models", models)):
+        if codes is not None and len(codes) != n_ks:
+            raise ValueError(f"{name} must have one code per variant "
+                             f"({n_ks}), got {len(codes)}")
     n_cells = n_seeds * n_loads * n_ks
     n_padded = -(-n_cells // pad_to) * pad_to
     c = np.arange(n_padded)
@@ -77,13 +96,19 @@ def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
     seed_idx = c // (n_ks * n_loads)
     pad = slice(n_cells, n_padded)
     seed_idx[pad] = load_idx[pad] = k_idx[pad] = 0
+    policy = np.zeros(n_ks, np.int32) if policies is None else np.asarray(
+        [int(p) for p in policies], np.int32)
+    model = np.zeros(n_ks, np.int32) if models is None else np.asarray(
+        [int(m) for m in models], np.int32)
     return CellPlan(
         n_seeds=n_seeds, n_loads=n_loads, n_ks=n_ks,
         n_cells=n_cells, n_padded=n_padded,
         seed_idx=jnp.asarray(seed_idx, jnp.int32),
         load_idx=jnp.asarray(load_idx, jnp.int32),
         k_idx=jnp.asarray(k_idx, jnp.int32),
-        valid=jnp.asarray(c < n_cells))
+        valid=jnp.asarray(c < n_cells),
+        policy_code=jnp.asarray(policy[k_idx], jnp.int32),
+        model_code=jnp.asarray(model[k_idx], jnp.int32))
 
 
 def unflatten(plan: CellPlan, x: Array) -> Array:

@@ -86,6 +86,40 @@ Key-splitting / CRN contract (chunked mode):
     thresholds derived from them) are therefore bit-identical for ANY
     device count.
 
+Scenario & policy codes
+-----------------------
+
+``run(key, scenario, rhos, cfg, ...)`` is the public entry point: a
+``repro.core.scenario.Scenario`` (or a sequence of them — a *mixed
+grid*) declares replication policy, service model, ``ks``, client
+overhead and warmup, and the engine lowers it to per-cell policy/model
+CODES stored in the cell plan next to (seed, load, k). ``sweep`` /
+``sweep_dists`` / ``replication_gain`` remain as thin paper-default
+shims over ``run``.
+
+Key-consumption contract per policy: every policy and service model
+consumes EXACTLY the same randomness. The samplers always draw the full
+``k_max`` copy set and all ``k_max`` per-copy service times, no matter
+which policy uses how much of them — ``CANCEL_ON_COMPLETE`` discards a
+cancelled loser's draw, ``REPLICATE_TO_IDLE`` discards the draws of
+copies it never dispatches — and the ``SERVER_DEPENDENT`` service model
+adds ONE extra column (the shared request component, sampled from
+``fold_in(k_svc, k_max)``) only when a grid contains such a variant;
+columns ``0..k_max-1`` are bit-identical either way. Policies and
+models therefore stay CRN-paired with each other cell-for-cell: a
+mixed grid's REPLICATE_ALL/IID column is bit-identical to the same
+cell in a pure paper-default sweep, and paired policy comparisons
+(cancel-vs-keep, idle-vs-all, any mix) are low-variance.
+
+Why mixed grids stay ONE compiled body: the per-cell step branches on
+the policy/model codes with ``jnp.where`` selects (all variants'
+updates are computed, the cell's code picks one), so the vmapped cell
+update has a single trace — no per-policy recompile, no ragged control
+flow, and device-local state in the sharded executor is untouched. The
+REPLICATE_ALL/IID branch is the pre-redesign computation op-for-op,
+which is what keeps ``Scenario.paper_default`` bit-identical to the
+legacy engine.
+
 Execution layers
 ----------------
 
@@ -115,7 +149,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cellplan
+from repro.core import scenario as scenario_mod
 from repro.core.distributions import ServiceDist
+from repro.core.scenario import (Policy, Scenario, ServiceModel,  # noqa: F401
+                                 Variant)
 from repro.kernels.hist_sketch import ops as hist_ops
 from repro.kernels.hist_sketch.ops import (DEFAULT_BINS, HIST_HI,  # noqa: F401
                                            HIST_LO)
@@ -131,10 +168,21 @@ _SKETCH_BLOCK = 512
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
+    """Machine shape of a simulation. ``warmup_frac``/``client_overhead``
+    are legacy knobs consumed by the paper-default shims (``sweep``,
+    ``simulate``, the threshold estimators); ``run`` reads them from the
+    ``Scenario`` instead."""
+
     n_servers: int = 20
     n_arrivals: int = 100_000
     warmup_frac: float = 0.1
     client_overhead: float = 0.0  # latency penalty added to replicated requests
+
+
+def _overhead_when_replicated(overhead: float, k: int) -> float:
+    """The paper's Figure 4 rule, in ONE place for every entry point:
+    client overhead is charged only when a request is replicated (k > 1)."""
+    return float(overhead) if k > 1 else 0.0
 
 
 def _arrival_part(key: Array, n: int, m: int, k_max: int):
@@ -157,75 +205,157 @@ def _arrival_part(key: Array, n: int, m: int, k_max: int):
     return unit_gaps, servers
 
 
-def _service_part(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int):
+# fold_in index of the SERVER_DEPENDENT shared request component: FIXED —
+# never a function of k or k_max — so the same arrival draws the same
+# shared component in every grid layout and in the raw simulate paths
+# (CRN across k and across entry points). Any constant that can never
+# collide with a copy index works.
+_SHARED_SVC_FOLD = 0x5CA1AB1E
+
+
+def _service_part(key: Array, dist: ServiceDist, cfg: SimConfig,
+                  n_copies: int, with_shared: bool = False):
     """Per-copy fold_in keys so copy j's service times are identical for
-    every k_max (CRN: k=1 and k=2 share the first copy's service draw)."""
+    every k_max (CRN: k=1 and k=2 share the first copy's service draw).
+    ``with_shared`` appends the SERVER_DEPENDENT shared request component
+    as one extra LAST column, drawn from the fixed
+    ``fold_in(k_svc, _SHARED_SVC_FOLD)``: the copy columns are
+    bit-identical either way, and the shared column is identical for
+    every ``n_copies`` — so it is CRN-shared across k, across grid
+    layouts, and across the sweep/simulate entry points."""
     m = cfg.n_arrivals
     _, _, _, k_svc = jax.random.split(key, 4)
-    return jnp.stack(
-        [dist.sample(jax.random.fold_in(k_svc, j), (m,)) for j in range(k_max)],
-        axis=1)
+    cols = [dist.sample(jax.random.fold_in(k_svc, j), (m,))
+            for j in range(n_copies)]
+    if with_shared:
+        cols.append(dist.sample(
+            jax.random.fold_in(k_svc, _SHARED_SVC_FOLD), (m,)))
+    return jnp.stack(cols, axis=1)
 
 
-def _sample_inputs(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int):
+def _sample_inputs(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int,
+                   with_shared: bool = False):
     """Draw all randomness up front. Column 0 of servers/services is shared
-    by every k (CRN)."""
+    by every k (CRN); services carry the extra shared-component LAST
+    column when ``with_shared`` (SERVER_DEPENDENT scenarios)."""
     unit_gaps, servers = _arrival_part(key, cfg.n_servers, cfg.n_arrivals,
                                        k_max)
-    services = _service_part(key, dist, cfg, k_max)
+    services = _service_part(key, dist, cfg, k_max, with_shared)
     return unit_gaps, servers, services
 
 
-def _step_cell(free: Array, t: Array, srv: Array, svc: Array, mask: Array,
-               overhead: Array) -> tuple[Array, Array]:
-    """One arrival at one (seed, load, k) grid cell. free (N,), t scalar,
-    srv/svc/mask (k_max,) -> (new free, response)."""
-    start = jnp.maximum(free[srv], t)
+def _step_cell(free: Array, t: Array, srv: Array, svc: Array,
+               svc_shared: Array, mask: Array, overhead: Array,
+               policy: Array, model: Array, mix: Array) -> tuple[Array, Array]:
+    """One arrival at one (seed, load, variant) grid cell. free (N,), t /
+    svc_shared / overhead / policy / model / mix scalars, srv/svc/mask
+    (k_max,) -> (new free, response).
+
+    ``policy`` / ``model`` are the cell's ``scenario.Policy`` /
+    ``scenario.ServiceModel`` codes; every variant's update is computed
+    and the codes select one (mixed grids share this single trace). The
+    ``Policy.REPLICATE_ALL`` + ``ServiceModel.IID`` path is the paper's
+    model, op-for-op identical to the pre-scenario engine (the bit-
+    identity anchor of ``Scenario.paper_default``).
+    """
+    cur = free[srv]
+    # SERVER_DEPENDENT (Shah et al.): blend the shared request component
+    # into every copy. mix=0 (and the IID select arm) is bit-exact svc.
+    svc = jnp.where(model == int(ServiceModel.SERVER_DEPENDENT),
+                    mix * svc_shared + (1.0 - mix) * svc, svc)
+    start = jnp.maximum(cur, t)
     finish = start + svc
-    # srv entries are distinct; masked copies rewrite their old value (no-op)
-    free = free.at[srv].set(jnp.where(mask, finish, free[srv]))
-    resp = jnp.min(jnp.where(mask, finish, jnp.inf)) - t + overhead
+    t_win = jnp.min(jnp.where(mask, finish, jnp.inf))
+    # REPLICATE_TO_IDLE dispatches the primary always, extras only to
+    # servers idle at the arrival instant.
+    dispatch = mask & ((jnp.arange(srv.shape[0]) == 0) | (cur <= t))
+    # Per-policy server-occupancy updates (masked copies rewrite their own
+    # old value — a no-op; srv entries are distinct by construction):
+    #   REPLICATE_ALL      every copy runs to completion.
+    #   CANCEL_ON_COMPLETE losers vacate at the winner's finish: a loser
+    #                      in service frees at t_win, a queued loser
+    #                      (cur >= t_win) never starts — max(cur, t_win)
+    #                      covers both (and equals finish for the winner).
+    #   REPLICATE_TO_IDLE  only dispatched copies occupy their server.
+    val_all = jnp.where(mask, finish, cur)
+    val_cancel = jnp.where(mask, jnp.maximum(cur, t_win), cur)
+    val_idle = jnp.where(dispatch, finish, cur)
+    new_val = jnp.where(
+        policy == int(Policy.CANCEL_ON_COMPLETE), val_cancel,
+        jnp.where(policy == int(Policy.REPLICATE_TO_IDLE), val_idle,
+                  val_all))
+    free = free.at[srv].set(new_val)
+    resp_win = t_win - t + overhead
+    resp_idle = jnp.min(jnp.where(dispatch, finish, jnp.inf)) - t + overhead
+    resp = jnp.where(policy == int(Policy.REPLICATE_TO_IDLE), resp_idle,
+                     resp_win)
     return free, resp
 
 
 def _scan_sim(arrivals: Array, servers: Array, services: Array, n_servers: int,
-              overhead: float) -> Array:
-    """Run the FIFO replication DES. arrivals (M,), servers (M,k), services
-    (M,k) -> response times (M,)."""
+              variant: Variant) -> Array:
+    """Run the FIFO replication DES for ONE scenario variant. arrivals
+    (M,), servers (M,k), services (M,k) or (M,k+1) with the shared
+    component last -> response times (M,). Shares ``_step_cell`` with the
+    sweep engine, so raw-response callers exercise the same policy/model
+    code path."""
     k = servers.shape[1]
-    ovh = jnp.asarray(overhead if k > 1 else 0.0, jnp.float32)
+    ovh = jnp.asarray(_overhead_when_replicated(variant.overhead, k),
+                      jnp.float32)
     mask = jnp.ones((k,), bool)
+    pol = jnp.asarray(int(variant.policy), jnp.int32)
+    mdl = jnp.asarray(int(variant.service_model), jnp.int32)
+    mix = jnp.asarray(variant.mix, jnp.float32)
 
     def step(free: Array, inp):
         t, srv, svc = inp
-        return _step_cell(free, t, srv, svc, mask, ovh)
+        shared = svc[k] if svc.shape[0] > k else svc[0]  # dummy when IID
+        return _step_cell(free, t, srv, svc[:k], shared, mask, ovh, pol,
+                          mdl, mix)
 
     free0 = jnp.zeros((n_servers,))
     _, resp = jax.lax.scan(step, free0, (arrivals, servers, services))
     return resp
 
 
-@partial(jax.jit, static_argnames=("dist", "cfg", "k"))
+@partial(jax.jit, static_argnames=("dist", "cfg", "k", "scenario"))
 def simulate(key: Array, dist: ServiceDist, rho: Array, cfg: SimConfig,
-             k: int = 1) -> Array:
-    """Response times (M,) for a single load ``rho`` and replication ``k``."""
-    unit_gaps, servers, services = _sample_inputs(key, dist, cfg, k)
+             k: int = 1, *, scenario: Scenario | None = None) -> Array:
+    """Response times (M,) for a single load ``rho`` and replication ``k``.
+
+    Routed through the paper-default ``Scenario`` shim by default;
+    ``scenario`` overrides policy / service model / mix / overhead for
+    raw-response studies of the wider policy space (its ``dists``/``ks``
+    are ignored here — ``dist``/``k`` stay authoritative).
+    """
+    scn = scenario or Scenario.paper_default(
+        dist, client_overhead=cfg.client_overhead,
+        warmup_frac=cfg.warmup_frac)
+    variant = scn.variant_for(k)
+    unit_gaps, servers, services = _sample_inputs(
+        key, dist, cfg, k, with_shared=variant.needs_shared_draw)
     rate = cfg.n_servers * rho
     arrivals = jnp.cumsum(unit_gaps / rate)
-    return _scan_sim(arrivals, servers[:, :k], services[:, :k],
-                     cfg.n_servers, cfg.client_overhead)
+    return _scan_sim(arrivals, servers[:, :k], services,
+                     cfg.n_servers, variant)
 
 
-@partial(jax.jit, static_argnames=("dist", "cfg", "k"))
+@partial(jax.jit, static_argnames=("dist", "cfg", "k", "scenario"))
 def simulate_grid(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig,
-                  k: int = 1) -> Array:
-    """Response times (B, M) for a grid of loads, one coupled sample path."""
-    unit_gaps, servers, services = _sample_inputs(key, dist, cfg, k)
+                  k: int = 1, *, scenario: Scenario | None = None) -> Array:
+    """Response times (B, M) for a grid of loads, one coupled sample path.
+    ``scenario`` as in ``simulate``."""
+    scn = scenario or Scenario.paper_default(
+        dist, client_overhead=cfg.client_overhead,
+        warmup_frac=cfg.warmup_frac)
+    variant = scn.variant_for(k)
+    unit_gaps, servers, services = _sample_inputs(
+        key, dist, cfg, k, with_shared=variant.needs_shared_draw)
     rates = cfg.n_servers * rhos  # (B,)
     arrivals = jnp.cumsum(unit_gaps)[None, :] / rates[:, None]  # (B, M)
     sim = jax.vmap(
-        lambda a: _scan_sim(a, servers[:, :k], services[:, :k],
-                            cfg.n_servers, cfg.client_overhead))
+        lambda a: _scan_sim(a, servers[:, :k], services,
+                            cfg.n_servers, variant))
     return sim(arrivals)
 
 
@@ -262,24 +392,30 @@ def _sample_sweep_arrivals(key: Array, n_servers: int, n_arrivals: int,
 
 
 def _sample_sweep_services(key: Array, dist: ServiceDist, cfg: SimConfig,
-                           k_max: int, n_seeds: int):
-    """(S,M,k_max) service draws. Deliberately NOT jitted: eager sampling
-    reuses jax's per-op caches across distributions, so sweeping 15 families
-    costs 15 x ~20ms instead of 15 x ~1s of per-family jit compiles (the
-    PRNG bits are identical either way)."""
+                           k_max: int, n_seeds: int,
+                           with_shared: bool = False):
+    """(S,M,n_svc) service draws (``n_svc = k_max + with_shared``).
+    Deliberately NOT jitted: eager sampling reuses jax's per-op caches
+    across distributions, so sweeping 15 families costs 15 x ~20ms
+    instead of 15 x ~1s of per-family jit compiles (the PRNG bits are
+    identical either way)."""
     keys = jax.random.split(key, n_seeds)
-    return jnp.stack([_service_part(keys[s], dist, cfg, k_max)
+    return jnp.stack([_service_part(keys[s], dist, cfg, k_max, with_shared)
                       for s in range(n_seeds)], axis=0)
 
 
 def _sample_sweep_inputs(key: Array, dist: ServiceDist, cfg: SimConfig,
-                         k_max: int, n_seeds: int):
-    """Per-seed randomness for the engine: (S,M) gaps, (S,M,k_max) servers /
-    services. Bit-identical to ``n_seeds`` sequential ``_sample_inputs``
-    calls on ``jax.random.split(key, n_seeds)``."""
+                         k_max: int, n_seeds: int,
+                         with_shared: bool = False):
+    """Per-seed randomness for the engine: (S,M) gaps, (S,M,k_max) servers,
+    (S,M,k_max + with_shared) services (the shared-component LAST column
+    serves SERVER_DEPENDENT grids). Bit-identical to ``n_seeds``
+    sequential ``_sample_inputs`` calls on
+    ``jax.random.split(key, n_seeds)``."""
     unit_gaps, servers = _sample_sweep_arrivals(
         key, cfg.n_servers, cfg.n_arrivals, k_max, n_seeds)
-    services = _sample_sweep_services(key, dist, cfg, k_max, n_seeds)
+    services = _sample_sweep_services(key, dist, cfg, k_max, n_seeds,
+                                      with_shared)
     return unit_gaps, servers, services
 
 
@@ -288,24 +424,33 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
                        unit_gaps: Array, servers: Array, services: Array,
                        start: Array, n_valid: Array, warmup_start: Array,
                        seed_idx: Array, rates: Array, k_mask: Array,
-                       ovh: Array, *, n_servers: int, n_bins: int,
+                       ovh: Array, policy_code: Array, model_code: Array,
+                       mix: Array, *, n_servers: int, n_bins: int,
                        block: int):
-    """Distribution-agnostic fused core over ONE chunk of arrivals, on a
-    flat cell axis (see ``repro.core.cellplan``).
+    """Scenario- and distribution-agnostic fused core over ONE chunk of
+    arrivals, on a flat cell axis (see ``repro.core.cellplan``).
 
     Per-cell carry threaded across chunks: ``free`` (C,N) server-free
     times RELATIVE to the chunk-start arrival time, ``ssum``/``comp``
     (C,) Kahan mean state, ``hist`` (C, n_bins) sketch counts (shape
     (0, 0) skips the sketch). Sampled inputs stay at SEED granularity —
-    ``unit_gaps`` (S,T), ``servers``/``services`` (S,T,k_max) — and
-    ``seed_idx`` (C,) maps each cell to its input row, so one sampled
-    row is shared by all (load, k) cells of a seed: the gather happens
-    per scan step on a (S,k_max) slice, and the (C,T,...) expansion is
-    never materialized. The sharded driver runs this same body per
-    shard with the inputs replicated and ``seed_idx`` restricted to the
-    local cells (global seed indices, sharded over the mesh).
-    ``rates``/``ovh`` (C,) and ``k_mask`` (C,k_max) are per-cell
-    parameters gathered from the plan's coordinates.
+    ``unit_gaps`` (S,T), ``servers`` (S,T,k_max), ``services``
+    (S,T,n_svc) where ``n_svc > k_max`` means the last column is the
+    SERVER_DEPENDENT shared request component — and ``seed_idx`` (C,)
+    maps each cell to its input row, so one sampled row is shared by
+    all (load, k) cells of a seed: the gather happens per scan step on
+    a (S,k_max) slice, and the (C,T,...) expansion is never
+    materialized. The sharded driver runs this same body per shard with
+    the inputs replicated and ``seed_idx`` restricted to the local
+    cells (global seed indices, sharded over the mesh).
+    ``rates``/``ovh``/``mix`` (C,), ``k_mask`` (C,k_max) and the
+    ``policy_code``/``model_code`` (C,) scenario coordinates are
+    per-cell parameters gathered from the plan; the vmapped
+    ``_step_cell`` branches on the codes per lane, which is what lets a
+    MIXED grid (cells disagreeing on policy/model) run in this one
+    compiled body. Callers that pass SERVER_DEPENDENT codes must supply
+    the extra services column (the IID-only layout reuses column 0 as a
+    dummy shared component that the select discards).
 
     ``start`` is the global index of the chunk's first step; ``n_valid``
     the real (non-padding) steps. Steps past ``n_valid`` are masked to
@@ -320,6 +465,8 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
     chunk-end time.
     """
     S, T = unit_gaps.shape
+    k_max = k_mask.shape[1]
+    has_shared = services.shape[-1] > k_max
     need_hist = hist.size > 0
     if need_hist:
         assert T % block == 0, (T, block)
@@ -335,10 +482,13 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
 
     def step(carry, inp):
         free, ssum, comp = carry
-        c, w, srv, svc = inp                          # (S,), (), (S,k), (S,k)
+        c, w, srv, svc = inp                       # (S,), (), (S,k), (S,n_svc)
         t = c[seed_idx] / rates                       # (C,)
-        free, resp = cell_c(free, t, srv[seed_idx], svc[seed_idx],
-                            k_mask, ovh)
+        svc_c = svc[seed_idx]                         # (C, n_svc)
+        shared_c = svc_c[:, k_max] if has_shared else svc_c[:, 0]
+        free, resp = cell_c(free, t, srv[seed_idx], svc_c[:, :k_max],
+                            shared_c, k_mask, ovh, policy_code, model_code,
+                            mix)
         # Kahan-compensated sum: sequential f32 accumulation over ~1e5+
         # terms would otherwise cost ~1e-4 relative error on the mean,
         # which is the signal threshold bisection keys on. Two guards
@@ -385,15 +535,24 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
 # --- plan construction / finalization shared by both execution layers ----
 
 def _plan_cell_params(plan: cellplan.CellPlan, rhos: Array, cfg: SimConfig,
-                      ks: tuple[int, ...]):
+                      variants):
     """Per-cell engine parameters gathered from the plan's coordinates:
-    arrival rates (C,), copy masks (C,k_max), client overheads (C,)."""
-    k_max = max(ks)
+    arrival rates (C,), copy masks (C,k_max), client overheads (C,),
+    service-model mixes (C,). ``variants`` may be a plain ``ks`` tuple
+    (paper default per k, overhead from ``cfg``) or per-variant
+    ``scenario.Variant``s."""
+    variants = tuple(
+        v if isinstance(v, Variant)
+        else Variant(k=int(v), overhead=cfg.client_overhead)
+        for v in variants)
+    k_max = max(v.k for v in variants)
     rates = cfg.n_servers * jnp.asarray(rhos)
-    k_mask = jnp.asarray([[j < k for j in range(k_max)] for k in ks])
-    ovh = jnp.asarray(
-        [cfg.client_overhead if k > 1 else 0.0 for k in ks], jnp.float32)
-    return rates[plan.load_idx], k_mask[plan.k_idx], ovh[plan.k_idx]
+    k_mask = jnp.asarray([[j < v.k for j in range(k_max)] for v in variants])
+    ovh = jnp.asarray([_overhead_when_replicated(v.overhead, v.k)
+                       for v in variants], jnp.float32)
+    mix = jnp.asarray([v.mix for v in variants], jnp.float32)
+    return (rates[plan.load_idx], k_mask[plan.k_idx], ovh[plan.k_idx],
+            mix[plan.k_idx])
 
 
 def _init_cell_state(plan: cellplan.CellPlan, cfg: SimConfig, n_bins: int,
@@ -445,20 +604,26 @@ def _finalize_summary(plan: cellplan.CellPlan, ssum: Array, hist: Array,
 
 
 def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
-                ks: tuple[int, ...], percentiles: tuple[float, ...],
+                variants: tuple[Variant, ...], warmup_frac: float,
+                percentiles: tuple[float, ...],
                 n_bins: int, chunk_size: int | None) -> dict[str, Array]:
     """Drive ``_sweep_chunk_cells`` over the whole arrival stream on one
-    device: unpadded cell plan, seed-level sampled inputs shared by each
-    seed's (load, k) cells.
+    device: unpadded cell plan (variant policy/model codes as per-cell
+    coordinates), seed-level sampled inputs shared by each seed's
+    (load, variant) cells.
 
     ``sampler(chunk_idx, chunk_len)`` returns that chunk's
-    ``(unit_gaps (S,T), servers (S,T,k_max), services (S,T,k_max))`` —
+    ``(unit_gaps (S,T), servers (S,T,k_max), services (S,T,n_svc))`` —
     one call over the full stream when ``chunk_size`` is None.
     """
     m = cfg.n_arrivals
-    plan = cellplan.make_cell_plan(n_seeds_total, rhos.shape[0], len(ks))
-    rates_c, k_mask_c, ovh_c = _plan_cell_params(plan, rhos, cfg, ks)
-    warmup_start = int(m * cfg.warmup_frac)
+    policies, models = scenario_mod.variant_codes(variants)
+    plan = cellplan.make_cell_plan(
+        n_seeds_total, rhos.shape[0], len(variants),
+        policies=policies, models=models)
+    rates_c, k_mask_c, ovh_c, mix_c = _plan_cell_params(plan, rhos, cfg,
+                                                        variants)
+    warmup_start = int(m * warmup_frac)
     need_hist = len(percentiles) > 0
     t_chunk, n_chunks, block, pad = _chunk_layout(cfg, chunk_size, need_hist)
     free, ssum, comp, hist = _init_cell_state(plan, cfg, n_bins, need_hist)
@@ -471,7 +636,8 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
             free, ssum, comp, hist, unit_gaps, servers, services,
             jnp.asarray(start), jnp.asarray(min(t_chunk, m - start)),
             jnp.asarray(warmup_start), plan.seed_idx, rates_c, k_mask_c,
-            ovh_c, n_servers=cfg.n_servers, n_bins=n_bins, block=block)
+            ovh_c, plan.policy_code, plan.model_code, mix_c,
+            n_servers=cfg.n_servers, n_bins=n_bins, block=block)
 
     return _finalize_summary(plan, ssum, hist, m - warmup_start,
                              percentiles)
@@ -484,27 +650,30 @@ def _chunk_key(key: Array, chunk_idx: int, chunk_size: int | None) -> Array:
 
 
 def _sweep_sampler(key: Array, dist: ServiceDist, cfg: SimConfig,
-                   k_max: int, n_seeds: int, chunk_size: int | None):
-    """The per-chunk sampler closure behind ``sweep``. Shared — by this
-    exact function, not a copy — with the sharded executor, so the two
-    paths cannot drift apart on the CRN-critical sampling code the
-    bit-identity contract depends on."""
+                   k_max: int, n_seeds: int, chunk_size: int | None,
+                   with_shared: bool = False):
+    """The per-chunk sampler closure behind ``run``/``sweep``. Shared —
+    by this exact function, not a copy — with the sharded executor, so
+    the two paths cannot drift apart on the CRN-critical sampling code
+    the bit-identity contract depends on."""
 
     def sampler(c: int, t: int):
         ccfg = dataclasses.replace(cfg, n_arrivals=t)
         return _sample_sweep_inputs(_chunk_key(key, c, chunk_size), dist,
-                                    ccfg, k_max, n_seeds)
+                                    ccfg, k_max, n_seeds,
+                                    with_shared=with_shared)
 
     return sampler
 
 
 def _sweep_dists_sampler(key: Array, dist_list, cfg: SimConfig,
                          k_max: int, n_seeds: int,
-                         chunk_size: int | None):
-    """The per-chunk sampler closure behind ``sweep_dists`` (shared with
-    the sharded executor, like ``_sweep_sampler``). Every distribution
-    sees the same key, hence the same arrival process and copy sets
-    (CRN across dists): arrivals are sampled once and tiled."""
+                         chunk_size: int | None,
+                         with_shared: bool = False):
+    """The per-chunk sampler closure behind multi-distribution runs
+    (shared with the sharded executor, like ``_sweep_sampler``). Every
+    distribution sees the same key, hence the same arrival process and
+    copy sets (CRN across dists): arrivals are sampled once and tiled."""
     d = len(dist_list)
 
     def sampler(c: int, t: int):
@@ -513,7 +682,8 @@ def _sweep_dists_sampler(key: Array, dist_list, cfg: SimConfig,
         gaps1, servers1 = _sample_sweep_arrivals(
             ck, cfg.n_servers, t, k_max, n_seeds)
         services = jnp.concatenate(
-            [_sample_sweep_services(ck, dd, ccfg, k_max, n_seeds)
+            [_sample_sweep_services(ck, dd, ccfg, k_max, n_seeds,
+                                    with_shared)
              for dd in dist_list], axis=0)
         return (jnp.tile(gaps1, (d, 1)), jnp.tile(servers1, (d, 1, 1)),
                 services)
@@ -521,13 +691,21 @@ def _sweep_dists_sampler(key: Array, dist_list, cfg: SimConfig,
     return sampler
 
 
-def sweep(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig, *,
-          ks: tuple[int, ...] = (1, 2), n_seeds: int = 2,
-          percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
-          n_bins: int = DEFAULT_BINS,
-          chunk_size: int | None = None) -> dict[str, Array]:
-    """Fused multi-(k, seed, load) sweep. Returns post-warmup summaries,
-    each of shape ``(n_seeds, len(rhos), len(ks))``:
+def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
+        cfg: SimConfig, *, n_seeds: int = 2,
+        percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
+        n_bins: int = DEFAULT_BINS,
+        chunk_size: int | None = None,
+        mesh: jax.sharding.Mesh | None = None) -> dict[str, Array]:
+    """Execute a ``Scenario`` (or a sequence — a MIXED grid) over a load
+    grid. THE public entry point of the sweep engine; ``sweep`` /
+    ``sweep_dists`` / ``replication_gain`` are thin shims over it.
+
+    Returns post-warmup summaries, each of shape
+    ``(n_seeds, len(rhos), n_variants)`` — for a single scenario the
+    variant axis is its ``ks`` in order; a sequence concatenates each
+    scenario's variants. Scenarios with multiple ``dists`` add a leading
+    dist axis (``sweep_dists`` layout):
 
       ``mean``          streaming mean response
       ``p<q>``          histogram-sketch percentile per entry of
@@ -538,25 +716,71 @@ def sweep(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig, *,
 
     ``chunk_size=None`` pre-samples the whole stream; an int streams
     arrivals in chunks of that many steps so peak memory is independent
-    of ``cfg.n_arrivals`` (see the module design note).
+    of ``cfg.n_arrivals``. ``mesh`` routes execution through the sharded
+    cell-plan executor (``repro.distributed.sweep_shard``) —
+    bit-identical for any device count.
 
-    Key-splitting / CRN contract: with ``chunk_size=None``, seed s,
-    k-slice j sees bit-identical inputs to
+    Key-splitting / CRN contract: unchanged from the legacy ``sweep``
+    (see the module design note) — ``Scenario.paper_default`` consumes
+    the key identically to the pre-scenario engine, and every policy /
+    service model consumes the SAME draws, so with ``chunk_size=None``,
+    seed s, variant j sees bit-identical inputs to
     ``simulate_grid(split(key, n_seeds)[s], dist, rhos, cfg, ks[j])``.
-    With ``chunk_size=T``, chunk c's randomness is drawn from
-    ``fold_in(key, c)`` at ``n_arrivals=T`` through the same per-seed
-    samplers, so results are a reproducible pure function of
-    ``(key, chunk_size)`` and all within-sweep CRN pairings (across k,
-    loads, seeds) are preserved inside every chunk.
-    """
-    ks = tuple(int(k) for k in ks)
-    k_max = max(ks)
-    rhos = jnp.asarray(rhos)
+    With ``chunk_size=T``, chunk c draws from ``fold_in(key, c)`` at
+    ``n_arrivals=T`` through the same per-seed samplers.
 
-    sampler = _sweep_sampler(key, dist, cfg, k_max, n_seeds, chunk_size)
-    return _run_engine(sampler, n_seeds, rhos, cfg, ks=ks,
-                       percentiles=tuple(percentiles), n_bins=n_bins,
-                       chunk_size=chunk_size)
+    ``warmup_frac`` and ``client_overhead`` come from the Scenario, NOT
+    from ``cfg`` (the legacy shims copy them over).
+    """
+    dist_list, warmup_frac, variants = scenario_mod.combine(scenario)
+    rhos = jnp.asarray(rhos)
+    k_max = max(v.k for v in variants)
+    with_shared = scenario_mod.any_server_dependent(variants)
+    d = len(dist_list)
+    if d == 1:
+        sampler = _sweep_sampler(key, dist_list[0], cfg, k_max, n_seeds,
+                                 chunk_size, with_shared=with_shared)
+    else:
+        sampler = _sweep_dists_sampler(key, dist_list, cfg, k_max, n_seeds,
+                                       chunk_size, with_shared=with_shared)
+
+    kwargs = dict(variants=variants, warmup_frac=warmup_frac,
+                  percentiles=tuple(percentiles), n_bins=n_bins,
+                  chunk_size=chunk_size)
+    if mesh is not None:
+        from repro.distributed.sweep_shard import _sweep_cells_sharded
+        out = _sweep_cells_sharded(sampler, d * n_seeds, rhos, cfg,
+                                   mesh=mesh, **kwargs)
+    else:
+        out = _run_engine(sampler, d * n_seeds, rhos, cfg, **kwargs)
+    if d > 1:
+        out = {k: (v.reshape((d, n_seeds) + v.shape[1:])
+                   if isinstance(v, jax.Array) else v)
+               for k, v in out.items()}
+    return out
+
+
+def sweep(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig, *,
+          ks: tuple[int, ...] = (1, 2), n_seeds: int = 2,
+          percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
+          n_bins: int = DEFAULT_BINS,
+          chunk_size: int | None = None) -> dict[str, Array]:
+    """Fused multi-(k, seed, load) sweep of the PAPER's model.
+
+    .. deprecated:: Thin shim over ``run(key, Scenario.paper_default(
+       dist, ks=ks, ...), rhos, cfg, ...)`` — bit-identical output;
+       prefer ``run`` (it also expresses cancellation / dispatch-to-idle
+       policies, server-dependent service and mixed grids).
+
+    Summary shapes, chunking and the CRN contract are exactly ``run``'s
+    (single-dist layout): ``(n_seeds, len(rhos), len(ks))``.
+    """
+    scn = Scenario.paper_default(dist, ks=tuple(int(k) for k in ks),
+                                 client_overhead=cfg.client_overhead,
+                                 warmup_frac=cfg.warmup_frac)
+    return run(key, scn, rhos, cfg, n_seeds=n_seeds,
+               percentiles=percentiles, n_bins=n_bins,
+               chunk_size=chunk_size)
 
 
 def sweep_dists(key: Array, dist_list, rhos: Array, cfg: SimConfig, *,
@@ -565,23 +789,23 @@ def sweep_dists(key: Array, dist_list, rhos: Array, cfg: SimConfig, *,
                 n_bins: int = DEFAULT_BINS,
                 chunk_size: int | None = None) -> dict[str, Array]:
     """Sweep MANY service-time distributions in one engine call by stacking
-    them along the seed axis. Summaries come back with a leading dist axis:
-    ``(len(dist_list), n_seeds, len(rhos), len(ks))``. Every distribution
-    sees the same per-seed keys (paired comparisons across dists);
-    ``chunk_size`` streams arrivals exactly as in ``sweep``."""
-    ks = tuple(int(k) for k in ks)
-    k_max = max(ks)
-    rhos = jnp.asarray(rhos)
-    d = len(dist_list)
+    them along the seed axis; summaries gain a leading dist axis
+    ``(len(dist_list), n_seeds, len(rhos), len(ks))``.
 
-    sampler = _sweep_dists_sampler(key, dist_list, cfg, k_max, n_seeds,
-                                   chunk_size)
-    out = _run_engine(sampler, d * n_seeds, rhos, cfg, ks=ks,
-                      percentiles=tuple(percentiles), n_bins=n_bins,
-                      chunk_size=chunk_size)
-    return {k: (v.reshape((d, n_seeds) + v.shape[1:])
-                if isinstance(v, jax.Array) else v)
-            for k, v in out.items()}
+    .. deprecated:: Thin shim over ``run`` with a multi-``dists``
+       ``Scenario.paper_default`` — bit-identical output; prefer ``run``.
+    """
+    dist_list = tuple(dist_list)
+    scn = Scenario.paper_default(dist_list, ks=tuple(int(k) for k in ks),
+                                 client_overhead=cfg.client_overhead,
+                                 warmup_frac=cfg.warmup_frac)
+    out = run(key, scn, rhos, cfg, n_seeds=n_seeds,
+              percentiles=percentiles, n_bins=n_bins,
+              chunk_size=chunk_size)
+    if len(dist_list) == 1:  # run() adds the dist axis only for d > 1
+        out = {k: (v[None] if isinstance(v, jax.Array) else v)
+               for k, v in out.items()}
+    return out
 
 
 def mean_response(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig,
@@ -599,15 +823,16 @@ def replication_gain(key: Array, dist: ServiceDist, rhos: Array,
                      mesh: jax.sharding.Mesh | None = None) -> Array:
     """mean_k1(rho) - mean_k(rho), CRN-paired per seed. Positive = k helps.
 
+    .. deprecated:: Thin shim over ``run`` with a paper-default
+       ``Scenario`` at ``ks=(1, k)``; prefer ``run`` + a paired-gain
+       reduction (or ``threshold.scenario_gain``).
+
     ``mesh`` routes the sweep through the sharded cell-plan executor
     (bit-identical to the local path; see the module CRN contract)."""
-    if mesh is not None:
-        from repro.distributed.sweep_shard import sweep_sharded
-        out = sweep_sharded(key, dist, rhos, cfg, ks=(1, k),
-                            n_seeds=n_seeds, percentiles=(),
-                            chunk_size=chunk_size, mesh=mesh)
-    else:
-        out = sweep(key, dist, rhos, cfg, ks=(1, k), n_seeds=n_seeds,
-                    percentiles=(), chunk_size=chunk_size)
+    scn = Scenario.paper_default(dist, ks=(1, int(k)),
+                                 client_overhead=cfg.client_overhead,
+                                 warmup_frac=cfg.warmup_frac)
+    out = run(key, scn, rhos, cfg, n_seeds=n_seeds, percentiles=(),
+              chunk_size=chunk_size, mesh=mesh)
     m = out["mean"]  # (S, B, 2)
     return jnp.mean(m[:, :, 0] - m[:, :, 1], axis=0)

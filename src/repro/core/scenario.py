@@ -1,0 +1,277 @@
+"""Declarative scenario spec for the sweep engine.
+
+The paper's queueing model (§2.1) is ONE point in a larger policy space:
+every copy is served to completion (no cancellation), copies always go
+out (replicate-all), and copies' service times are i.i.d. draws. The
+most-cited follow-ups sweep the rest of that space — Shah et al. ("When
+Do Redundant Requests Reduce Latency?") show the answer flips once
+service times carry a server-independent *request* component, and
+Joshi et al. study replicate-vs-queue tradeoffs with cancellation. A
+``Scenario`` names a point (or, as a sequence, a *grid*) in that space
+declaratively, and ``repro.core.queueing.run`` executes it on the
+fused/chunked/sharded cell-plan engine.
+
+Replication policies (``Policy``):
+
+  * ``REPLICATE_ALL`` — the paper's model: every copy is dispatched and
+    served to completion; the loser copies keep occupying their servers
+    after the winner finishes (this is what doubles utilization).
+  * ``CANCEL_ON_COMPLETE`` — the Joshi et al. regime: when the winning
+    copy finishes at ``t_win``, every loser vacates its queue slot — a
+    loser already in service frees its server at ``t_win``, a loser
+    still queued (its server busy past ``t_win``) is dequeued and
+    consumes no server time at all.
+  * ``REPLICATE_TO_IDLE`` — opportunistic replication: the primary copy
+    always dispatches; extra copies dispatch only to servers that are
+    idle at the arrival instant, and dispatched copies run to
+    completion.
+
+Service models (``ServiceModel``):
+
+  * ``IID`` — the paper's model: each copy's service time is an
+    independent draw from the service distribution.
+  * ``SERVER_DEPENDENT`` — Shah et al.'s decomposition: a request
+    carries a shared component ``X_shared`` (one extra draw per
+    arrival, identical for every copy) blended with the per-copy draw:
+    ``svc_j = mix * X_shared + (1 - mix) * X_j``. ``mix=0`` is
+    bit-identical to ``IID``; ``mix=1`` makes every copy's service time
+    identical, so replication buys only queue diversity while still
+    multiplying load — the regime where redundancy hurts.
+
+A ``Scenario`` also carries the grid knobs that used to ride
+``sweep(..., ks=)`` / ``SimConfig``: the replication factors ``ks``,
+the per-request ``client_overhead`` charged when k > 1 (paper Fig 4),
+and the ``warmup_frac`` of arrivals dropped from summaries. Machine
+shape (``n_servers`` / ``n_arrivals``) stays in ``SimConfig`` — a
+Scenario describes *what* is simulated, the config *how much*.
+
+``Scenario`` is registered as a static pytree node (hashable, no array
+leaves), so it can cross ``jit`` boundaries as a static argument and
+key ``lru_cache``s. Per-cell execution lowers each scenario to
+``Variant`` coordinates — one per entry of ``ks`` — which
+``repro.core.cellplan`` stores as per-cell policy/model codes next to
+(seed, load, k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterable, Sequence, Union
+
+import jax
+
+from repro.core.distributions import ServiceDist
+
+
+class Policy(enum.IntEnum):
+    """Replication-policy codes (per-cell coordinates in the cell plan)."""
+
+    REPLICATE_ALL = 0
+    CANCEL_ON_COMPLETE = 1
+    REPLICATE_TO_IDLE = 2
+
+
+class ServiceModel(enum.IntEnum):
+    """Service-model codes (per-cell coordinates in the cell plan)."""
+
+    IID = 0
+    SERVER_DEPENDENT = 1
+
+
+REPLICATE_ALL = Policy.REPLICATE_ALL
+CANCEL_ON_COMPLETE = Policy.CANCEL_ON_COMPLETE
+REPLICATE_TO_IDLE = Policy.REPLICATE_TO_IDLE
+IID = ServiceModel.IID
+SERVER_DEPENDENT = ServiceModel.SERVER_DEPENDENT
+
+_POLICY_NAMES = {p.name.lower(): p for p in Policy}
+_MODEL_NAMES = {m.name.lower(): m for m in ServiceModel}
+
+
+def parse_policy(name: Union[str, int, Policy]) -> Policy:
+    """CLI-friendly lookup: 'cancel_on_complete' -> Policy (case-insensitive)."""
+    if isinstance(name, str):
+        return _POLICY_NAMES[name.lower()]
+    return Policy(name)
+
+
+def parse_service_model(name: Union[str, int, ServiceModel]) -> ServiceModel:
+    """CLI-friendly lookup: 'server_dependent' -> ServiceModel."""
+    if isinstance(name, str):
+        return _MODEL_NAMES[name.lower()]
+    return ServiceModel(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One execution variant — a (k, policy, model, mix, overhead) point.
+
+    The engine's cell plan crosses variants with (seed, load): variant
+    ``j`` of a scenario grid occupies the plan's k-axis slot ``j``.
+    """
+
+    k: int
+    policy: Policy = Policy.REPLICATE_ALL
+    service_model: ServiceModel = ServiceModel.IID
+    mix: float = 0.0
+    overhead: float = 0.0  # client overhead; the engine charges it iff k > 1
+
+    @property
+    def needs_shared_draw(self) -> bool:
+        return self.service_model == ServiceModel.SERVER_DEPENDENT
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A declarative point in the replication policy space.
+
+    ``dists`` is one ``ServiceDist`` or a tuple of them; multiple
+    distributions stack along the engine's seed axis exactly as
+    ``sweep_dists`` did (summaries gain a leading dist axis). A bare
+    ``ServiceDist`` is normalized to a 1-tuple, and ``mix`` is
+    normalized to 0.0 under ``IID`` (where it is inert) so that
+    behaviorally identical scenarios compare, hash, and record
+    provenance identically.
+    """
+
+    dists: tuple[ServiceDist, ...]
+    policy: Policy = Policy.REPLICATE_ALL
+    service_model: ServiceModel = ServiceModel.IID
+    mix: float = 0.5
+    ks: tuple[int, ...] = (1, 2)
+    client_overhead: float = 0.0
+    warmup_frac: float = 0.1
+
+    def __post_init__(self):
+        d = self.dists
+        if isinstance(d, ServiceDist):
+            d = (d,)
+        d = tuple(d)
+        if not d or not all(isinstance(x, ServiceDist) for x in d):
+            raise ValueError("Scenario.dists needs >= 1 ServiceDist")
+        ks = tuple(int(k) for k in self.ks)
+        if not ks or min(ks) < 1:
+            raise ValueError(f"Scenario.ks must be >= 1, got {self.ks}")
+        if not 0.0 <= float(self.mix) <= 1.0:
+            raise ValueError(f"Scenario.mix must be in [0, 1], got {self.mix}")
+        if not 0.0 <= float(self.warmup_frac) < 1.0:
+            raise ValueError(
+                f"Scenario.warmup_frac must be in [0, 1), got "
+                f"{self.warmup_frac}")
+        model = ServiceModel(self.service_model)
+        object.__setattr__(self, "dists", d)
+        object.__setattr__(self, "ks", ks)
+        object.__setattr__(self, "policy", Policy(self.policy))
+        object.__setattr__(self, "service_model", model)
+        object.__setattr__(self, "mix",
+                           float(self.mix) if model == SERVER_DEPENDENT
+                           else 0.0)
+        object.__setattr__(self, "client_overhead",
+                           float(self.client_overhead))
+        object.__setattr__(self, "warmup_frac", float(self.warmup_frac))
+
+    @classmethod
+    def paper_default(cls, dists: Union[ServiceDist,
+                                        Sequence[ServiceDist], None] = None,
+                      *, ks: tuple[int, ...] = (1, 2),
+                      client_overhead: float = 0.0,
+                      warmup_frac: float = 0.1) -> "Scenario":
+        """The paper's §2.1 model: replicate-all, no cancellation, i.i.d.
+        service. ``run(key, Scenario.paper_default(dist, ks=ks), ...)``
+        is bit-identical to the legacy ``sweep(key, dist, ..., ks=ks)``.
+        Defaults to exponential service (Theorem 1's case)."""
+        if dists is None:
+            from repro.core.distributions import exponential
+            dists = exponential()
+        return cls(dists=dists, policy=Policy.REPLICATE_ALL,
+                   service_model=ServiceModel.IID, mix=0.0, ks=ks,
+                   client_overhead=client_overhead,
+                   warmup_frac=warmup_frac)
+
+    @property
+    def k_max(self) -> int:
+        return max(self.ks)
+
+    @property
+    def n_dists(self) -> int:
+        return len(self.dists)
+
+    def variant_for(self, k: int) -> Variant:
+        """The per-cell coordinates of this scenario at replication ``k``."""
+        return Variant(k=int(k), policy=self.policy,
+                       service_model=self.service_model, mix=self.mix,
+                       overhead=self.client_overhead)
+
+    def variants(self) -> tuple[Variant, ...]:
+        """One ``Variant`` per entry of ``ks`` (the plan's k-axis order)."""
+        return tuple(self.variant_for(k) for k in self.ks)
+
+
+jax.tree_util.register_static(Scenario)
+jax.tree_util.register_static(Variant)
+
+ScenarioLike = Union[Scenario, Sequence[Scenario]]
+
+
+def combine(scenario: ScenarioLike) -> tuple[tuple[ServiceDist, ...], float,
+                                             tuple[Variant, ...]]:
+    """Normalize one Scenario or a sequence (a *mixed grid*) for the engine.
+
+    A sequence concatenates each scenario's variants along the plan's
+    k-axis — mixed-policy / mixed-model grids run in ONE engine call and
+    one compiled body. All scenarios of a grid must share ``dists`` and
+    ``warmup_frac`` (they share the sampled inputs and the warmup
+    cutoff); ``ks`` / policy / model / mix / overhead vary per variant.
+
+    Returns ``(dists, warmup_frac, variants)``.
+    """
+    scns: tuple[Scenario, ...]
+    if isinstance(scenario, Scenario):
+        scns = (scenario,)
+    else:
+        scns = tuple(scenario)
+    if not scns or not all(isinstance(s, Scenario) for s in scns):
+        raise TypeError("expected a Scenario or a non-empty sequence of "
+                        f"Scenarios, got {scenario!r}")
+    first = scns[0]
+    for s in scns[1:]:
+        if s.dists != first.dists:
+            raise ValueError(
+                "all scenarios of a mixed grid must share dists "
+                f"(got {s.dists} vs {first.dists})")
+        if s.warmup_frac != first.warmup_frac:
+            raise ValueError(
+                "all scenarios of a mixed grid must share warmup_frac "
+                f"(got {s.warmup_frac} vs {first.warmup_frac})")
+    variants = tuple(v for s in scns for v in s.variants())
+    return first.dists, first.warmup_frac, variants
+
+
+def provenance(scenario: ScenarioLike) -> Union[dict, list]:
+    """JSON-serializable description of a scenario (benchmark rows record
+    this next to each measurement): policy / service model / mix / ks /
+    overhead per scenario."""
+    if not isinstance(scenario, Scenario):
+        return [provenance(s) for s in scenario]
+    return {"policy": scenario.policy.name,
+            "service_model": scenario.service_model.name,
+            "mix": scenario.mix, "ks": list(scenario.ks),
+            "client_overhead": scenario.client_overhead,
+            "dists": [d.name for d in scenario.dists]}
+
+
+def any_server_dependent(variants: Iterable[Variant]) -> bool:
+    """Whether the engine must sample the extra shared-component column."""
+    return any(v.needs_shared_draw for v in variants)
+
+
+def variant_codes(variants):
+    """Per-variant ``(policies, models)`` code lists for
+    ``cellplan.make_cell_plan`` — the ONE place Variants lower to plan
+    codes. Returns ``(None, None)`` (paper default everywhere) when
+    given a legacy ``ks`` tuple of plain ints."""
+    variants = tuple(variants)
+    if not variants or not isinstance(variants[0], Variant):
+        return None, None
+    return ([int(v.policy) for v in variants],
+            [int(v.service_model) for v in variants])

@@ -1,22 +1,31 @@
-"""Threshold-load estimation (paper §2.1).
+"""Threshold-load estimation (paper §2.1), for ANY scenario.
 
 The threshold load is "the largest utilization below which replication always
 helps mean response time". The paper's results: 1/3 for exponential service
 (Theorem 1), ~25.82% for deterministic service (conjectured global worst
-case), approaching 50% for sufficiently heavy-tailed service.
+case), approaching 50% for sufficiently heavy-tailed service. Shah et al.'s
+server-dependent service model and the cancellation policies move the
+threshold — pass a ``Scenario`` to estimate it anywhere in the policy space
+(e.g. the threshold collapses toward ~0.28 as the server-dependent ``mix``
+approaches 1, and cancellation pushes it past the paper's 0.5 bracket).
 
-Three estimators, all driven by the fused sweep engine in
-``repro.core.queueing`` (one jitted scan per evaluation, batched over
-seeds x loads x k; every estimator takes ``chunk_size`` and streams the
-engine when it is set, and ``mesh`` to route every probe batch through
-the sharded cell-plan executor ``repro.distributed.sweep_shard`` — the
-probe loads ride the engine's flattened cell axis, so one sharded call
-still serves a whole bracket, and results stay bit-identical to the
-unsharded path):
+Every estimator takes EITHER a bare ``ServiceDist`` — estimated under the
+paper's model, with ``client_overhead``/``warmup_frac`` read from the
+``SimConfig`` exactly as before (bit-identical to the pre-scenario API) —
+or a ``repro.core.scenario.Scenario`` whose policy / service model / mix /
+overhead define the comparison; its ``ks`` are overridden to ``(1, k)``.
+
+Three estimators, all driven by ``repro.core.queueing.run`` (one jitted
+scan per evaluation, batched over seeds x loads x k; every estimator takes
+``chunk_size`` and streams the engine when it is set, and ``mesh`` to
+route every probe batch through the sharded cell-plan executor
+``repro.distributed.sweep_shard`` — the probe loads ride the engine's
+flattened cell axis, so one sharded call still serves a whole bracket, and
+results stay bit-identical to the unsharded path):
 
   * ``threshold_bisect`` — bisection on the sign of the CRN-paired gain
-    mean_k1(rho) - mean_k2(rho). Both bracket probes ride in a single
-    batched sweep call, and the bisection itself is SPECULATIVE: each
+    mean_k1(rho) - mean_k(rho). Both bracket probes ride in a single
+    batched engine call, and the bisection itself is SPECULATIVE: each
     engine call evaluates the current midpoint AND both possible next
     midpoints as one batched 3-load sweep, so two bisection levels
     resolve per call (the engine's wall clock is dominated by the scan
@@ -30,11 +39,12 @@ unsharded path):
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.distributions import ServiceDist
-from repro.core.queueing import SimConfig, replication_gain, sweep, sweep_dists
+from repro.core.queueing import Scenario, SimConfig, run
 
 Array = jax.Array
 
@@ -44,20 +54,39 @@ def _paired_gain(mean: Array) -> Array:
     return jnp.mean(mean[:, :, 0] - mean[:, :, 1], axis=0)
 
 
-def _engines(mesh):
-    """(sweep, sweep_dists) — local pair, or the sharded cell-plan
-    executors bound to ``mesh`` (bit-identical; lazy import keeps
-    core free of the distributed layer unless sharding is requested)."""
-    if mesh is None:
-        return sweep, sweep_dists
-    from functools import partial
+def _as_scenario(dist_or_scenario, cfg: SimConfig, k: int) -> Scenario:
+    """Normalize an estimator's target to a ``Scenario`` at ks=(1, k).
 
-    from repro.distributed import sweep_shard
-    return (partial(sweep_shard.sweep_sharded, mesh=mesh),
-            partial(sweep_shard.sweep_dists_sharded, mesh=mesh))
+    Bare distributions get the paper default with the legacy
+    ``SimConfig`` overhead/warmup knobs (bit-identical to the
+    pre-scenario estimators). Multi-``dists`` scenarios are rejected —
+    their summaries carry a leading dist axis the single-threshold
+    reductions here cannot interpret; use ``threshold_grid_batch``."""
+    if isinstance(dist_or_scenario, Scenario):
+        if dist_or_scenario.n_dists > 1:
+            raise ValueError(
+                "this estimator takes a single-dist Scenario (got "
+                f"{dist_or_scenario.n_dists} dists); use "
+                "threshold_grid_batch for multi-dist scenarios")
+        return dataclasses.replace(dist_or_scenario, ks=(1, int(k)))
+    return Scenario.paper_default(dist_or_scenario, ks=(1, int(k)),
+                                  client_overhead=cfg.client_overhead,
+                                  warmup_frac=cfg.warmup_frac)
 
 
-def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
+def scenario_gain(key: Array, dist_or_scenario, rhos: Array,
+                  cfg: SimConfig, *, k: int = 2, n_seeds: int = 2,
+                  chunk_size: int | None = None, mesh=None) -> Array:
+    """(B,) seed-averaged CRN-paired gain mean_k1(rho) - mean_k(rho) under
+    the scenario's policy / service model (positive = replication helps).
+    The scenario-aware generalization of ``queueing.replication_gain``."""
+    scn = _as_scenario(dist_or_scenario, cfg, k)
+    out = run(key, scn, rhos, cfg, n_seeds=n_seeds, percentiles=(),
+              chunk_size=chunk_size, mesh=mesh)
+    return _paired_gain(out["mean"])
+
+
+def threshold_bisect(key: Array, dist_or_scenario, cfg: SimConfig, *,
                      k: int = 2, lo: float = 0.02, hi: float = 0.499,
                      iters: int = 10, n_seeds: int = 3,
                      speculative: bool = True,
@@ -76,12 +105,12 @@ def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
     bisection LEVELS either way, so the interval shrinks by 2**iters with
     about half the engine calls.
     """
-    sweep_fn, _ = _engines(mesh)
+    scn = _as_scenario(dist_or_scenario, cfg, k)
+    kw = dict(n_seeds=n_seeds, percentiles=(), chunk_size=chunk_size,
+              mesh=mesh)
     keys = jax.random.split(key, iters + 1)
     # both bracket probes in one batched (seeds x {lo,hi} x {1,k}) sweep
-    bracket = sweep_fn(keys[-1], dist, jnp.asarray([lo, hi]), cfg,
-                       ks=(1, k), n_seeds=n_seeds, percentiles=(),
-                       chunk_size=chunk_size)
+    bracket = run(keys[-1], scn, jnp.asarray([lo, hi]), cfg, **kw)
     g_lo, g_hi = (float(g) for g in _paired_gain(bracket["mean"]))
     if g_hi > 0.0:
         return hi
@@ -94,9 +123,7 @@ def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
         if speculative and level + 1 < iters:
             # midpoint + both possible next midpoints, one engine call
             probes = jnp.asarray([0.5 * (a + mid), mid, 0.5 * (mid + b)])
-            out = sweep_fn(keys[call], dist, probes, cfg, ks=(1, k),
-                           n_seeds=n_seeds, percentiles=(),
-                           chunk_size=chunk_size)
+            out = run(keys[call], scn, probes, cfg, **kw)
             g_q_lo, g_mid, g_q_hi = (float(g)
                                      for g in _paired_gain(out["mean"]))
             if g_mid > 0.0:
@@ -109,10 +136,8 @@ def threshold_bisect(key: Array, dist: ServiceDist, cfg: SimConfig, *,
                 b = nxt
             level += 2
         else:
-            g = replication_gain(keys[call], dist, jnp.asarray([mid]), cfg,
-                                 k=k, n_seeds=n_seeds, chunk_size=chunk_size,
-                                 mesh=mesh)
-            if float(g[0]) > 0.0:
+            out = run(keys[call], scn, jnp.asarray([mid]), cfg, **kw)
+            if float(_paired_gain(out["mean"])[0]) > 0.0:
                 a = mid
             else:
                 b = mid
@@ -140,18 +165,18 @@ def _default_rhos() -> Array:
     return jnp.linspace(0.05, 0.495, 24)
 
 
-def threshold_grid(key: Array, dist: ServiceDist, cfg: SimConfig, *,
+def threshold_grid(key: Array, dist_or_scenario, cfg: SimConfig, *,
                    k: int = 2, rhos: Array | None = None, n_seeds: int = 2,
                    chunk_size: int | None = None, mesh=None) -> float:
     """ONE fused sweep over the load grid + crossing interpolation."""
     if rhos is None:
         rhos = _default_rhos()
-    g = replication_gain(key, dist, rhos, cfg, k=k, n_seeds=n_seeds,
-                         chunk_size=chunk_size, mesh=mesh)
+    g = scenario_gain(key, dist_or_scenario, rhos, cfg, k=k,
+                      n_seeds=n_seeds, chunk_size=chunk_size, mesh=mesh)
     return _interp_crossing(rhos, g)
 
 
-def threshold_grid_batch(key: Array, dist_list, cfg: SimConfig, *,
+def threshold_grid_batch(key: Array, dists_or_scenario, cfg: SimConfig, *,
                          k: int = 2, rhos: Array | None = None,
                          n_seeds: int = 2,
                          chunk_size: int | None = None,
@@ -159,13 +184,21 @@ def threshold_grid_batch(key: Array, dist_list, cfg: SimConfig, *,
     """Thresholds for MANY distributions from a single fused engine call
     (distributions stack along the engine's seed axis, so e.g. all 15
     Figure 2 families run in one scan — sharded over the cell axis when
-    ``mesh`` is given)."""
+    ``mesh`` is given). Accepts a list of distributions (paper model) or
+    one multi-``dists`` ``Scenario``; returns one threshold per dist."""
     if rhos is None:
         rhos = _default_rhos()
-    _, sweep_dists_fn = _engines(mesh)
-    out = sweep_dists_fn(key, dist_list, rhos, cfg, ks=(1, k),
-                         n_seeds=n_seeds, percentiles=(),
-                         chunk_size=chunk_size)
-    m = out["mean"]  # (D, S, B, 2)
+    if isinstance(dists_or_scenario, Scenario):
+        # multi-dist scenarios are THE point of the batch estimator
+        scn = dataclasses.replace(dists_or_scenario, ks=(1, int(k)))
+    else:
+        dist_tuple = tuple(dists_or_scenario)  # once: may be a generator
+        scn = dataclasses.replace(_as_scenario(dist_tuple[0], cfg, k),
+                                  dists=dist_tuple)
+    out = run(key, scn, rhos, cfg, n_seeds=n_seeds, percentiles=(),
+              chunk_size=chunk_size, mesh=mesh)
+    m = out["mean"]  # (D, S, B, 2) — or (S, B, 2) for a single dist
+    if m.ndim == 3:
+        m = m[None]
     g = jnp.mean(m[:, :, :, 0] - m[:, :, :, 1], axis=1)  # (D, B)
-    return [_interp_crossing(rhos, g[d]) for d in range(len(dist_list))]
+    return [_interp_crossing(rhos, g[d]) for d in range(g.shape[0])]

@@ -1,13 +1,16 @@
 """Sharded cell-plan execution layer for the chunked sweep engine.
 
-``sweep_sharded`` / ``sweep_dists_sharded`` are drop-in, BIT-IDENTICAL
-replacements for ``repro.core.queueing.sweep`` / ``sweep_dists`` that run
-the engine's per-chunk scan body under ``shard_map`` over a 1-D
-``"cells"`` device mesh (``repro.launch.mesh.make_sweep_mesh``). The
-(seed x load x k) grid — dist-stacked along the seed axis for
-``sweep_dists_sharded`` — is flattened by ``repro.core.cellplan`` into
-one cell axis padded to a multiple of the mesh size, and every device
-owns ``n_padded / n_devices`` cells end to end:
+``run_sharded`` (the ``mesh=`` path of ``repro.core.queueing.run``) and
+the legacy shims ``sweep_sharded`` / ``sweep_dists_sharded`` are
+drop-in, BIT-IDENTICAL replacements for the unsharded engine that run
+its per-chunk scan body under ``shard_map`` over a 1-D ``"cells"``
+device mesh (``repro.launch.mesh.make_sweep_mesh``). The
+(seed x load x variant) grid — dist-stacked along the seed axis, with
+each variant's scenario policy/model codes riding the plan as per-cell
+coordinates, so MIXED-policy grids shard like any other — is flattened
+by ``repro.core.cellplan`` into one cell axis padded to a multiple of
+the mesh size, and every device owns ``n_padded / n_devices`` cells end
+to end:
 
   * Per-cell state is DEVICE-LOCAL for the whole stream: server
     free-time grids, Kahan mean state, and hist_sketch rows live in the
@@ -53,6 +56,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import cellplan, queueing
+from repro.core import scenario as scenario_mod
 from repro.core.distributions import ServiceDist
 from repro.launch.mesh import make_sweep_mesh
 
@@ -81,30 +85,33 @@ def _body_fn(mesh: jax.sharding.Mesh, n_servers: int, n_bins: int,
              block: int):
     """Build (and cache) the jitted, shard_mapped chunk-body executor.
 
-    The carry and the per-cell parameters are sharded over ``"cells"``;
-    the seed-level sampled inputs are replicated (each device reads only
-    its cells' rows via the sharded ``seed_idx``). Cached per mesh so
-    repeated engine calls (threshold bisection!) reuse the wrapper and
-    its jit cache.
+    The carry and the per-cell parameters — including the scenario
+    policy/model codes and service-model mixes — are sharded over
+    ``"cells"``; the seed-level sampled inputs are replicated (each
+    device reads only its cells' rows via the sharded ``seed_idx``).
+    Cached per mesh so repeated engine calls (threshold bisection!)
+    reuse the wrapper and its jit cache.
     """
     def chunk_body(free, ssum, comp, hist, seed_idx, rates, k_mask, ovh,
+                   policy_code, model_code, mix,
                    unit_gaps, servers, services, start, n_valid,
                    warmup_start):
         return queueing._sweep_chunk_cells(
             free, ssum, comp, hist, unit_gaps, servers, services, start,
             n_valid, warmup_start, seed_idx, rates, k_mask, ovh,
+            policy_code, model_code, mix,
             n_servers=n_servers, n_bins=n_bins, block=block)
 
     cells = P("cells")
     return jax.jit(_shard_map_unchecked(
         chunk_body, mesh,
-        in_specs=(cells,) * 8 + (P(),) * 6,
+        in_specs=(cells,) * 11 + (P(),) * 6,
         out_specs=(cells,) * 4))
 
 
 def _sweep_cells_sharded(sampler, n_seeds_total: int,
                          rhos: Array, cfg: queueing.SimConfig, *,
-                         ks: tuple[int, ...],
+                         variants, warmup_frac: float,
                          percentiles: tuple[float, ...], n_bins: int,
                          chunk_size: int | None,
                          mesh: jax.sharding.Mesh | None) -> dict[str, Array]:
@@ -112,18 +119,26 @@ def _sweep_cells_sharded(sampler, n_seeds_total: int,
 
     ``sampler(chunk_idx, chunk_len)`` is the SAME host-side per-seed
     sampler closure the unsharded ``_run_engine`` consumes — identical
-    randomness by construction.
+    randomness by construction. ``variants`` are the scenario's
+    per-variant coordinates (``queueing._plan_cell_params`` also accepts
+    a legacy ``ks`` int tuple); their policy/model codes shard over the
+    mesh with the rest of the plan, so MIXED-policy grids ride the same
+    device-local body.
     """
     mesh = make_sweep_mesh() if mesh is None else mesh
     if tuple(mesh.axis_names) != ("cells",):
         raise ValueError(f"expected a 1-D ('cells',) mesh "
                          f"(make_sweep_mesh), got axes {mesh.axis_names}")
     m = cfg.n_arrivals
-    plan = cellplan.make_cell_plan(n_seeds_total, rhos.shape[0], len(ks),
-                                   pad_to=mesh.devices.size)
-    rates_c, k_mask_c, ovh_c = queueing._plan_cell_params(plan, rhos, cfg,
-                                                          ks)
-    warmup_start = int(m * cfg.warmup_frac)
+    variants = tuple(variants)
+    policies, models = scenario_mod.variant_codes(variants)
+    plan = cellplan.make_cell_plan(n_seeds_total, rhos.shape[0],
+                                   len(variants),
+                                   pad_to=mesh.devices.size,
+                                   policies=policies, models=models)
+    rates_c, k_mask_c, ovh_c, mix_c = queueing._plan_cell_params(
+        plan, rhos, cfg, variants)
+    warmup_start = int(m * warmup_frac)
     need_hist = len(percentiles) > 0
     t_chunk, n_chunks, block, pad = queueing._chunk_layout(
         cfg, chunk_size, need_hist)
@@ -137,12 +152,31 @@ def _sweep_cells_sharded(sampler, n_seeds_total: int,
         start = c * t_chunk
         free, ssum, comp, hist = run_chunk(
             free, ssum, comp, hist, plan.seed_idx, rates_c, k_mask_c,
-            ovh_c, unit_gaps, servers, services, jnp.asarray(start),
+            ovh_c, plan.policy_code, plan.model_code, mix_c,
+            unit_gaps, servers, services, jnp.asarray(start),
             jnp.asarray(min(t_chunk, m - start)),
             jnp.asarray(warmup_start))
 
     return queueing._finalize_summary(plan, ssum, hist, m - warmup_start,
                                       percentiles)
+
+
+def run_sharded(key: Array, scenario, rhos: Array, cfg: queueing.SimConfig,
+                *, n_seeds: int = 2,
+                percentiles: tuple[float, ...]
+                = queueing.DEFAULT_PERCENTILES,
+                n_bins: int = queueing.DEFAULT_BINS,
+                chunk_size: int | None = None,
+                mesh: jax.sharding.Mesh | None = None) -> dict[str, Array]:
+    """``queueing.run`` across a device mesh (``mesh=None`` uses every
+    visible device): same scenario semantics — including mixed-policy /
+    mixed-model grids — same summary shapes, bit-identical results for
+    the same ``(key, chunk_size)`` no matter the device count.
+    Equivalent to ``queueing.run(..., mesh=mesh)``."""
+    return queueing.run(key, scenario, rhos, cfg, n_seeds=n_seeds,
+                        percentiles=percentiles, n_bins=n_bins,
+                        chunk_size=chunk_size,
+                        mesh=make_sweep_mesh() if mesh is None else mesh)
 
 
 def sweep_sharded(key: Array, dist: ServiceDist, rhos: Array,
@@ -157,18 +191,16 @@ def sweep_sharded(key: Array, dist: ServiceDist, rhos: Array,
     ``mesh`` (default: all visible devices), same summary shapes
     ``(n_seeds, len(rhos), len(ks))``, and — per the CRN contract —
     bit-identical results for the same ``(key, chunk_size)`` no matter
-    the device count."""
-    ks = tuple(int(k) for k in ks)
-    k_max = max(ks)
-    rhos = jnp.asarray(rhos)
-    # THE sampler queueing.sweep uses — shared code, not a copy, so the
-    # bit-identity contract cannot drift
-    sampler = queueing._sweep_sampler(key, dist, cfg, k_max, n_seeds,
-                                      chunk_size)
-    return _sweep_cells_sharded(
-        sampler, n_seeds, rhos, cfg, ks=ks,
-        percentiles=tuple(percentiles), n_bins=n_bins,
-        chunk_size=chunk_size, mesh=mesh)
+    the device count.
+
+    .. deprecated:: Thin shim over ``run_sharded`` (paper-default
+       scenario); prefer ``queueing.run(..., mesh=...)``."""
+    scn = queueing.Scenario.paper_default(
+        dist, ks=tuple(int(k) for k in ks),
+        client_overhead=cfg.client_overhead, warmup_frac=cfg.warmup_frac)
+    return run_sharded(key, scn, rhos, cfg, n_seeds=n_seeds,
+                       percentiles=percentiles, n_bins=n_bins,
+                       chunk_size=chunk_size, mesh=mesh)
 
 
 def sweep_dists_sharded(key: Array, dist_list, rhos: Array,
@@ -184,19 +216,18 @@ def sweep_dists_sharded(key: Array, dist_list, rhos: Array,
     along the plan's seed axis (every dist shares per-seed keys and the
     same arrival process — CRN across dists), summaries come back
     ``(len(dist_list), n_seeds, len(rhos), len(ks))``, bit-identical to
-    the unsharded engine."""
-    ks = tuple(int(k) for k in ks)
-    k_max = max(ks)
-    rhos = jnp.asarray(rhos)
-    dist_list = tuple(dist_list)
-    d = len(dist_list)
+    the unsharded engine.
 
-    sampler = queueing._sweep_dists_sampler(key, dist_list, cfg, k_max,
-                                            n_seeds, chunk_size)
-    out = _sweep_cells_sharded(
-        sampler, d * n_seeds, rhos, cfg, ks=ks,
-        percentiles=tuple(percentiles), n_bins=n_bins,
-        chunk_size=chunk_size, mesh=mesh)
-    return {k: (v.reshape((d, n_seeds) + v.shape[1:])
-                if isinstance(v, jax.Array) else v)
-            for k, v in out.items()}
+    .. deprecated:: Thin shim over ``run_sharded`` (multi-``dists``
+       paper-default scenario); prefer ``queueing.run(..., mesh=...)``."""
+    dist_list = tuple(dist_list)
+    scn = queueing.Scenario.paper_default(
+        dist_list, ks=tuple(int(k) for k in ks),
+        client_overhead=cfg.client_overhead, warmup_frac=cfg.warmup_frac)
+    out = run_sharded(key, scn, rhos, cfg, n_seeds=n_seeds,
+                      percentiles=percentiles, n_bins=n_bins,
+                      chunk_size=chunk_size, mesh=mesh)
+    if len(dist_list) == 1:  # run() adds the dist axis only for d > 1
+        out = {k: (v[None] if isinstance(v, jax.Array) else v)
+               for k, v in out.items()}
+    return out

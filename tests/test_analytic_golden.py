@@ -9,8 +9,12 @@ the simulator to the analytics:
   * M/M/1 mean response 1/(1-rho) at several loads (k=1, exponential),
   * the paper's min-of-two-M/M/1 approximation 1/(2(1-2rho)) for k=2,
   * the M/M/1 response-time p99 (Exp(1-rho) quantile) via the Pallas
-    histogram sketch, and
-  * Theorem 1: the exponential k=2 threshold at rho = 1/3.
+    histogram sketch,
+  * Theorem 1: the exponential k=2 threshold at rho = 1/3, and
+  * the CANCEL_ON_COMPLETE policy (scenario API) against the
+    M/M/1-with-cancellation analytic bounds: mean response sandwiched
+    in (1/k, 1/(1-rho)) at every load — including loads where
+    replicate-all is unstable — and -> E[min] = 1/k as rho -> 0.
 """
 import math
 
@@ -19,11 +23,13 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import analytic, distributions as dists, queueing, threshold
+from repro.core.scenario import CANCEL_ON_COMPLETE, Scenario
 
 CHUNK = 8_192
 N_ARRIVALS = 1_000_000
 RHOS_K1 = (0.2, 0.5, 0.7)
 RHOS_K2 = (0.1, 0.25)
+RHOS_CANCEL = (0.02, 0.25, 0.6)
 
 
 @pytest.fixture(scope="module")
@@ -68,6 +74,40 @@ class TestReplicatedGolden:
         sim = float(k2_means[i])
         expect = float(analytic.mm1_replicated_mean(rho, 2))
         assert sim == pytest.approx(expect, rel=0.05)
+
+
+@pytest.fixture(scope="module")
+def cancel_means():
+    cfg = queueing.SimConfig(n_servers=20, n_arrivals=N_ARRIVALS)
+    scn = Scenario(dists=dists.exponential(), policy=CANCEL_ON_COMPLETE,
+                   ks=(2,))
+    out = queueing.run(jax.random.PRNGKey(103), scn,
+                       jnp.asarray(RHOS_CANCEL), cfg, n_seeds=1,
+                       percentiles=(), chunk_size=CHUNK)
+    return out["mean"][0, :, 0]
+
+
+class TestCancellationGolden:
+    """CANCEL_ON_COMPLETE (k=2, exponential) vs the M/M/1-with-cancellation
+    analytic bounds (see ``analytic.mm1_cancel_bounds``)."""
+
+    def test_low_load_approaches_min_of_two(self, cancel_means):
+        # rho -> 0: both copies start immediately, the loser cancels at
+        # the winner's finish => response -> min of two Exp(1), mean 1/2.
+        assert float(cancel_means[0]) == pytest.approx(0.5, rel=0.03)
+
+    @pytest.mark.parametrize("i,rho", enumerate(RHOS_CANCEL))
+    def test_within_analytic_bounds(self, cancel_means, i, rho):
+        lo, hi = (float(b) for b in analytic.mm1_cancel_bounds(rho, 2))
+        sim = float(cancel_means[i])
+        assert lo < sim < hi, (rho, lo, sim, hi)
+
+    def test_stable_where_replicate_all_is_not(self, cancel_means):
+        # rho = 0.6 > 1/2: replicate-all doubles utilization past 1 and
+        # diverges; cancellation keeps the system stable and BETTER than
+        # the unreplicated M/M/1 (redundancy never hurts for exp service).
+        sim = float(cancel_means[-1])
+        assert sim < float(analytic.mm1_mean(0.6))
 
 
 class TestTheorem1Golden:

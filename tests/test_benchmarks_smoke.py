@@ -27,6 +27,7 @@ MODULES = [
     "serving_hedge",
     "roofline",
     "sweep_engine",
+    "fig_policy_space",
     "fig14_network",
 ]
 
@@ -37,7 +38,7 @@ def test_benchmark_entry_runs_smoke(name):
     rows = mod.run(smoke=True)
     assert isinstance(rows, list) and rows, name
     for row in rows:
-        # sharded rows may carry a 4th element (mesh-shape provenance)
+        # rows may carry mesh-shape (4th) and scenario (5th) provenance
         label, us, derived = row[:3]
         assert isinstance(label, str) and label
         assert float(us) >= 0.0
@@ -49,13 +50,32 @@ def test_sweep_engine_sharded_rows_on_single_device_mesh():
     """The mesh-aware path emits sharded rows with mesh provenance even
     on a 1-device mesh (CI's multi-device job exercises 8)."""
     import benchmarks.sweep_engine as se
+    from benchmarks.common import row_provenance
     from repro.launch.mesh import make_sweep_mesh
     rows = se.run(smoke=True, mesh=make_sweep_mesh(1))
     sharded = [r for r in rows if "sharded" in r[0]]
     assert sharded, [r[0] for r in rows]
     for row in sharded:
-        assert len(row) == 4 and tuple(row[3]) == (1,), row
+        mesh, _ = row_provenance(row)
+        assert mesh == [1], row
         assert "bit_identical=True" in row[2], row
+
+
+def test_fig_policy_space_scenario_provenance():
+    """Every scenario row of the policy-space figure carries its policy /
+    service-model / mix provenance (recorded per JSON row by run.py);
+    the crossover summary row reports the Shah et al. sign flip."""
+    import benchmarks.fig_policy_space as fps
+    from benchmarks.common import row_provenance
+    rows = fps.run(smoke=True)
+    by_name = {r[0]: r for r in rows}
+    _, scn = row_provenance(by_name["fig_policy_space/iid"])
+    assert scn["policy"] == "REPLICATE_ALL" and scn["mix"] == 0.0
+    _, scn = row_provenance(by_name["fig_policy_space/server_dep_mix1"])
+    assert scn["service_model"] == "SERVER_DEPENDENT" and scn["mix"] == 1.0
+    _, scn = row_provenance(by_name["fig_policy_space/cancel"])
+    assert scn["policy"] == "CANCEL_ON_COMPLETE"
+    assert "crossover=" in by_name["fig_policy_space/crossover"][2]
 
 
 def test_fig12_accepts_chunked_engine_config():

@@ -1,11 +1,14 @@
 """Cell-plan tests: (S, B, K) <-> cell-axis round trips, padding mask
-correctness, and isolation of masked pad cells (they must never touch a
-real cell's Kahan mean or hist_sketch bins)."""
+correctness, per-cell scenario policy/model codes, and isolation of
+masked pad cells (they must never touch a real cell's Kahan mean or
+hist_sketch bins — including in MIXED-policy grids)."""
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import cellplan, distributions as dists, queueing
+from repro.core import cellplan, distributions as dists, queueing, scenario
+from repro.core.scenario import (CANCEL_ON_COMPLETE, SERVER_DEPENDENT,
+                                 Variant)
 
 
 class TestPlanCoordinates:
@@ -53,35 +56,79 @@ class TestPlanCoordinates:
         with pytest.raises(ValueError):
             cellplan.make_cell_plan(1, 1, 1, pad_to=0)
 
+    def test_default_codes_are_paper(self):
+        plan = cellplan.make_cell_plan(2, 3, 2)
+        assert not bool(plan.policy_code.any())  # REPLICATE_ALL
+        assert not bool(plan.model_code.any())   # IID
+
+    def test_per_variant_codes_gather_and_pad(self):
+        # 2 variants: paper (0,0) and cancel+server-dependent (1,1);
+        # cells inherit their variant slot's codes, pad cells cell 0's.
+        plan = cellplan.make_cell_plan(1, 3, 2, pad_to=8,  # 6 -> 8
+                                       policies=[0, int(CANCEL_ON_COMPLETE)],
+                                       models=[0, int(SERVER_DEPENDENT)])
+        assert jnp.array_equal(plan.policy_code[:6], plan.k_idx[:6])
+        assert jnp.array_equal(plan.model_code[:6], plan.k_idx[:6])
+        assert not bool(plan.policy_code[6:].any())  # pad aliases cell 0
+        assert not bool(plan.model_code[6:].any())
+
+    def test_rejects_wrong_code_length(self):
+        with pytest.raises(ValueError):
+            cellplan.make_cell_plan(1, 2, 2, policies=[0])
+
 
 class TestPadCellIsolation:
+    @staticmethod
+    def _run_padded_vs_unpadded(variants, with_shared=False):
+        """Run the chunk body with an unpadded (pad_to=1) and a padded
+        (pad_to=8) plan for the same variants; return both end states."""
+        cfg = queueing.SimConfig(n_servers=5, n_arrivals=1024)
+        key = jax.random.PRNGKey(0)
+        rhos = jnp.asarray([0.2, 0.3, 0.4])
+        k_max = max(v.k if isinstance(v, Variant) else v for v in variants)
+        gaps, servers, services = queueing._sample_sweep_inputs(
+            key, dists.exponential(), cfg, k_max, 1,
+            with_shared=with_shared)
+
+        policies, models = scenario.variant_codes(variants)
+        outs = {}
+        for pad_to in (1, 8):  # 6 cells -> unpadded vs padded to 8
+            plan = cellplan.make_cell_plan(1, 3, len(variants),
+                                           pad_to=pad_to,
+                                           policies=policies,
+                                           models=models)
+            rates, k_mask, ovh, mix = queueing._plan_cell_params(
+                plan, rhos, cfg, variants)
+            state = queueing._init_cell_state(plan, cfg, 128, True)
+            state = queueing._sweep_chunk_cells(
+                *state, gaps, servers, services, jnp.asarray(0),
+                jnp.asarray(1024), jnp.asarray(100), plan.seed_idx,
+                rates, k_mask, ovh, plan.policy_code, plan.model_code,
+                mix, n_servers=5, n_bins=128, block=512)
+            outs[pad_to] = state
+        return outs
+
+    def _assert_valid_cells_match(self, outs):
+        for i, name in enumerate(("free", "ssum", "comp", "hist")):
+            a, b = outs[1][i], outs[8][i][:6]
+            assert jnp.array_equal(a, b), name
+
     def test_pad_cells_never_contribute(self):
         """Running the chunk body with a padded plan must leave every
         valid cell's Kahan state and histogram rows bit-identical to the
         unpadded run — pad cells do their (masked-off) work in their own
         rows only."""
-        cfg = queueing.SimConfig(n_servers=5, n_arrivals=1024)
-        key = jax.random.PRNGKey(0)
-        ks = (1, 2)
-        rhos = jnp.asarray([0.2, 0.3, 0.4])
-        gaps, servers, services = queueing._sample_sweep_inputs(
-            key, dists.exponential(), cfg, 2, 1)
+        self._assert_valid_cells_match(self._run_padded_vs_unpadded((1, 2)))
 
-        outs = {}
-        for pad_to in (1, 8):  # 6 cells -> unpadded vs padded to 8
-            plan = cellplan.make_cell_plan(1, 3, 2, pad_to=pad_to)
-            rates, k_mask, ovh = queueing._plan_cell_params(plan, rhos,
-                                                            cfg, ks)
-            state = queueing._init_cell_state(plan, cfg, 128, True)
-            state = queueing._sweep_chunk_cells(
-                *state, gaps, servers, services, jnp.asarray(0),
-                jnp.asarray(1024), jnp.asarray(100), plan.seed_idx,
-                rates, k_mask, ovh, n_servers=5, n_bins=128, block=512)
-            outs[pad_to] = state
-
-        for i, name in enumerate(("free", "ssum", "comp", "hist")):
-            a, b = outs[1][i], outs[8][i][:6]
-            assert jnp.array_equal(a, b), name
+    def test_pad_cells_never_contribute_mixed_policy(self):
+        """Same isolation guarantee for a MIXED grid: a cancellation cell
+        and a server-dependent cell next to a paper cell, with the extra
+        shared-component service column sampled."""
+        variants = (Variant(k=1),
+                    Variant(k=2, policy=CANCEL_ON_COMPLETE,
+                            service_model=SERVER_DEPENDENT, mix=0.7))
+        self._assert_valid_cells_match(
+            self._run_padded_vs_unpadded(variants, with_shared=True))
 
     def test_finalize_drops_pad_cells(self):
         plan = cellplan.make_cell_plan(1, 3, 2, pad_to=8)

@@ -1,0 +1,388 @@
+"""Scenario API tests: spec normalization, the paper-default bit-identity
+contract (``run(Scenario.paper_default(...))`` == legacy ``sweep``), the
+physics of the new replication policies and the server-dependent service
+model, mixed-grid isolation, and the scenario-aware threshold estimators.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import analytic, distributions as dists, queueing, threshold
+from repro.core.scenario import (CANCEL_ON_COMPLETE, IID, REPLICATE_ALL,
+                                 REPLICATE_TO_IDLE, SERVER_DEPENDENT,
+                                 Policy, Scenario, ServiceModel, Variant,
+                                 combine, parse_policy, parse_service_model,
+                                 provenance)
+
+CFG = queueing.SimConfig(n_servers=10, n_arrivals=10_000)
+RHOS = jnp.asarray([0.1, 0.3])
+
+
+class TestScenarioSpec:
+    def test_bare_dist_normalized_to_tuple(self):
+        scn = Scenario(dists=dists.exponential())
+        assert scn.dists == (dists.exponential(),)
+        assert scn.ks == (1, 2)
+
+    def test_paper_default(self):
+        scn = Scenario.paper_default(ks=(1, 3))
+        assert scn.dists == (dists.exponential(),)
+        assert scn.policy is Policy.REPLICATE_ALL
+        assert scn.service_model is ServiceModel.IID
+        assert scn.ks == (1, 3)
+        assert scn.k_max == 3
+
+    def test_validation(self):
+        d = dists.exponential()
+        with pytest.raises(ValueError):
+            Scenario(dists=())
+        with pytest.raises(ValueError):
+            Scenario(dists=d, ks=())
+        with pytest.raises(ValueError):
+            Scenario(dists=d, ks=(0,))
+        with pytest.raises(ValueError):
+            Scenario(dists=d, mix=1.5)
+        with pytest.raises(ValueError):
+            Scenario(dists=d, warmup_frac=1.0)
+
+    def test_static_pytree_and_hashable(self):
+        scn = Scenario.paper_default()
+        assert jax.tree_util.tree_leaves(scn) == []  # static: no leaves
+        assert hash(scn) == hash(Scenario.paper_default())
+        assert scn == Scenario.paper_default()
+
+    def test_variants(self):
+        scn = Scenario(dists=dists.exponential(), policy=CANCEL_ON_COMPLETE,
+                       service_model=SERVER_DEPENDENT, mix=0.7, ks=(1, 2),
+                       client_overhead=0.25)
+        v1, v2 = scn.variants()
+        assert (v1.k, v2.k) == (1, 2)
+        for v in (v1, v2):
+            assert v.policy is Policy.CANCEL_ON_COMPLETE
+            assert v.service_model is ServiceModel.SERVER_DEPENDENT
+            assert v.mix == 0.7 and v.overhead == 0.25
+            assert v.needs_shared_draw
+
+    def test_combine_concatenates_variants(self):
+        d = dists.exponential()
+        scns = (Scenario.paper_default(d, ks=(1, 2)),
+                Scenario(dists=d, policy=CANCEL_ON_COMPLETE, ks=(2,)))
+        dlist, warmup, variants = combine(scns)
+        assert dlist == (d,) and warmup == 0.1
+        assert [v.k for v in variants] == [1, 2, 2]
+        assert [v.policy for v in variants] == [
+            REPLICATE_ALL, REPLICATE_ALL, CANCEL_ON_COMPLETE]
+
+    def test_combine_rejects_mismatched_grids(self):
+        d = dists.exponential()
+        with pytest.raises(ValueError, match="dists"):
+            combine((Scenario(dists=d), Scenario(dists=dists.pareto(2.5))))
+        with pytest.raises(ValueError, match="warmup"):
+            combine((Scenario(dists=d),
+                     Scenario(dists=d, warmup_frac=0.2)))
+
+    def test_parse_helpers(self):
+        assert parse_policy("cancel_on_complete") is CANCEL_ON_COMPLETE
+        assert parse_policy(2) is REPLICATE_TO_IDLE
+        assert parse_service_model("server_dependent") is SERVER_DEPENDENT
+        assert parse_service_model("iid") is IID
+
+    def test_provenance_is_json_friendly(self):
+        import json
+        scn = Scenario(dists=dists.exponential(),
+                       service_model=SERVER_DEPENDENT, mix=0.5)
+        p = provenance(scn)
+        assert p["policy"] == "REPLICATE_ALL"
+        assert p["service_model"] == "SERVER_DEPENDENT"
+        assert p["mix"] == 0.5
+        json.dumps(provenance((scn, Scenario.paper_default())))
+
+
+class TestPaperDefaultBitIdentity:
+    """run(Scenario.paper_default(...)) must be bit-identical to the legacy
+    sweep/sweep_dists shims (which are themselves pinned by the golden /
+    analytic / shard suites)."""
+
+    def test_run_matches_sweep_unchunked_and_chunked(self):
+        key = jax.random.PRNGKey(0)
+        scn = Scenario.paper_default(dists.pareto(2.5), ks=(1, 2))
+        for chunk in (None, 1_700):
+            a = queueing.run(key, scn, RHOS, CFG, n_seeds=2,
+                             chunk_size=chunk)
+            b = queueing.sweep(key, dists.pareto(2.5), RHOS, CFG, ks=(1, 2),
+                               n_seeds=2, chunk_size=chunk)
+            for f in ("mean", "p50", "p99"):
+                assert jnp.array_equal(a[f], b[f]), (f, chunk)
+
+    def test_run_matches_sweep_dists(self):
+        key = jax.random.PRNGKey(1)
+        ds = (dists.exponential(), dists.two_point(0.9))
+        a = queueing.run(key, Scenario.paper_default(ds), RHOS, CFG,
+                         n_seeds=2, percentiles=(), chunk_size=2_500)
+        b = queueing.sweep_dists(key, ds, RHOS, CFG, ks=(1, 2), n_seeds=2,
+                                 percentiles=(), chunk_size=2_500)
+        assert a["mean"].shape == (2, 2, 2, 2)
+        assert jnp.array_equal(a["mean"], b["mean"])
+
+    def test_single_dist_sweep_dists_keeps_leading_axis(self):
+        key = jax.random.PRNGKey(2)
+        out = queueing.sweep_dists(key, [dists.exponential()], RHOS, CFG,
+                                   n_seeds=1, percentiles=())
+        assert out["mean"].shape == (1, 1, 2, 2)
+
+    def test_mixed_grid_leaves_paper_cells_untouched(self):
+        # adding cancellation / server-dependent variants to a grid must
+        # not perturb the paper cells by a single bit (CRN across
+        # policies: all variants consume the same draws).
+        key = jax.random.PRNGKey(3)
+        d = dists.exponential()
+        scns = (Scenario.paper_default(d, ks=(1, 2)),
+                Scenario(dists=d, policy=CANCEL_ON_COMPLETE, ks=(2,)),
+                Scenario(dists=d, service_model=SERVER_DEPENDENT, mix=0.9,
+                         ks=(2,)))
+        mixed = queueing.run(key, scns, RHOS, CFG, n_seeds=2,
+                             chunk_size=1_700)
+        pure = queueing.run(key, scns[0], RHOS, CFG, n_seeds=2,
+                            chunk_size=1_700)
+        assert mixed["mean"].shape == (2, 2, 4)
+        for f in ("mean", "p50", "p99"):
+            assert jnp.array_equal(mixed[f][:, :, :2], pure[f]), f
+
+    def test_replication_gain_matches_run(self):
+        key = jax.random.PRNGKey(4)
+        g_shim = queueing.replication_gain(key, dists.exponential(), RHOS,
+                                           CFG, n_seeds=2)
+        out = queueing.run(key, Scenario.paper_default(dists.exponential()),
+                           RHOS, CFG, n_seeds=2, percentiles=())
+        m = out["mean"]
+        g_run = jnp.mean(m[:, :, 0] - m[:, :, 1], axis=0)
+        assert jnp.array_equal(g_shim, g_run)
+
+
+class TestPolicyPhysics:
+    CFG = queueing.SimConfig(n_servers=20, n_arrivals=60_000)
+
+    @staticmethod
+    def _means(key, rhos, *scns, n_seeds=2):
+        out = queueing.run(key, scns, jnp.asarray(rhos), TestPolicyPhysics.CFG,
+                           n_seeds=n_seeds, percentiles=(), chunk_size=8_192)
+        return jnp.mean(out["mean"], axis=0)  # (B, V)
+
+    def test_cancellation_dominates_replicate_all(self):
+        # CRN-paired: losers vacating queue slots can only reduce
+        # congestion, so at every load the cancel mean is below the
+        # replicate-all mean (strictly, once queueing matters).
+        key = jax.random.PRNGKey(10)
+        d = dists.exponential()
+        m = self._means(key, [0.25, 0.45],
+                        Scenario.paper_default(d, ks=(2,)),
+                        Scenario(dists=d, policy=CANCEL_ON_COMPLETE,
+                                 ks=(2,)))
+        assert float(m[0, 1]) < float(m[0, 0])
+        assert float(m[1, 1]) < float(m[1, 0])
+
+    def test_replicate_to_idle_between_k1_and_cancel(self):
+        # At high load idle-only replication sends few copies: it avoids
+        # replicate-all's overload (below it) but cannot beat paired
+        # cancellation (above it).
+        key = jax.random.PRNGKey(11)
+        d = dists.exponential()
+        m = self._means(key, [0.45],
+                        Scenario.paper_default(d, ks=(2,)),
+                        Scenario(dists=d, policy=REPLICATE_TO_IDLE, ks=(2,)),
+                        Scenario(dists=d, policy=CANCEL_ON_COMPLETE,
+                                 ks=(2,)))
+        m_all, m_idle, m_cancel = (float(x) for x in m[0])
+        assert m_cancel < m_idle < m_all
+
+    def test_k1_immune_to_policy(self):
+        # with a single copy there is nothing to cancel or withhold:
+        # every policy's k=1 column is bit-identical.
+        key = jax.random.PRNGKey(12)
+        d = dists.pareto(2.5)
+        out = queueing.run(
+            key, tuple(Scenario(dists=d, policy=p, ks=(1,))
+                       for p in Policy),
+            RHOS, CFG, n_seeds=1, percentiles=())
+        m = out["mean"]  # (1, B, 3)
+        assert jnp.array_equal(m[:, :, 0], m[:, :, 1])
+        assert jnp.array_equal(m[:, :, 0], m[:, :, 2])
+
+    def test_raw_simulate_cancellation(self):
+        # the raw-response path shares _step_cell: cancellation improves
+        # the mean there too, pathwise CRN-paired with replicate-all.
+        key = jax.random.PRNGKey(13)
+        cfg = queueing.SimConfig(n_servers=20, n_arrivals=20_000)
+        d = dists.exponential()
+        scn = Scenario(dists=d, policy=CANCEL_ON_COMPLETE)
+        r_all = queueing.simulate(key, d, jnp.float32(0.4), cfg, k=2)
+        r_can = queueing.simulate(key, d, jnp.float32(0.4), cfg, k=2,
+                                  scenario=scn)
+        assert float(jnp.mean(r_can)) < float(jnp.mean(r_all))
+        # cancellation can only help: no response gets slower
+        assert bool(jnp.all(r_can <= r_all + 1e-5))
+
+
+class TestServerDependentModel:
+    CFG = queueing.SimConfig(n_servers=20, n_arrivals=100_000)
+
+    def test_mix_zero_is_bitwise_iid(self):
+        # svc = 0 * shared + 1 * draw + masked select => exactly the IID
+        # path, even though the shared column is sampled.
+        key = jax.random.PRNGKey(20)
+        d = dists.exponential()
+        a = queueing.run(key, Scenario(dists=d, service_model=IID, mix=0.0),
+                         RHOS, CFG, n_seeds=1, percentiles=())
+        b = queueing.run(key, Scenario(dists=d,
+                                       service_model=SERVER_DEPENDENT,
+                                       mix=0.0),
+                         RHOS, CFG, n_seeds=1, percentiles=())
+        assert jnp.array_equal(a["mean"], b["mean"])
+
+    def test_shah_crossover_gain_monotone_in_mix(self):
+        # Shah et al.'s headline: at a load below the paper's 1/3
+        # threshold, replication helps under IID service but HURTS once
+        # service is server-dependent — the paired gain decreases in the
+        # request-component mix and flips sign.
+        key = jax.random.PRNGKey(21)
+        d = dists.exponential()
+        scns = tuple(
+            Scenario(dists=d, service_model=SERVER_DEPENDENT, mix=mx,
+                     ks=(1, 2)) if mx else
+            Scenario.paper_default(d, ks=(1, 2))
+            for mx in (0.0, 0.5, 1.0))
+        out = queueing.run(key, scns, jnp.asarray([0.3]), self.CFG,
+                           n_seeds=3, percentiles=(), chunk_size=8_192)
+        m = jnp.mean(out["mean"], axis=0)[0]  # (6,)
+        g_iid, g_mid, g_dep = (float(m[2 * j] - m[2 * j + 1])
+                               for j in range(3))
+        assert g_iid > g_mid > g_dep
+        assert g_iid > 0.0 > g_dep
+
+    def test_shared_component_crn_across_entry_points_and_layouts(self):
+        # the shared request component is drawn from a FIXED fold_in
+        # index, so (a) run's variant j matches the raw simulate_grid
+        # path bit-for-bit (the module CRN contract) and (b) the same
+        # scenario embedded in grids with different k_max draws the same
+        # shared component.
+        key = jax.random.PRNGKey(23)
+        cfg = queueing.SimConfig(n_servers=10, n_arrivals=4_000)
+        d = dists.exponential()
+        scn = Scenario(dists=d, service_model=SERVER_DEPENDENT, mix=1.0,
+                       ks=(1, 2))
+        out = queueing.run(key, scn, RHOS, cfg, n_seeds=1, percentiles=())
+        keys = jax.random.split(key, 1)
+        for j, k in enumerate(scn.ks):
+            r = queueing.simulate_grid(keys[0], d, RHOS, cfg, k=k,
+                                       scenario=scn)
+            warm = queueing._warm(r, cfg)
+            # streaming Kahan mean vs jnp.mean: same sample path, float
+            # tolerance only
+            assert jnp.allclose(out["mean"][0, :, j],
+                                jnp.mean(warm, axis=-1), rtol=1e-5), k
+        out3 = queueing.run(
+            key, dataclasses.replace(scn, ks=(1, 2, 3)), RHOS, cfg,
+            n_seeds=1, percentiles=())
+        assert jnp.array_equal(out["mean"], out3["mean"][:, :, :2])
+
+    def test_simulate_grid_accepts_scenario(self):
+        key = jax.random.PRNGKey(22)
+        cfg = queueing.SimConfig(n_servers=10, n_arrivals=2_000)
+        d = dists.exponential()
+        scn = Scenario(dists=d, service_model=SERVER_DEPENDENT, mix=1.0)
+        r = queueing.simulate_grid(key, d, RHOS, cfg, k=2, scenario=scn)
+        assert r.shape == (2, 2_000)
+        assert bool(jnp.all(r > 0.0))
+
+
+class TestScenarioThresholds:
+    CFG = queueing.SimConfig(n_servers=20, n_arrivals=60_000)
+
+    def test_bare_dist_unchanged(self):
+        # the dist form stays bit-identical to the pre-scenario estimator
+        # (pinned at 1/3 by test_queueing / the golden suite).
+        key = jax.random.PRNGKey(30)
+        t = threshold.threshold_bisect(key, dists.exponential(), self.CFG,
+                                       iters=6, n_seeds=2)
+        assert t == pytest.approx(analytic.THRESHOLD_EXPONENTIAL, abs=0.04)
+
+    def test_cancellation_raises_threshold_past_bracket(self):
+        # with cancellation, k=2 helps exponential service at EVERY load
+        # below 1/2: the bisection bracket never sees a sign change and
+        # reports hi.
+        key = jax.random.PRNGKey(31)
+        scn = Scenario(dists=dists.exponential(),
+                       policy=CANCEL_ON_COMPLETE)
+        t = threshold.threshold_bisect(key, scn, self.CFG, iters=5,
+                                       n_seeds=2, chunk_size=8_192)
+        assert t == pytest.approx(0.499)
+
+    def test_server_dependence_lowers_threshold(self):
+        key = jax.random.PRNGKey(32)
+        scn = Scenario(dists=dists.exponential(),
+                       service_model=SERVER_DEPENDENT, mix=1.0)
+        t_dep = threshold.threshold_bisect(key, scn, self.CFG, iters=6,
+                                           n_seeds=3, chunk_size=8_192)
+        assert t_dep < analytic.THRESHOLD_EXPONENTIAL - 0.015
+
+    def test_single_dist_estimators_reject_multi_dist_scenario(self):
+        # a multi-dist scenario's summaries carry a leading dist axis the
+        # single-threshold reductions cannot interpret — loud error, not
+        # silent garbage.
+        scn = Scenario(dists=(dists.exponential(), dists.pareto(2.5)))
+        key = jax.random.PRNGKey(35)
+        with pytest.raises(ValueError, match="threshold_grid_batch"):
+            threshold.threshold_bisect(key, scn, self.CFG)
+        with pytest.raises(ValueError, match="threshold_grid_batch"):
+            threshold.scenario_gain(key, scn, RHOS, self.CFG)
+        with pytest.raises(ValueError, match="threshold_grid_batch"):
+            threshold.threshold_grid(key, scn, self.CFG)
+
+    def test_grid_batch_accepts_scenario(self):
+        key = jax.random.PRNGKey(33)
+        scn = Scenario(dists=(dists.exponential(), dists.pareto(2.5)))
+        ts = threshold.threshold_grid_batch(key, scn, self.CFG, n_seeds=2)
+        assert len(ts) == 2
+        for t in ts:
+            assert 0.24 <= t <= 0.5
+
+    def test_scenario_gain_matches_replication_gain(self):
+        key = jax.random.PRNGKey(34)
+        g_new = threshold.scenario_gain(key, dists.exponential(), RHOS,
+                                        CFG, n_seeds=2)
+        g_old = queueing.replication_gain(key, dists.exponential(), RHOS,
+                                          CFG, n_seeds=2)
+        assert jnp.array_equal(g_new, g_old)
+
+
+class TestVariantPlumbing:
+    def test_overhead_only_charged_when_replicated(self):
+        assert queueing._overhead_when_replicated(0.25, 1) == 0.0
+        assert queueing._overhead_when_replicated(0.25, 2) == 0.25
+
+    def test_scenario_overhead_matches_cfg_overhead(self):
+        # Scenario.client_overhead must reproduce the legacy SimConfig
+        # knob exactly (the Fig 4 path).
+        key = jax.random.PRNGKey(40)
+        cfg_pen = dataclasses.replace(CFG, client_overhead=0.25)
+        a = queueing.sweep(key, dists.exponential(), RHOS, cfg_pen,
+                           ks=(1, 2), n_seeds=1, percentiles=())
+        b = queueing.run(key, Scenario.paper_default(dists.exponential(),
+                                                     client_overhead=0.25),
+                         RHOS, CFG, n_seeds=1, percentiles=())
+        assert jnp.array_equal(a["mean"], b["mean"])
+
+    def test_legacy_ks_tuple_still_accepted_by_plan_params(self):
+        from repro.core import cellplan
+        plan = cellplan.make_cell_plan(1, 2, 2)
+        cfg = dataclasses.replace(CFG, client_overhead=0.5)
+        rates, k_mask, ovh, mix = queueing._plan_cell_params(
+            plan, RHOS, cfg, (1, 2))
+        v_rates, v_k_mask, v_ovh, v_mix = queueing._plan_cell_params(
+            plan, RHOS, cfg, (Variant(k=1, overhead=0.5),
+                              Variant(k=2, overhead=0.5)))
+        for a, b in ((rates, v_rates), (k_mask, v_k_mask), (ovh, v_ovh),
+                     (mix, v_mix)):
+            assert jnp.array_equal(a, b)

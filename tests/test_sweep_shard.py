@@ -11,7 +11,9 @@ The subprocess test forces 8 host devices (the idiom of
 ``test_distributed_exec.py``: the XLA override must not leak into the
 main test process) and checks cell counts both divisible and NOT
 divisible by the device count (exercising the pad/mask path), the
-dist-stacked driver, and threshold bisection.
+dist-stacked driver, MIXED-policy scenario grids (policy/model codes
+sharded as per-cell coordinates), and threshold bisection (bare dist
+and Scenario forms).
 """
 import subprocess
 import sys
@@ -22,6 +24,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import distributions as dists, queueing, threshold
+from repro.core.scenario import (CANCEL_ON_COMPLETE, REPLICATE_TO_IDLE,
+                                 SERVER_DEPENDENT, Scenario)
 from repro.distributed import sweep_shard
 from repro.launch.mesh import make_sweep_mesh
 
@@ -72,6 +76,24 @@ class TestShardedSingleDeviceMesh:
         t_sh = threshold.threshold_bisect(key, dists.exponential(), CFG,
                                           mesh=make_sweep_mesh(1), **kw)
         assert t_un == t_sh
+
+    def test_mixed_policy_grid_bit_identical(self):
+        # a MIXED grid — paper cells, a cancellation cell, a
+        # server-dependent cell — through run(mesh=...): the policy/model
+        # codes shard with the plan, results bit-match the local engine.
+        key = jax.random.PRNGKey(4)
+        d = dists.exponential()
+        scns = (Scenario.paper_default(d, ks=(1, 2)),
+                Scenario(dists=d, policy=CANCEL_ON_COMPLETE, ks=(2,)),
+                Scenario(dists=d, policy=REPLICATE_TO_IDLE, ks=(2,)),
+                Scenario(dists=d, service_model=SERVER_DEPENDENT, mix=0.7,
+                         ks=(2,)))
+        kw = dict(n_seeds=2, chunk_size=1_700)
+        un = queueing.run(key, scns, RHOS, CFG, **kw)
+        sh = queueing.run(key, scns, RHOS, CFG, mesh=make_sweep_mesh(1),
+                          **kw)
+        _assert_bit_identical(un, sh)
+        assert un["mean"].shape == (2, 2, 5)
 
     def test_rejects_wrong_mesh_axes(self):
         mesh = jax.make_mesh((1,), ("data",))
@@ -134,11 +156,31 @@ check("sweep_dists",
                                       **kw),
       fields=("mean",))
 
-# threshold bisection: every probe batch rides the sharded cell axis
+# MIXED-policy grid, non-divisible: 1 seed x 3 loads x 5 variants = 15 -> 16
+from repro.core.scenario import (CANCEL_ON_COMPLETE, REPLICATE_TO_IDLE,
+                                 SERVER_DEPENDENT, Scenario)
+d = dists.exponential()
+scns = (Scenario.paper_default(d, ks=(1, 2)),
+        Scenario(dists=d, policy=CANCEL_ON_COMPLETE, ks=(2,)),
+        Scenario(dists=d, policy=REPLICATE_TO_IDLE, ks=(2,)),
+        Scenario(dists=d, service_model=SERVER_DEPENDENT, mix=0.7,
+                 ks=(2,)))
+kw = dict(n_seeds=1, chunk_size=1_700)
+check("mixed-policy",
+      queueing.run(key, scns, rhos3, cfg, **kw),
+      queueing.run(key, scns, rhos3, cfg, mesh=mesh, **kw))
+
+# threshold bisection: every probe batch rides the sharded cell axis —
+# under a Scenario too (cancellation: replication helps everywhere, so
+# both paths must return the bracket's hi)
 kw = dict(iters=4, n_seeds=2, chunk_size=2_000)
 t_un = threshold.threshold_bisect(key, dists.exponential(), cfg, **kw)
 t_sh = threshold.threshold_bisect(key, dists.exponential(), cfg,
                                   mesh=mesh, **kw)
+assert t_un == t_sh, (t_un, t_sh)
+scn = Scenario(dists=d, policy=CANCEL_ON_COMPLETE)
+t_un = threshold.threshold_bisect(key, scn, cfg, **kw)
+t_sh = threshold.threshold_bisect(key, scn, cfg, mesh=mesh, **kw)
 assert t_un == t_sh, (t_un, t_sh)
 print("threshold bit-identical")
 print("SHARDED_OK")
