@@ -10,13 +10,19 @@ Rows may append provenance elements past the 3-tuple core:
     ``None``; ``run.py`` records it as the row's ``scenario`` field so
     BENCH_*.json trajectories say WHICH point of the policy space they
     measured.
+  * 6th — the RESOLVED cell-update kernel mode the row executed under
+    (``"on"`` / ``"off"`` / ``"interpret"``, see
+    ``repro.kernels.cell_update.resolve_kernel_mode``), or ``None`` for
+    rows with no engine call; ``run.py`` records it as the row's
+    ``kernel`` field so trajectories separate kernel-path from
+    scan-path measurements.
 """
 from __future__ import annotations
 
 import time
 from typing import Any, Callable, Optional, Union
 
-Row = tuple  # (name, us, derived[, mesh_shape[, scenario]])
+Row = tuple  # (name, us, derived[, mesh_shape[, scenario[, kernel]]])
 
 
 def timed(fn: Callable[[], Any]) -> tuple[Any, float]:
@@ -26,11 +32,14 @@ def timed(fn: Callable[[], Any]) -> tuple[Any, float]:
 
 
 def row_provenance(row: Row) -> tuple[Optional[list], Union[dict, list,
-                                                            None]]:
-    """(mesh, scenario) provenance of a row, tolerating the short forms."""
+                                                            None],
+                                      Optional[str]]:
+    """(mesh, scenario, kernel) provenance of a row, tolerating the
+    short forms."""
     mesh = list(row[3]) if len(row) > 3 and row[3] is not None else None
     scn = row[4] if len(row) > 4 else None
-    return mesh, scn
+    kernel = row[5] if len(row) > 5 else None
+    return mesh, scn, kernel
 
 
 def emit(rows: list[Row]) -> None:

@@ -8,9 +8,12 @@ load.
 
 The whole (policy x model x mix x k x load) grid is ONE mixed-policy
 ``queueing.run`` call — every variant rides the same cell plan and the
-same compiled scan body, sharded over ``mesh`` when ``run.py --devices``
-hands one in. Each row carries its scenario as JSON provenance
-(``benchmarks/run.py`` records it per row).
+same compiled chunk body — the ``lax.scan`` reference or the fused
+cell-update kernel per ``kernel`` (wired through ``run.py --kernel``;
+bit-identical either way) — sharded over ``mesh`` when ``run.py
+--devices`` hands one in. Each row carries its scenario and the
+RESOLVED kernel mode as JSON provenance (``benchmarks/run.py`` records
+them per row).
 
 Emits one row per scenario (CRN-paired gain at each probe load) plus a
 ``fig_policy_space/crossover`` summary row asserting the headline:
@@ -26,6 +29,7 @@ import jax.numpy as jnp
 from benchmarks.common import Row
 from repro.core import distributions as dists, queueing, scenario as scn_mod
 from repro.core.scenario import CANCEL_ON_COMPLETE, SERVER_DEPENDENT, Scenario
+from repro.kernels.cell_update import resolve_kernel_mode
 
 CFG = queueing.SimConfig(n_servers=20, n_arrivals=200_000)
 CHUNK = 4_096
@@ -48,7 +52,7 @@ def _scenarios() -> list[tuple[str, Scenario]]:
     return entries
 
 
-def run(smoke: bool = False, mesh=None) -> list[Row]:
+def run(smoke: bool = False, mesh=None, kernel: str = "auto") -> list[Row]:
     key = jax.random.PRNGKey(2)
     cfg = (queueing.SimConfig(n_servers=20, n_arrivals=6_000) if smoke
            else CFG)
@@ -56,11 +60,12 @@ def run(smoke: bool = False, mesh=None) -> list[Row]:
     entries = _scenarios()
     rhos = jnp.asarray(RHOS)
     mesh_shape = tuple(mesh.devices.shape) if mesh is not None else None
+    resolved = resolve_kernel_mode(kernel)
 
     t0 = time.perf_counter()
     out = queueing.run(key, tuple(s for _, s in entries), rhos, cfg,
                        n_seeds=n_seeds, percentiles=(), chunk_size=CHUNK,
-                       mesh=mesh)
+                       mesh=mesh, kernel=resolved)
     jax.block_until_ready(out["mean"])
     total_us = (time.perf_counter() - t0) * 1e6
     m = jnp.mean(out["mean"], axis=0)  # (B, 2 * n_scenarios)
@@ -73,7 +78,8 @@ def run(smoke: bool = False, mesh=None) -> list[Row]:
         gains[name] = g
         derived = ";".join(f"gain@rho{r:g}={v:+.4f}" for r, v in g.items())
         rows.append((f"fig_policy_space/{name}", total_us / len(entries),
-                     derived, mesh_shape, scn_mod.provenance(scn)))
+                     derived, mesh_shape, scn_mod.provenance(scn),
+                     resolved))
 
     # the headline: between the thresholds, IID helps and
     # server-dependence flips the sign; cancellation helps everywhere.
@@ -85,5 +91,5 @@ def run(smoke: bool = False, mesh=None) -> list[Row]:
                  f"cancel_helps_everywhere="
                  f"{all(v > 0 for v in gains['cancel'].values())};"
                  f"scenarios={len(entries)};seeds={n_seeds}",
-                 mesh_shape, None))
+                 mesh_shape, None, resolved))
     return rows

@@ -1,5 +1,18 @@
-"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline table: live cell-update kernel measurement + dry-run artifacts.
 
+Part 1 — the fused cell-update kernel (``repro.kernels.cell_update``),
+MEASURED: the analytic cost model ``cell_update_costs`` (FLOPs, HBM
+traffic, arithmetic intensity of one engine call) against the timed
+wall clock of ``queueing.run`` with ``kernel="off"`` (scan body) and
+with the kernel path (resolved ``"on"``; ``"interpret"`` off-TPU —
+interpreter timings measure dispatch overhead, not kernel perf, and the
+rows say which they are). Reports achieved GFLOP/s and achieved HBM
+GB/s, their fractions of the TPU peaks, the ridge intensity
+``PEAK_FLOPS / HBM_BW`` the kernel must beat to leave the memory-bound
+regime, and the measured kernel-vs-scan speedup. ``smoke=True`` shrinks
+the measured sweep so CI exercises the full path every push.
+
+Part 2 — dry-run artifacts (EXPERIMENTS.md §Roofline), when present.
 Per (arch x shape x mesh):
     compute term    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
     memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
@@ -10,6 +23,7 @@ Also reports MODEL_FLOPS = 6*N(_active)*D and the usefulness ratio.
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
 
 from benchmarks.common import Row
@@ -17,6 +31,7 @@ from benchmarks.common import Row
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
+RIDGE = PEAK_FLOPS / HBM_BW  # FLOP/byte where compute overtakes memory
 
 _ROOT = Path(__file__).resolve().parent.parent
 # prefer the optimized sweep; fall back to the baseline
@@ -59,11 +74,71 @@ def analyze_record(rec: dict) -> dict | None:
     }
 
 
-def run(smoke: bool = False) -> list[Row]:
-    del smoke  # reads precomputed dry-run artifacts; nothing to shrink
+def _cell_update_rows(smoke: bool) -> list[Row]:
+    """Measured roofline of the fused cell-update kernel vs the scan body.
+
+    One row per path (scan / kernel): wall clock, analytic FLOPs and
+    HBM bytes from ``cell_update_costs``, achieved GFLOP/s and GB/s
+    with their peak fractions, plus a summary row with the measured
+    speedup and the ridge intensity. Timings are steady-state (one
+    warmup call compiles, the timed call reuses the jit cache)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import distributions as dists, queueing
+    from repro.core.scenario import Scenario
+    from repro.kernels.cell_update import (cell_update_costs,
+                                           resolve_kernel_mode)
+
+    n_arrivals = 5_000 if smoke else 20_000
+    n_seeds, chunk = 2, 4_096
+    cfg = queueing.SimConfig(n_servers=20, n_arrivals=n_arrivals)
+    scn = Scenario.paper_default(dists.exponential(), ks=(1, 2))
+    rhos = jnp.linspace(0.1, 0.4, 3)
+    key = jax.random.PRNGKey(3)
+    costs = cell_update_costs(
+        n_cells=n_seeds * rhos.shape[0] * 2, n_servers=cfg.n_servers,
+        k_max=2, n_arrivals=n_arrivals, n_bins=queueing.DEFAULT_BINS,
+        n_seeds=n_seeds, chunk=chunk)
+
+    kmode = resolve_kernel_mode("on")  # "on" on TPU, "interpret" off
     rows: list[Row] = []
+    secs = {}
+    for label, mode in (("scan", "off"), ("kernel", kmode)):
+        def call():
+            out = queueing.run(key, scn, rhos, cfg, n_seeds=n_seeds,
+                               chunk_size=chunk, kernel=mode)
+            jax.block_until_ready(out["mean"])
+        call()  # warmup: compile outside the timed call
+        t0 = time.perf_counter()
+        call()
+        s = time.perf_counter() - t0
+        secs[label] = s
+        gflops = costs["flops"] / s / 1e9
+        gbs = costs["hbm_bytes"] / s / 1e9
+        rows.append((f"roofline/cell_update/{label}", s * 1e6,
+                     f"kernel={mode};flops={costs['flops']:.3e};"
+                     f"hbm_bytes={costs['hbm_bytes']:.3e};"
+                     f"achieved_gflops={gflops:.2f};"
+                     f"peak_frac={gflops * 1e9 / PEAK_FLOPS:.2e};"
+                     f"achieved_gbs={gbs:.2f};"
+                     f"hbm_frac={gbs * 1e9 / HBM_BW:.2e}",
+                     None, None, mode))
+    rows.append(("roofline/cell_update/summary", secs["kernel"] * 1e6,
+                 f"kernel={kmode};intensity={costs['intensity']:.1f};"
+                 f"ridge={RIDGE:.1f};"
+                 f"compute_bound={costs['intensity'] > RIDGE};"
+                 f"scan_s={secs['scan']:.2f};kernel_s={secs['kernel']:.2f};"
+                 f"speedup={secs['scan'] / secs['kernel']:.2f}x",
+                 None, None, kmode))
+    return rows
+
+
+def run(smoke: bool = False) -> list[Row]:
+    rows: list[Row] = _cell_update_rows(smoke)
     if not DRYRUN_DIR.exists():
-        return [("roofline/missing", 0.0, "run repro.launch.dryrun first")]
+        return rows + [("roofline/dryrun_missing", 0.0,
+                        "run repro.launch.dryrun first")]
     for f in sorted(DRYRUN_DIR.glob("*.json")):
         rec = json.loads(f.read_text())
         a = analyze_record(rec)

@@ -17,6 +17,12 @@ full-size sweeps. ``--devices N`` builds an N-way ``"cells"`` sweep mesh
 and hands it to mesh-aware modules (currently ``sweep_engine``), which
 then emit sharded rows; on CPU export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
+``--kernel {auto,on,off}`` picks the engine's fused cell-update kernel
+mode for kernel-aware modules (``sweep_engine``, ``fig_policy_space``;
+``auto`` = kernel on TPU, scan elsewhere); each JSON row's ``kernel``
+field records the RESOLVED mode the row actually executed under
+(``on`` / ``off`` / ``interpret``, ``null`` for non-engine rows), so
+trajectories never mix kernel-path and scan-path numbers silently.
 """
 from __future__ import annotations
 
@@ -43,6 +49,10 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=None, metavar="N",
                     help="run mesh-aware modules through the sharded "
                          "cell-plan engine on an N-device 'cells' mesh")
+    ap.add_argument("--kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="fused cell-update kernel mode for kernel-aware "
+                         "modules (auto: kernel on TPU, scan elsewhere)")
     args = ap.parse_args()
 
     import jax
@@ -79,26 +89,30 @@ def main() -> None:
         if args.only and not any(o in name for o in args.only):
             continue
         kwargs = {"smoke": args.smoke}
-        if mesh is not None and "mesh" in inspect.signature(
-                mod.run).parameters:
+        params = inspect.signature(mod.run).parameters
+        if mesh is not None and "mesh" in params:
             kwargs["mesh"] = mesh
+        if "kernel" in params:
+            kwargs["kernel"] = args.kernel
         try:
             for row in mod.run(**kwargs):
-                # rows are (name, us, derived[, mesh_shape[, scenario]])
-                # — see benchmarks.common
+                # rows are (name, us, derived[, mesh_shape[, scenario
+                # [, kernel]]]) — see benchmarks.common
                 row_name, us, derived = row[:3]
-                row_mesh, row_scenario = row_provenance(row)
+                row_mesh, row_scenario, row_kernel = row_provenance(row)
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
                 collected.append({"name": row_name,
                                   "us_per_call": round(us, 1),
                                   "derived": derived,
                                   "mesh": row_mesh,
-                                  "scenario": row_scenario, **provenance})
+                                  "scenario": row_scenario,
+                                  "kernel": row_kernel, **provenance})
         except Exception as e:  # keep the harness going
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             collected.append({"name": f"{name}/ERROR", "us_per_call": 0,
                               "derived": f"{type(e).__name__}:{e}",
-                              "mesh": None, "scenario": None, **provenance})
+                              "mesh": None, "scenario": None,
+                              "kernel": None, **provenance})
             import traceback
             traceback.print_exc(file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)

@@ -24,8 +24,19 @@ engine held (``bit_identical=``) and carrying the mesh shape as JSON
 provenance (the contract itself is enforced by tier-1 / CI tests, not
 by the benchmark — a violation must still produce rows).
 
+Part 4 — fused cell-update kernel on vs off (``kernel`` argument, wired
+through ``run.py --kernel``): the same chunked sweep through the scan
+body (``kernel="off"``) and through the Pallas kernel path (the
+RESOLVED requested mode; off-TPU ``"on"`` degrades to ``"interpret"``
+so a measurement always exists), wall clock both ways, bit-identity
+recorded. The ``sweep_engine/kernel_on_vs_off`` row's derived field
+carries ``scan_s= / kernel_s= / speedup=`` so BENCH_*.json trajectories
+hold the measured kernel speedup as provenance; its 6th row element
+(the ``kernel`` JSON field) is the mode the kernel leg executed under.
+
 Emits per-family rows plus ``sweep_engine/total`` (end-to-end old-vs-fused
-speedup, target >= 5x), ``sweep_engine/chunked*`` and (with a mesh)
+speedup, target >= 5x), ``sweep_engine/chunked*``,
+``sweep_engine/kernel_on_vs_off`` and (with a mesh)
 ``sweep_engine/sharded*`` rows."""
 from __future__ import annotations
 
@@ -38,6 +49,7 @@ from benchmarks.common import Row
 from repro.core import distributions as dists
 from repro.core import queueing, scenario as scn_mod, threshold
 from repro.core.scenario import Scenario
+from repro.kernels.cell_update import resolve_kernel_mode
 
 CFG = queueing.SimConfig(n_servers=20, n_arrivals=50_000)
 
@@ -136,11 +148,48 @@ def _sharded_rows(key, cfg: queueing.SimConfig, mesh,
     return rows
 
 
-def run(smoke: bool = False, mesh=None) -> list[Row]:
+def _kernel_rows(key, cfg: queueing.SimConfig, kernel: str,
+                 smoke: bool) -> list[Row]:
+    """Fused cell-update kernel on-vs-off: wall clock for the scan body
+    and for the kernel path on the same chunked sweep, bit-identity
+    recorded, measured speedup in the derived field (JSON provenance).
+    """
+    # off-TPU an "on"/"auto" request resolves to "off"/"interpret"; force
+    # the interpreter leg in that case so the row always holds a real
+    # kernel-path measurement.
+    mode = resolve_kernel_mode(kernel)
+    if mode == "off":
+        mode = resolve_kernel_mode("on")  # "on" on TPU, else "interpret"
+    scn = Scenario.paper_default(dists.exponential(), ks=(1, 2))
+    rhos = jnp.linspace(0.1, 0.4, 3)
+    kw = dict(n_seeds=2, chunk_size=CHUNK)
+    kcfg = (cfg if smoke
+            else queueing.SimConfig(n_servers=20, n_arrivals=20_000))
+
+    t0 = time.perf_counter()
+    off = queueing.run(key, scn, rhos, kcfg, kernel="off", **kw)
+    jax.block_until_ready(off["mean"])
+    scan_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    on = queueing.run(key, scn, rhos, kcfg, kernel=mode, **kw)
+    jax.block_until_ready(on["mean"])
+    kernel_s = time.perf_counter() - t0
+    # like the sharded rows: record a violation, never raise
+    bit = all(bool(jnp.array_equal(off[f], on[f]))
+              for f in ("mean", "p50", "p99"))
+    return [("sweep_engine/kernel_on_vs_off", kernel_s * 1e6,
+             f"kernel={mode};arrivals={kcfg.n_arrivals};"
+             f"scan_s={scan_s:.2f};kernel_s={kernel_s:.2f};"
+             f"speedup={scan_s / kernel_s:.2f}x;bit_identical={bit}",
+             None, scn_mod.provenance(scn), mode)]
+
+
+def run(smoke: bool = False, mesh=None, kernel: str = "auto") -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(1)
     cfg = (queueing.SimConfig(n_servers=20, n_arrivals=5_000) if smoke
            else CFG)
+    resolved = resolve_kernel_mode(kernel)  # stamp rows with the real mode
     entries = _entries(smoke)
 
     # --- old path: one scan per (family, seed, k), dist static in jit ----
@@ -156,7 +205,8 @@ def run(smoke: bool = False, mesh=None) -> list[Row]:
     # --- fused path: every family in ONE engine call ---------------------
     t0 = time.perf_counter()
     new_ths = threshold.threshold_grid_batch(
-        key, [dist for _, _, dist in entries], cfg, n_seeds=2)
+        key, [dist for _, _, dist in entries], cfg, n_seeds=2,
+        kernel=resolved)
     new_total = time.perf_counter() - t0
     new_us = new_total * 1e6 / len(entries)
 
@@ -180,11 +230,12 @@ def run(smoke: bool = False, mesh=None) -> list[Row]:
     for dist in (dists.exponential(), dists.pareto(2.2)):
         t0 = time.perf_counter()
         th_un = threshold.threshold_grid(key, dist, cfg, rhos=rhos,
-                                         n_seeds=2)
+                                         n_seeds=2, kernel=resolved)
         un_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         th_ch = threshold.threshold_grid(key, dist, cfg, rhos=rhos,
-                                         n_seeds=2, chunk_size=CHUNK)
+                                         n_seeds=2, chunk_size=CHUNK,
+                                         kernel=resolved)
         ch_s = time.perf_counter() - t0
         chunk_delta = max(chunk_delta, abs(th_un - th_ch))
         rows.append((f"sweep_engine/chunked/{dist.name}", ch_s * 1e6,
@@ -193,15 +244,16 @@ def run(smoke: bool = False, mesh=None) -> list[Row]:
                      f"tol={grid_step:.3f};"
                      f"match={abs(th_un - th_ch) <= grid_step};"
                      f"unchunked_s={un_s:.2f};chunked_s={ch_s:.2f}",
-                     None, _paper_provenance(dist)))
+                     None, _paper_provenance(dist), resolved))
 
     # --- streamed large-n_arrivals sweep: peak input memory is set by
     # chunk_size, not n_arrivals --------------------------------------------
     big_m = 200_000 if smoke else 2_000_000
     big_cfg = queueing.SimConfig(n_servers=20, n_arrivals=big_m)
+    scn_big = Scenario.paper_default(dists.exponential(), ks=(1, 2))
     t0 = time.perf_counter()
-    out = queueing.sweep(key, dists.exponential(), jnp.asarray([0.3]),
-                         big_cfg, ks=(1, 2), n_seeds=1, chunk_size=CHUNK)
+    out = queueing.run(key, scn_big, jnp.asarray([0.3]), big_cfg,
+                       n_seeds=1, chunk_size=CHUNK, kernel=resolved)
     jax.block_until_ready(out["mean"])
     big_s = time.perf_counter() - t0
     rows.append((f"sweep_engine/chunked_{big_m // 1000}k", big_s * 1e6,
@@ -211,10 +263,13 @@ def run(smoke: bool = False, mesh=None) -> list[Row]:
                  f"input_kb_presampled="
                  f"{_input_bytes(big_cfg, big_m) // 1024};"
                  f"arrivals_per_s={big_m / big_s:.0f}",
-                 None, _paper_provenance(dists.exponential())))
+                 None, _paper_provenance(dists.exponential()), resolved))
     rows.append(("sweep_engine/chunked_total", 0.0,
                  f"max_threshold_delta={chunk_delta:.4f};"
                  f"interp_tol={grid_step:.3f}"))
+
+    # --- fused cell-update kernel on vs off: measured speedup ------------
+    rows.extend(_kernel_rows(key, cfg, kernel, smoke))
 
     # --- sharded cell-plan execution: bit-identity + mesh provenance ----
     if mesh is not None:

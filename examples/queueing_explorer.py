@@ -26,6 +26,11 @@ cells; the policy/model codes shard with the plan, so every policy rides
 the same path. On CPU, export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first to get N
 virtual devices.
+
+``--kernel {auto,on,off,interpret}`` picks the engine's chunk-body
+implementation: the fused Pallas cell-update kernel or the ``lax.scan``
+reference (``auto`` = kernel on TPU, scan elsewhere; every mode is
+bit-identical, see ``repro.kernels.cell_update``).
 """
 import argparse
 
@@ -36,6 +41,7 @@ from repro.core import distributions as dists
 from repro.core import queueing, threshold
 from repro.core.scenario import (Policy, Scenario, ServiceModel,
                                  parse_policy, parse_service_model)
+from repro.kernels.cell_update import resolve_kernel_mode
 
 
 def main() -> None:
@@ -67,6 +73,10 @@ def main() -> None:
                     help="shard the sweep's cells over this many devices "
                          "(CPU: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--kernel", default="auto",
+                    choices=("auto", "on", "off", "interpret"),
+                    help="fused cell-update kernel mode (auto: kernel on "
+                         "TPU, scan elsewhere; all modes bit-identical)")
     args = ap.parse_args()
 
     factory = dists.FAMILIES[args.family]
@@ -89,16 +99,19 @@ def main() -> None:
                   f"--xla_force_host_platform_device_count={args.devices})")
         mesh = make_sweep_mesh(n_dev)
 
+    kernel = resolve_kernel_mode(args.kernel)
+
     # one engine call over all (load, k) cells of the scenario
     s = queueing.run(key, scn, loads, cfg, n_seeds=1,
-                     chunk_size=args.chunk_size, mesh=mesh)
+                     chunk_size=args.chunk_size, mesh=mesh, kernel=kernel)
 
     model = scn.service_model.name.lower()
     if scn.service_model is ServiceModel.SERVER_DEPENDENT:
         model += f"(mix={scn.mix:g})"
     print(f"service = {dist.name}, N = {args.servers}, "
           f"policy = {scn.policy.name.lower()}, model = {model}"
-          + (f", mesh = {mesh.devices.size}-way 'cells'" if mesh else ""))
+          + (f", mesh = {mesh.devices.size}-way 'cells'" if mesh else "")
+          + f", kernel = {kernel}")
     header = "load  " + "  ".join(f"k={k}: mean/p99" for k in args.k)
     print(header)
     for i, rho in enumerate(loads):
@@ -109,7 +122,8 @@ def main() -> None:
         print(f"{float(rho):.2f} " + "  ".join(cells))
 
     t = threshold.threshold_grid(key, scn, cfg, n_seeds=2,
-                                 chunk_size=args.chunk_size, mesh=mesh)
+                                 chunk_size=args.chunk_size, mesh=mesh,
+                                 kernel=kernel)
     print(f"\nestimated threshold load (k=2): {t:.3f} "
           f"(paper model: always in ~(0.26, 0.5) with no client overhead)")
 

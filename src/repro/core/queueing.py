@@ -138,11 +138,36 @@ LOSE no precision to the cumsum, unlike the pre-sampled path.
 ``simulate`` / ``simulate_grid`` remain for callers that need raw
 per-arrival response times (tests, exact percentiles); they are thin
 wrappers over the same single-cell step function.
+
+Cell-update kernel (``kernel=``)
+--------------------------------
+
+The per-chunk body has two interchangeable, BIT-IDENTICAL
+implementations dispatched by ``_sweep_chunk_cells``'s static
+``use_kernel`` flag: the ``lax.scan`` reference
+(``repro.kernels.cell_update.ref``, the default off-TPU) and a fused
+Pallas kernel (``repro.kernels.cell_update.kernel``) that keeps each
+cell's free-time grid, Kahan state and histogram counts resident in
+VMEM across the whole chunk, writing carry to HBM once per chunk
+instead of once per arrival. ``run(..., kernel=...)`` takes
+``"auto"`` (kernel on TPU, scan elsewhere), ``"on"``, ``"off"`` or
+``"interpret"`` (the kernel through the Pallas interpreter — how CPU
+CI bit-tests the kernel path); the sharded executor threads the same
+mode through ``shard_map``, preserving sharded==unsharded
+bit-identity in every mode. Kernel mode pads every chunk to a
+sketch-block multiple (scan mode only pads when the sketch is on) —
+legal because zero-weight steps are bitwise no-ops on all carry state
+(see ``ref.kahan_fold``), so padded and unpadded layouts agree bit
+for bit. The step physics lives ONCE in
+``repro.kernels.cell_update.ref.step_cell`` (re-exported here as
+``_step_cell``); the kernel package's docstrings carry the VMEM
+layout / block-size / CRN-contract design note.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 
 import jax
@@ -153,6 +178,8 @@ from repro.core import scenario as scenario_mod
 from repro.core.distributions import ServiceDist
 from repro.core.scenario import (Policy, Scenario, ServiceModel,  # noqa: F401
                                  Variant)
+from repro.kernels.cell_update import ops as cell_ops
+from repro.kernels.cell_update.ref import cell_update_ref, step_cell
 from repro.kernels.hist_sketch import ops as hist_ops
 from repro.kernels.hist_sketch.ops import (DEFAULT_BINS, HIST_HI,  # noqa: F401
                                            HIST_LO)
@@ -244,52 +271,10 @@ def _sample_inputs(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int,
     return unit_gaps, servers, services
 
 
-def _step_cell(free: Array, t: Array, srv: Array, svc: Array,
-               svc_shared: Array, mask: Array, overhead: Array,
-               policy: Array, model: Array, mix: Array) -> tuple[Array, Array]:
-    """One arrival at one (seed, load, variant) grid cell. free (N,), t /
-    svc_shared / overhead / policy / model / mix scalars, srv/svc/mask
-    (k_max,) -> (new free, response).
-
-    ``policy`` / ``model`` are the cell's ``scenario.Policy`` /
-    ``scenario.ServiceModel`` codes; every variant's update is computed
-    and the codes select one (mixed grids share this single trace). The
-    ``Policy.REPLICATE_ALL`` + ``ServiceModel.IID`` path is the paper's
-    model, op-for-op identical to the pre-scenario engine (the bit-
-    identity anchor of ``Scenario.paper_default``).
-    """
-    cur = free[srv]
-    # SERVER_DEPENDENT (Shah et al.): blend the shared request component
-    # into every copy. mix=0 (and the IID select arm) is bit-exact svc.
-    svc = jnp.where(model == int(ServiceModel.SERVER_DEPENDENT),
-                    mix * svc_shared + (1.0 - mix) * svc, svc)
-    start = jnp.maximum(cur, t)
-    finish = start + svc
-    t_win = jnp.min(jnp.where(mask, finish, jnp.inf))
-    # REPLICATE_TO_IDLE dispatches the primary always, extras only to
-    # servers idle at the arrival instant.
-    dispatch = mask & ((jnp.arange(srv.shape[0]) == 0) | (cur <= t))
-    # Per-policy server-occupancy updates (masked copies rewrite their own
-    # old value — a no-op; srv entries are distinct by construction):
-    #   REPLICATE_ALL      every copy runs to completion.
-    #   CANCEL_ON_COMPLETE losers vacate at the winner's finish: a loser
-    #                      in service frees at t_win, a queued loser
-    #                      (cur >= t_win) never starts — max(cur, t_win)
-    #                      covers both (and equals finish for the winner).
-    #   REPLICATE_TO_IDLE  only dispatched copies occupy their server.
-    val_all = jnp.where(mask, finish, cur)
-    val_cancel = jnp.where(mask, jnp.maximum(cur, t_win), cur)
-    val_idle = jnp.where(dispatch, finish, cur)
-    new_val = jnp.where(
-        policy == int(Policy.CANCEL_ON_COMPLETE), val_cancel,
-        jnp.where(policy == int(Policy.REPLICATE_TO_IDLE), val_idle,
-                  val_all))
-    free = free.at[srv].set(new_val)
-    resp_win = t_win - t + overhead
-    resp_idle = jnp.min(jnp.where(dispatch, finish, jnp.inf)) - t + overhead
-    resp = jnp.where(policy == int(Policy.REPLICATE_TO_IDLE), resp_idle,
-                     resp_win)
-    return free, resp
+# The single-arrival physics moved to the cell_update kernel package so
+# the scan body and the Pallas kernel share one source of truth; kept
+# under the old private name for the raw-response paths and tests.
+_step_cell = step_cell
 
 
 def _scan_sim(arrivals: Array, servers: Array, services: Array, n_servers: int,
@@ -419,14 +404,15 @@ def _sample_sweep_inputs(key: Array, dist: ServiceDist, cfg: SimConfig,
     return unit_gaps, servers, services
 
 
-@partial(jax.jit, static_argnames=("n_servers", "n_bins", "block"))
+@partial(jax.jit, static_argnames=("n_servers", "n_bins", "block",
+                                   "use_kernel"))
 def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
                        unit_gaps: Array, servers: Array, services: Array,
                        start: Array, n_valid: Array, warmup_start: Array,
                        seed_idx: Array, rates: Array, k_mask: Array,
                        ovh: Array, policy_code: Array, model_code: Array,
                        mix: Array, *, n_servers: int, n_bins: int,
-                       block: int):
+                       block: int, use_kernel: str = "off"):
     """Scenario- and distribution-agnostic fused core over ONE chunk of
     arrivals, on a flat cell axis (see ``repro.core.cellplan``).
 
@@ -463,10 +449,16 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
     hist_sketch kernel — no per-step scatter, no (C,T) materialization
     beyond one block. Returns the carry with ``free`` rebased to the
     chunk-end time.
+
+    ``use_kernel`` picks the body implementation (see the module design
+    note): ``"off"`` runs the ``lax.scan`` reference
+    (``cell_update_ref``), ``"on"`` / ``"interpret"`` the fused Pallas
+    kernel (compiled / interpreted) — bit-identical by contract, pinned
+    by the kernel parity tests. Kernel modes require ``T`` padded to
+    the ``block`` multiple even without the sketch (``_chunk_layout``
+    arranges this).
     """
     S, T = unit_gaps.shape
-    k_max = k_mask.shape[1]
-    has_shared = services.shape[-1] > k_max
     need_hist = hist.size > 0
     if need_hist:
         assert T % block == 0, (T, block)
@@ -478,54 +470,13 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
     services = services * valid[None, :, None]
     cum = jnp.cumsum(gaps, axis=1)      # (S, T) offsets from chunk start
 
-    cell_c = jax.vmap(_step_cell)       # one lane per cell of the flat axis
-
-    def step(carry, inp):
-        free, ssum, comp = carry
-        c, w, srv, svc = inp                       # (S,), (), (S,k), (S,n_svc)
-        t = c[seed_idx] / rates                       # (C,)
-        svc_c = svc[seed_idx]                         # (C, n_svc)
-        shared_c = svc_c[:, k_max] if has_shared else svc_c[:, 0]
-        free, resp = cell_c(free, t, srv[seed_idx], svc_c[:, :k_max],
-                            shared_c, k_mask, ovh, policy_code, model_code,
-                            mix)
-        # Kahan-compensated sum: sequential f32 accumulation over ~1e5+
-        # terms would otherwise cost ~1e-4 relative error on the mean,
-        # which is the signal threshold bisection keys on. Two guards
-        # keep the update's rounding EXACTLY the same in every
-        # compilation (the sharded-vs-unsharded bit-identity contract):
-        # the 0/1 warmup weight is applied via select, not multiply (a
-        # `resp * w - comp` multiply-subtract invites FMA contraction),
-        # and an optimization_barrier hides `tot` from XLA's algebraic
-        # simplifier, which would otherwise rewrite `(tot - ssum) - y`
-        # — compensation terms it sees as algebraically zero — depending
-        # on the surrounding fusion context.
-        y = jnp.where(w > 0, resp, 0.0) - comp
-        tot = ssum + y
-        tot_b, y_b = jax.lax.optimization_barrier((tot, y))
-        comp = (tot_b - ssum) - y_b
-        return (free, tot_b, comp), (resp if need_hist else None)
-
-    xs = (cum.T, warm, jnp.moveaxis(servers, 1, 0),
-          jnp.moveaxis(services, 1, 0))
-    if need_hist:
-        xs = jax.tree.map(
-            lambda x: x.reshape((T // block, block) + x.shape[1:]), xs)
-
-        def outer(carry, xs_blk):
-            free, ssum, comp, hist = carry
-            (free, ssum, comp), resp = jax.lax.scan(
-                step, (free, ssum, comp), xs_blk)
-            idx = hist_ops.bin_indices(resp, xs_blk[1][:, None],
-                                       n_bins=n_bins)
-            hist = hist + hist_ops.hist_accum(idx, n_bins=n_bins,
-                                              block_t=block)
-            return (free, ssum, comp, hist), None
-
-        (free, ssum, comp, hist), _ = jax.lax.scan(
-            outer, (free, ssum, comp, hist), xs)
-    else:
-        (free, ssum, comp), _ = jax.lax.scan(step, (free, ssum, comp), xs)
+    body = (cell_update_ref if use_kernel == "off"
+            else partial(cell_ops.cell_update,
+                         interpret=(use_kernel == "interpret")))
+    free, ssum, comp, hist = body(
+        free, ssum, comp, hist, cum, warm, servers, services, seed_idx,
+        rates, k_mask, ovh, policy_code, model_code, mix,
+        n_servers=n_servers, n_bins=n_bins, block=block)
 
     # rebase to the chunk-end arrival time so floats stay O(chunk duration)
     free = free - (cum[:, -1][seed_idx] / rates)[:, None]
@@ -565,13 +516,19 @@ def _init_cell_state(plan: cellplan.CellPlan, cfg: SimConfig, n_bins: int,
     return free, ssum, comp, hist
 
 
-def _chunk_layout(cfg: SimConfig, chunk_size: int | None, need_hist: bool):
-    """(chunk length, #chunks, sketch block, pad-to-block) of a stream."""
+def _chunk_layout(cfg: SimConfig, chunk_size: int | None, need_hist: bool,
+                  kernel_on: bool = False):
+    """(chunk length, #chunks, sketch block, pad-to-block) of a stream.
+
+    Chunks are padded to a block multiple when the sketch needs staged
+    sub-blocks OR the Pallas cell-update kernel is on (its time grid is
+    blocked unconditionally). Padding never changes bits: zero-weight
+    steps are bitwise no-ops on the whole carry (``ref.kahan_fold``)."""
     m = cfg.n_arrivals
     t_chunk = m if chunk_size is None else min(int(chunk_size), m)
     n_chunks = math.ceil(m / t_chunk)
     block = min(_SKETCH_BLOCK, t_chunk)
-    pad = (-t_chunk) % block if need_hist else 0
+    pad = (-t_chunk) % block if (need_hist or kernel_on) else 0
     return t_chunk, n_chunks, block, pad
 
 
@@ -606,7 +563,8 @@ def _finalize_summary(plan: cellplan.CellPlan, ssum: Array, hist: Array,
 def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
                 variants: tuple[Variant, ...], warmup_frac: float,
                 percentiles: tuple[float, ...],
-                n_bins: int, chunk_size: int | None) -> dict[str, Array]:
+                n_bins: int, chunk_size: int | None,
+                use_kernel: str = "off") -> dict[str, Array]:
     """Drive ``_sweep_chunk_cells`` over the whole arrival stream on one
     device: unpadded cell plan (variant policy/model codes as per-cell
     coordinates), seed-level sampled inputs shared by each seed's
@@ -615,6 +573,7 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
     ``sampler(chunk_idx, chunk_len)`` returns that chunk's
     ``(unit_gaps (S,T), servers (S,T,k_max), services (S,T,n_svc))`` —
     one call over the full stream when ``chunk_size`` is None.
+    ``use_kernel`` is a RESOLVED kernel mode (never ``"auto"``).
     """
     m = cfg.n_arrivals
     policies, models = scenario_mod.variant_codes(variants)
@@ -625,7 +584,8 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
                                                         variants)
     warmup_start = int(m * warmup_frac)
     need_hist = len(percentiles) > 0
-    t_chunk, n_chunks, block, pad = _chunk_layout(cfg, chunk_size, need_hist)
+    t_chunk, n_chunks, block, pad = _chunk_layout(
+        cfg, chunk_size, need_hist, kernel_on=use_kernel != "off")
     free, ssum, comp, hist = _init_cell_state(plan, cfg, n_bins, need_hist)
 
     for c in range(n_chunks):
@@ -637,7 +597,8 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
             jnp.asarray(start), jnp.asarray(min(t_chunk, m - start)),
             jnp.asarray(warmup_start), plan.seed_idx, rates_c, k_mask_c,
             ovh_c, plan.policy_code, plan.model_code, mix_c,
-            n_servers=cfg.n_servers, n_bins=n_bins, block=block)
+            n_servers=cfg.n_servers, n_bins=n_bins, block=block,
+            use_kernel=use_kernel)
 
     return _finalize_summary(plan, ssum, hist, m - warmup_start,
                              percentiles)
@@ -696,7 +657,8 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
         percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
         n_bins: int = DEFAULT_BINS,
         chunk_size: int | None = None,
-        mesh: jax.sharding.Mesh | None = None) -> dict[str, Array]:
+        mesh: jax.sharding.Mesh | None = None,
+        kernel: str = "auto") -> dict[str, Array]:
     """Execute a ``Scenario`` (or a sequence — a MIXED grid) over a load
     grid. THE public entry point of the sweep engine; ``sweep`` /
     ``sweep_dists`` / ``replication_gain`` are thin shims over it.
@@ -718,7 +680,11 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
     arrivals in chunks of that many steps so peak memory is independent
     of ``cfg.n_arrivals``. ``mesh`` routes execution through the sharded
     cell-plan executor (``repro.distributed.sweep_shard``) —
-    bit-identical for any device count.
+    bit-identical for any device count. ``kernel`` picks the chunk-body
+    implementation (``"auto"`` / ``"on"`` / ``"off"`` /
+    ``"interpret"``, see the module design note and
+    ``repro.kernels.cell_update.ops.resolve_kernel_mode``) — every mode
+    is bit-identical, on or off a mesh.
 
     Key-splitting / CRN contract: unchanged from the legacy ``sweep``
     (see the module design note) — ``Scenario.paper_default`` consumes
@@ -746,7 +712,8 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
 
     kwargs = dict(variants=variants, warmup_frac=warmup_frac,
                   percentiles=tuple(percentiles), n_bins=n_bins,
-                  chunk_size=chunk_size)
+                  chunk_size=chunk_size,
+                  use_kernel=cell_ops.resolve_kernel_mode(kernel))
     if mesh is not None:
         from repro.distributed.sweep_shard import _sweep_cells_sharded
         out = _sweep_cells_sharded(sampler, d * n_seeds, rhos, cfg,
@@ -760,48 +727,61 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
     return out
 
 
+def _warn_deprecated_shim(name: str) -> None:
+    warnings.warn(
+        f"queueing.{name} is a deprecated paper-default shim; use "
+        f"queueing.run with a Scenario (bit-identical output)",
+        DeprecationWarning, stacklevel=3)
+
+
 def sweep(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig, *,
           ks: tuple[int, ...] = (1, 2), n_seeds: int = 2,
           percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
           n_bins: int = DEFAULT_BINS,
-          chunk_size: int | None = None) -> dict[str, Array]:
+          chunk_size: int | None = None,
+          kernel: str = "auto") -> dict[str, Array]:
     """Fused multi-(k, seed, load) sweep of the PAPER's model.
 
     .. deprecated:: Thin shim over ``run(key, Scenario.paper_default(
-       dist, ks=ks, ...), rhos, cfg, ...)`` — bit-identical output;
-       prefer ``run`` (it also expresses cancellation / dispatch-to-idle
-       policies, server-dependent service and mixed grids).
+       dist, ks=ks, ...), rhos, cfg, ...)`` — bit-identical output
+       (emits ``DeprecationWarning``); prefer ``run`` (it also
+       expresses cancellation / dispatch-to-idle policies,
+       server-dependent service and mixed grids).
 
     Summary shapes, chunking and the CRN contract are exactly ``run``'s
     (single-dist layout): ``(n_seeds, len(rhos), len(ks))``.
     """
+    _warn_deprecated_shim("sweep")
     scn = Scenario.paper_default(dist, ks=tuple(int(k) for k in ks),
                                  client_overhead=cfg.client_overhead,
                                  warmup_frac=cfg.warmup_frac)
     return run(key, scn, rhos, cfg, n_seeds=n_seeds,
                percentiles=percentiles, n_bins=n_bins,
-               chunk_size=chunk_size)
+               chunk_size=chunk_size, kernel=kernel)
 
 
 def sweep_dists(key: Array, dist_list, rhos: Array, cfg: SimConfig, *,
                 ks: tuple[int, ...] = (1, 2), n_seeds: int = 2,
                 percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
                 n_bins: int = DEFAULT_BINS,
-                chunk_size: int | None = None) -> dict[str, Array]:
+                chunk_size: int | None = None,
+                kernel: str = "auto") -> dict[str, Array]:
     """Sweep MANY service-time distributions in one engine call by stacking
     them along the seed axis; summaries gain a leading dist axis
     ``(len(dist_list), n_seeds, len(rhos), len(ks))``.
 
     .. deprecated:: Thin shim over ``run`` with a multi-``dists``
-       ``Scenario.paper_default`` — bit-identical output; prefer ``run``.
+       ``Scenario.paper_default`` — bit-identical output (emits
+       ``DeprecationWarning``); prefer ``run``.
     """
+    _warn_deprecated_shim("sweep_dists")
     dist_list = tuple(dist_list)
     scn = Scenario.paper_default(dist_list, ks=tuple(int(k) for k in ks),
                                  client_overhead=cfg.client_overhead,
                                  warmup_frac=cfg.warmup_frac)
     out = run(key, scn, rhos, cfg, n_seeds=n_seeds,
               percentiles=percentiles, n_bins=n_bins,
-              chunk_size=chunk_size)
+              chunk_size=chunk_size, kernel=kernel)
     if len(dist_list) == 1:  # run() adds the dist axis only for d > 1
         out = {k: (v[None] if isinstance(v, jax.Array) else v)
                for k, v in out.items()}
@@ -810,29 +790,36 @@ def sweep_dists(key: Array, dist_list, rhos: Array, cfg: SimConfig, *,
 
 def mean_response(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig,
                   k: int, n_seeds: int = 1,
-                  chunk_size: int | None = None) -> Array:
+                  chunk_size: int | None = None,
+                  kernel: str = "auto") -> Array:
     """Post-warmup mean response (B,) averaged over ``n_seeds`` seeds."""
-    out = sweep(key, dist, rhos, cfg, ks=(k,), n_seeds=n_seeds,
-                percentiles=(), chunk_size=chunk_size)
+    scn = Scenario.paper_default(dist, ks=(int(k),),
+                                 client_overhead=cfg.client_overhead,
+                                 warmup_frac=cfg.warmup_frac)
+    out = run(key, scn, rhos, cfg, n_seeds=n_seeds,
+              percentiles=(), chunk_size=chunk_size, kernel=kernel)
     return jnp.mean(out["mean"][:, :, 0], axis=0)
 
 
 def replication_gain(key: Array, dist: ServiceDist, rhos: Array,
                      cfg: SimConfig, k: int = 2, n_seeds: int = 2,
                      chunk_size: int | None = None,
-                     mesh: jax.sharding.Mesh | None = None) -> Array:
+                     mesh: jax.sharding.Mesh | None = None,
+                     kernel: str = "auto") -> Array:
     """mean_k1(rho) - mean_k(rho), CRN-paired per seed. Positive = k helps.
 
     .. deprecated:: Thin shim over ``run`` with a paper-default
-       ``Scenario`` at ``ks=(1, k)``; prefer ``run`` + a paired-gain
-       reduction (or ``threshold.scenario_gain``).
+       ``Scenario`` at ``ks=(1, k)`` (emits ``DeprecationWarning``);
+       prefer ``run`` + a paired-gain reduction (or
+       ``threshold.scenario_gain``).
 
     ``mesh`` routes the sweep through the sharded cell-plan executor
     (bit-identical to the local path; see the module CRN contract)."""
+    _warn_deprecated_shim("replication_gain")
     scn = Scenario.paper_default(dist, ks=(1, int(k)),
                                  client_overhead=cfg.client_overhead,
                                  warmup_frac=cfg.warmup_frac)
     out = run(key, scn, rhos, cfg, n_seeds=n_seeds, percentiles=(),
-              chunk_size=chunk_size, mesh=mesh)
+              chunk_size=chunk_size, mesh=mesh, kernel=kernel)
     m = out["mean"]  # (S, B, 2)
     return jnp.mean(m[:, :, 0] - m[:, :, 1], axis=0)

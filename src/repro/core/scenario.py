@@ -64,7 +64,9 @@ from repro.core.distributions import ServiceDist
 
 
 class Policy(enum.IntEnum):
-    """Replication-policy codes (per-cell coordinates in the cell plan)."""
+    """Replication-policy codes (per-cell coordinates in the cell plan;
+    the fused cell-update kernel reads them as scalar-prefetch operands,
+    so the values must stay small non-negative ints)."""
 
     REPLICATE_ALL = 0
     CANCEL_ON_COMPLETE = 1
@@ -72,7 +74,9 @@ class Policy(enum.IntEnum):
 
 
 class ServiceModel(enum.IntEnum):
-    """Service-model codes (per-cell coordinates in the cell plan)."""
+    """Service-model codes (per-cell coordinates in the cell plan; like
+    ``Policy`` codes they ride the fused cell-update kernel as
+    scalar-prefetch operands)."""
 
     IID = 0
     SERVER_DEPENDENT = 1

@@ -76,13 +76,17 @@ def _as_scenario(dist_or_scenario, cfg: SimConfig, k: int) -> Scenario:
 
 def scenario_gain(key: Array, dist_or_scenario, rhos: Array,
                   cfg: SimConfig, *, k: int = 2, n_seeds: int = 2,
-                  chunk_size: int | None = None, mesh=None) -> Array:
+                  chunk_size: int | None = None, mesh=None,
+                  kernel: str = "auto") -> Array:
     """(B,) seed-averaged CRN-paired gain mean_k1(rho) - mean_k(rho) under
     the scenario's policy / service model (positive = replication helps).
-    The scenario-aware generalization of ``queueing.replication_gain``."""
+    The scenario-aware generalization of ``queueing.replication_gain``.
+    ``kernel`` picks the engine's chunk-body implementation (see
+    ``queueing.run``) — every mode is bit-identical, so thresholds are
+    too."""
     scn = _as_scenario(dist_or_scenario, cfg, k)
     out = run(key, scn, rhos, cfg, n_seeds=n_seeds, percentiles=(),
-              chunk_size=chunk_size, mesh=mesh)
+              chunk_size=chunk_size, mesh=mesh, kernel=kernel)
     return _paired_gain(out["mean"])
 
 
@@ -91,7 +95,7 @@ def threshold_bisect(key: Array, dist_or_scenario, cfg: SimConfig, *,
                      iters: int = 10, n_seeds: int = 3,
                      speculative: bool = True,
                      chunk_size: int | None = None,
-                     mesh=None) -> float:
+                     mesh=None, kernel: str = "auto") -> float:
     """Speculative bisection on the CRN-paired replication gain.
 
     Assumes the gain changes sign once on [lo, hi] (true for every family the
@@ -107,7 +111,7 @@ def threshold_bisect(key: Array, dist_or_scenario, cfg: SimConfig, *,
     """
     scn = _as_scenario(dist_or_scenario, cfg, k)
     kw = dict(n_seeds=n_seeds, percentiles=(), chunk_size=chunk_size,
-              mesh=mesh)
+              mesh=mesh, kernel=kernel)
     keys = jax.random.split(key, iters + 1)
     # both bracket probes in one batched (seeds x {lo,hi} x {1,k}) sweep
     bracket = run(keys[-1], scn, jnp.asarray([lo, hi]), cfg, **kw)
@@ -167,12 +171,14 @@ def _default_rhos() -> Array:
 
 def threshold_grid(key: Array, dist_or_scenario, cfg: SimConfig, *,
                    k: int = 2, rhos: Array | None = None, n_seeds: int = 2,
-                   chunk_size: int | None = None, mesh=None) -> float:
+                   chunk_size: int | None = None, mesh=None,
+                   kernel: str = "auto") -> float:
     """ONE fused sweep over the load grid + crossing interpolation."""
     if rhos is None:
         rhos = _default_rhos()
     g = scenario_gain(key, dist_or_scenario, rhos, cfg, k=k,
-                      n_seeds=n_seeds, chunk_size=chunk_size, mesh=mesh)
+                      n_seeds=n_seeds, chunk_size=chunk_size, mesh=mesh,
+                      kernel=kernel)
     return _interp_crossing(rhos, g)
 
 
@@ -180,7 +186,7 @@ def threshold_grid_batch(key: Array, dists_or_scenario, cfg: SimConfig, *,
                          k: int = 2, rhos: Array | None = None,
                          n_seeds: int = 2,
                          chunk_size: int | None = None,
-                         mesh=None) -> list[float]:
+                         mesh=None, kernel: str = "auto") -> list[float]:
     """Thresholds for MANY distributions from a single fused engine call
     (distributions stack along the engine's seed axis, so e.g. all 15
     Figure 2 families run in one scan — sharded over the cell axis when
@@ -196,7 +202,7 @@ def threshold_grid_batch(key: Array, dists_or_scenario, cfg: SimConfig, *,
         scn = dataclasses.replace(_as_scenario(dist_tuple[0], cfg, k),
                                   dists=dist_tuple)
     out = run(key, scn, rhos, cfg, n_seeds=n_seeds, percentiles=(),
-              chunk_size=chunk_size, mesh=mesh)
+              chunk_size=chunk_size, mesh=mesh, kernel=kernel)
     m = out["mean"]  # (D, S, B, 2) — or (S, B, 2) for a single dist
     if m.ndim == 3:
         m = m[None]

@@ -82,7 +82,7 @@ def _shard_map_unchecked(f, mesh, in_specs, out_specs):
 
 @functools.lru_cache(maxsize=None)
 def _body_fn(mesh: jax.sharding.Mesh, n_servers: int, n_bins: int,
-             block: int):
+             block: int, use_kernel: str = "off"):
     """Build (and cache) the jitted, shard_mapped chunk-body executor.
 
     The carry and the per-cell parameters — including the scenario
@@ -91,6 +91,12 @@ def _body_fn(mesh: jax.sharding.Mesh, n_servers: int, n_bins: int,
     device reads only its cells' rows via the sharded ``seed_idx``).
     Cached per mesh so repeated engine calls (threshold bisection!)
     reuse the wrapper and its jit cache.
+
+    ``use_kernel`` is a RESOLVED cell-update kernel mode (see
+    ``queueing.run``): the Pallas kernel runs per shard on its local
+    cells — its per-cell grid maps 1:1 onto the sharded axis, like the
+    hist_sketch kernel — so every mode preserves the bit-identity
+    contract.
     """
     def chunk_body(free, ssum, comp, hist, seed_idx, rates, k_mask, ovh,
                    policy_code, model_code, mix,
@@ -100,7 +106,8 @@ def _body_fn(mesh: jax.sharding.Mesh, n_servers: int, n_bins: int,
             free, ssum, comp, hist, unit_gaps, servers, services, start,
             n_valid, warmup_start, seed_idx, rates, k_mask, ovh,
             policy_code, model_code, mix,
-            n_servers=n_servers, n_bins=n_bins, block=block)
+            n_servers=n_servers, n_bins=n_bins, block=block,
+            use_kernel=use_kernel)
 
     cells = P("cells")
     return jax.jit(_shard_map_unchecked(
@@ -114,7 +121,8 @@ def _sweep_cells_sharded(sampler, n_seeds_total: int,
                          variants, warmup_frac: float,
                          percentiles: tuple[float, ...], n_bins: int,
                          chunk_size: int | None,
-                         mesh: jax.sharding.Mesh | None) -> dict[str, Array]:
+                         mesh: jax.sharding.Mesh | None,
+                         use_kernel: str = "off") -> dict[str, Array]:
     """Drive the shard_mapped chunk body over the whole arrival stream.
 
     ``sampler(chunk_idx, chunk_len)`` is the SAME host-side per-seed
@@ -141,10 +149,10 @@ def _sweep_cells_sharded(sampler, n_seeds_total: int,
     warmup_start = int(m * warmup_frac)
     need_hist = len(percentiles) > 0
     t_chunk, n_chunks, block, pad = queueing._chunk_layout(
-        cfg, chunk_size, need_hist)
+        cfg, chunk_size, need_hist, kernel_on=use_kernel != "off")
     free, ssum, comp, hist = queueing._init_cell_state(plan, cfg, n_bins,
                                                        need_hist)
-    run_chunk = _body_fn(mesh, cfg.n_servers, n_bins, block)
+    run_chunk = _body_fn(mesh, cfg.n_servers, n_bins, block, use_kernel)
 
     for c in range(n_chunks):
         unit_gaps, servers, services = queueing._pad_chunk_inputs(
@@ -167,16 +175,19 @@ def run_sharded(key: Array, scenario, rhos: Array, cfg: queueing.SimConfig,
                 = queueing.DEFAULT_PERCENTILES,
                 n_bins: int = queueing.DEFAULT_BINS,
                 chunk_size: int | None = None,
-                mesh: jax.sharding.Mesh | None = None) -> dict[str, Array]:
+                mesh: jax.sharding.Mesh | None = None,
+                kernel: str = "auto") -> dict[str, Array]:
     """``queueing.run`` across a device mesh (``mesh=None`` uses every
     visible device): same scenario semantics — including mixed-policy /
     mixed-model grids — same summary shapes, bit-identical results for
-    the same ``(key, chunk_size)`` no matter the device count.
-    Equivalent to ``queueing.run(..., mesh=mesh)``."""
+    the same ``(key, chunk_size)`` no matter the device count (and no
+    matter the ``kernel`` mode). Equivalent to
+    ``queueing.run(..., mesh=mesh)``."""
     return queueing.run(key, scenario, rhos, cfg, n_seeds=n_seeds,
                         percentiles=percentiles, n_bins=n_bins,
                         chunk_size=chunk_size,
-                        mesh=make_sweep_mesh() if mesh is None else mesh)
+                        mesh=make_sweep_mesh() if mesh is None else mesh,
+                        kernel=kernel)
 
 
 def sweep_sharded(key: Array, dist: ServiceDist, rhos: Array,

@@ -1,0 +1,15 @@
+"""Fused Pallas cell-update kernel for the sweep engine's chunk body.
+
+``ops.cell_update`` runs one chunk of arrivals through the per-cell DES
+update — free-time grid, policy/model selects, Kahan mean fold, and
+hist-sketch bin accumulation — with the whole per-cell carry resident in
+VMEM across the chunk. ``ref`` holds the single source of truth for the
+step physics (``step_cell``) and the ``lax.scan`` reference body the
+kernel must match bit-for-bit; ``repro.core.queueing`` dispatches
+between the two behind its ``use_kernel`` flag.
+"""
+from repro.kernels.cell_update.ops import (cell_update,  # noqa: F401
+                                           cell_update_costs,
+                                           resolve_kernel_mode)
+from repro.kernels.cell_update.ref import (cell_update_ref,  # noqa: F401
+                                           step_cell)

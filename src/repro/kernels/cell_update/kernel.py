@@ -1,0 +1,276 @@
+"""Pallas TPU kernel: one chunk of the sweep engine's cell update, fused.
+
+The scan-body reference (``ref.cell_update_ref``) round-trips the whole
+per-cell carry — the (C, N) server free-time grid, the Kahan (sum,
+comp) pair, and the (C, n_bins) histogram counts — through HBM-backed
+scan state on EVERY arrival. This kernel keeps all of it in VMEM for a
+whole chunk and touches HBM once per (cell, chunk):
+
+  grid = (C, T // block_t)        cells outer, time-blocks inner
+                                  (innermost axis is sequential on a
+                                  TPU core, so VMEM scratch persists
+                                  across a cell's time-blocks)
+
+  VMEM carry per cell             free_s  (1, N)        f32
+  (scratch, init at it == 0,      ssum_s / comp_s (1,1) f32
+  flushed to HBM at the last      hist_s  (n_hi, 128)   f32
+  time-block):                    (n_hi = n_bins / 128 — the
+                                  hist_sketch accumulator layout)
+
+  HBM traffic per (cell, chunk)   read + write of the carry blocks
+                                  plus one pass over the seed-level
+                                  inputs — vs O(T) carry round-trips
+                                  in the scan body.
+
+Per-cell plan coordinates ride as SCALAR-PREFETCH operands (seed_idx,
+k_count, policy_code, model_code, rates, overhead, mix — see
+``repro.core.cellplan``): the seed coordinate drives the input
+BlockSpec index maps, so each cell's grid row streams exactly its
+seed's (block_t,) slice of the sampled inputs and the (C, T)
+expansion is never materialized — the same "gather by coordinate, not
+by position" rule that makes sharded execution bit-identical.
+
+Bit-identity with the scan body (the contract the parity tests pin):
+
+  * The step body mirrors ``ref.step_cell`` op-for-op; all float ops
+    are elementwise or min/max over the tiny copy axis, so the
+    (1, k)-shaped retiling cannot change bits.
+  * The free-time gather is a one-hot ``max(where(...))`` — an exact
+    PICK of an element, no arithmetic on it.
+  * The occupancy scatter is a Python-unrolled sequence of selects in
+    copy order, matching XLA's last-wins ``.at[srv].set`` semantics
+    (srv entries are distinct by construction, so order only matters
+    for the masked no-op copies that rewrite their own old value).
+  * The Kahan fold is ``ref.kahan_fold`` — literally the same
+    function — gated so zero-weight (padding / pre-warmup) steps are
+    bitwise no-ops.
+  * Histogram counts are 0/1 indicator-matmul accumulations of
+    integers in f32 (exact below 2**24 per bin), so any accumulation
+    order gives identical bits; the bin indices come from the same
+    ``hist_sketch.ops.bin_indices``.
+
+The CRN / fold_in contract is untouched: sampling stays host-side and
+seed-level (see ``queueing.py``); the kernel only changes WHERE the
+deterministic update runs. Off-TPU the kernel runs in Pallas interpret
+mode, which executes the same jnp ops through XLA CPU — that is what
+keeps kernel-mode CI runs bit-exact against the scan body rather than
+"close".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.scenario import Policy, ServiceModel
+from repro.kernels.cell_update.ref import kahan_fold
+from repro.kernels.hist_sketch import ops as hist_ops
+from repro.kernels.hist_sketch.kernel import LANE
+
+
+def _cell_kernel(seed_ref, kcnt_ref, pol_ref, mdl_ref, rate_ref, ovh_ref,
+                 mix_ref, free_in, ssum_in, comp_in, *rest, n_servers: int,
+                 k_max: int, n_svc: int, block_t: int, n_hi: int,
+                 need_hist: bool):
+    if need_hist:
+        (hist_in, cum_ref, warm_ref, srv_ref, svc_ref,
+         free_out, ssum_out, comp_out, hist_out,
+         free_s, ssum_s, comp_s, hist_s) = rest
+    else:
+        (cum_ref, warm_ref, srv_ref, svc_ref,
+         free_out, ssum_out, comp_out,
+         free_s, ssum_s, comp_s) = rest
+    ic = pl.program_id(0)
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        free_s[...] = free_in[...]
+        ssum_s[...] = ssum_in[...]
+        comp_s[...] = comp_in[...]
+        if need_hist:
+            hist_s[...] = hist_in[0]
+
+    # this cell's plan coordinates (scalar prefetch)
+    rate = rate_ref[ic]
+    ovh = ovh_ref[ic]
+    mix = mix_ref[ic]
+    kcnt = kcnt_ref[ic]
+    is_sd = mdl_ref[ic] == int(ServiceModel.SERVER_DEPENDENT)
+    is_cancel = pol_ref[ic] == int(Policy.CANCEL_ON_COMPLETE)
+    is_idle = pol_ref[ic] == int(Policy.REPLICATE_TO_IDLE)
+
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k_max), 1)
+    mask = iota_k < kcnt            # k_mask rows are prefixes by plan
+    primary = iota_k == 0
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (k_max, n_servers), 1)
+
+    cum_blk = cum_ref[0]            # (block_t,) this seed's time block
+    warm_blk = warm_ref[0]          # (block_t,)
+    srv_blk = srv_ref[0]            # (block_t, k_max)
+    svc_blk = svc_ref[0]            # (block_t, n_svc)
+
+    def step(s, carry):
+        if need_hist:
+            free, ssum, comp, resp_blk = carry
+        else:
+            free, ssum, comp = carry
+        t = cum_blk[s] / rate
+        srv = jax.lax.dynamic_slice(srv_blk, (s, 0), (1, k_max))
+        svc_row = jax.lax.dynamic_slice(svc_blk, (s, 0), (1, n_svc))
+        shared = svc_row[0, n_svc - 1] if n_svc > k_max else svc_row[0, 0]
+        svc = svc_row[:, :k_max]
+        w = warm_blk[s]
+        # exact gather: one-hot pick of free[srv] (no arithmetic on it)
+        oh = srv[0, :, None] == iota_n                      # (k, N)
+        cur = jnp.max(jnp.where(oh, free, -jnp.inf), axis=1)[None, :]
+        # step_cell, op-for-op on (1, k) lanes
+        svc = jnp.where(is_sd, mix * shared + (1.0 - mix) * svc, svc)
+        start = jnp.maximum(cur, t)
+        finish = start + svc
+        t_win = jnp.min(jnp.where(mask, finish, jnp.inf))
+        dispatch = mask & (primary | (cur <= t))
+        val_all = jnp.where(mask, finish, cur)
+        val_cancel = jnp.where(mask, jnp.maximum(cur, t_win), cur)
+        val_idle = jnp.where(dispatch, finish, cur)
+        new_val = jnp.where(is_cancel, val_cancel,
+                            jnp.where(is_idle, val_idle, val_all))
+        # scatter: unrolled selects in copy order == XLA's last-wins
+        # .at[srv].set (srv entries distinct; masked copies rewrite
+        # their own old value either way)
+        for j in range(k_max):
+            free = jnp.where(oh[j][None, :], new_val[0, j], free)
+        resp_win = t_win - t + ovh
+        resp_idle = (jnp.min(jnp.where(dispatch, finish, jnp.inf))
+                     - t + ovh)
+        resp = jnp.where(is_idle, resp_idle, resp_win)
+        ssum, comp = kahan_fold(ssum, comp, resp, w)
+        if need_hist:
+            resp_blk = jax.lax.dynamic_update_slice(
+                resp_blk, resp.reshape(1, 1), (s, 0))
+            return free, ssum, comp, resp_blk
+        return free, ssum, comp
+
+    carry = (free_s[...], ssum_s[0, 0], comp_s[0, 0])
+    if need_hist:
+        carry += (jnp.zeros((block_t, 1), jnp.float32),)
+    carry = jax.lax.fori_loop(0, block_t, step, carry)
+    free_s[...] = carry[0]
+    ssum_s[0, 0] = carry[1]
+    comp_s[0, 0] = carry[2]
+    if need_hist:
+        # hist_sketch accumulation (see that kernel's design note):
+        # idx == -1 (padding / pre-warmup) matches no indicator row
+        idx = hist_ops.bin_indices(carry[3], warm_blk[:, None],
+                                   n_bins=n_hi * LANE)       # (block_t, 1)
+        hi = idx // LANE
+        lo = idx - hi * LANE
+        a = (hi == jax.lax.broadcasted_iota(
+            jnp.int32, (block_t, n_hi), 1)).astype(jnp.float32)
+        b = (lo == jax.lax.broadcasted_iota(
+            jnp.int32, (block_t, LANE), 1)).astype(jnp.float32)
+        hist_s[...] += jax.lax.dot_general(
+            a, b, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(it == pl.num_programs(1) - 1)
+    def _flush():
+        free_out[...] = free_s[...]
+        ssum_out[...] = ssum_s[...]
+        comp_out[...] = comp_s[...]
+        if need_hist:
+            hist_out[0] = hist_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_servers", "n_bins",
+                                             "block_t", "interpret"))
+def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
+                   hist: jax.Array, cum: jax.Array, warm: jax.Array,
+                   servers: jax.Array, services: jax.Array,
+                   seed_idx: jax.Array, k_count: jax.Array,
+                   policy: jax.Array, model: jax.Array, rates: jax.Array,
+                   ovh: jax.Array, mix: jax.Array, *, n_servers: int,
+                   n_bins: int, block_t: int, interpret: bool = False):
+    """One chunk of the fused cell update. Carry free (C,N) / ssum, comp
+    (C,) / hist (C, n_bins) (shape (0,0) skips the sketch); inputs cum
+    (S,T) cumulative offsets, warm (T,) 0/1 weights, servers (S,T,k_max),
+    services (S,T,n_svc); per-cell scalar-prefetch coordinates (C,) each.
+    Requires ``T % block_t == 0`` and (with the sketch) ``n_bins % 128
+    == 0`` — ``ops.cell_update`` pads/validates. Returns the updated
+    carry, free NOT yet rebased (the caller rebases, same as the ref).
+    """
+    c_cells = free.shape[0]
+    t_total = cum.shape[1]
+    k_max = servers.shape[-1]
+    n_svc = services.shape[-1]
+    need_hist = hist.size > 0
+    assert t_total % block_t == 0, (t_total, block_t)
+    n_tb = t_total // block_t
+    n_hi = (n_bins // LANE) if need_hist else 0
+
+    kernel = functools.partial(
+        _cell_kernel, n_servers=n_servers, k_max=k_max, n_svc=n_svc,
+        block_t=block_t, n_hi=n_hi, need_hist=need_hist)
+
+    def cell_row(ic, it, *_):
+        return (ic, 0)
+
+    def seed_time(ic, it, seed, *_):
+        return (seed[ic], it)
+
+    in_specs = [
+        pl.BlockSpec((1, n_servers), cell_row),                  # free
+        pl.BlockSpec((1, 1), cell_row),                          # ssum
+        pl.BlockSpec((1, 1), cell_row),                          # comp
+    ]
+    if need_hist:
+        in_specs.append(
+            pl.BlockSpec((1, n_hi, LANE), lambda ic, it, *_: (ic, 0, 0)))
+    in_specs += [
+        pl.BlockSpec((1, block_t), seed_time),                   # cum
+        pl.BlockSpec((1, block_t), lambda ic, it, *_: (0, it)),  # warm
+        pl.BlockSpec((1, block_t, k_max),
+                     lambda ic, it, seed, *_: (seed[ic], it, 0)),
+        pl.BlockSpec((1, block_t, n_svc),
+                     lambda ic, it, seed, *_: (seed[ic], it, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, n_servers), cell_row),
+        pl.BlockSpec((1, 1), cell_row),
+        pl.BlockSpec((1, 1), cell_row),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((c_cells, n_servers), jnp.float32),
+        jax.ShapeDtypeStruct((c_cells, 1), jnp.float32),
+        jax.ShapeDtypeStruct((c_cells, 1), jnp.float32),
+    ]
+    scratch = [pltpu.VMEM((1, n_servers), jnp.float32),
+               pltpu.VMEM((1, 1), jnp.float32),
+               pltpu.VMEM((1, 1), jnp.float32)]
+    if need_hist:
+        out_specs.append(
+            pl.BlockSpec((1, n_hi, LANE), lambda ic, it, *_: (ic, 0, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((c_cells, n_hi, LANE), jnp.float32))
+        scratch.append(pltpu.VMEM((n_hi, LANE), jnp.float32))
+
+    operands = [free, ssum.reshape(c_cells, 1), comp.reshape(c_cells, 1)]
+    if need_hist:
+        operands.append(hist.reshape(c_cells, n_hi, LANE))
+    operands += [cum, warm.reshape(1, t_total), servers, services]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(c_cells, n_tb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch)
+    out = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                         interpret=interpret)(
+        seed_idx, k_count, policy, model, rates, ovh, mix, *operands)
+    free_o, ssum_o, comp_o = out[0], out[1][:, 0], out[2][:, 0]
+    hist_o = out[3].reshape(c_cells, n_hi * LANE) if need_hist else hist
+    return free_o, ssum_o, comp_o, hist_o

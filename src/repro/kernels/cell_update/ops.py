@@ -1,0 +1,118 @@
+"""Public cell-update ops: kernel-mode resolution, validated kernel
+dispatch, and the FLOPs/bytes cost model the roofline benchmark reads.
+
+Kernel MODES (the ``kernel=`` knob of ``repro.core.queueing.run`` and
+the benchmarks' ``--kernel`` flag):
+
+  ``"off"``        the ``lax.scan`` reference body (``ref``) — the
+                   default everywhere off-TPU.
+  ``"on"``         the compiled Pallas kernel (TPU).
+  ``"interpret"``  the Pallas kernel through the interpreter — same
+                   jnp ops, runs anywhere; bit-exact vs both other
+                   modes, so CPU/CI can test the kernel path.
+  ``"auto"``       resolves to ``"on"`` on TPU, ``"off"`` elsewhere.
+
+Requesting ``"on"`` off-TPU degrades to ``"interpret"`` (there is no
+TPU to compile for), so ``kernel="on"`` is always safe to pass.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cell_update.kernel import cell_update_tc
+from repro.kernels.cell_update.ref import cell_update_ref
+from repro.kernels.hist_sketch.kernel import LANE
+
+KERNEL_MODES = ("auto", "on", "off", "interpret")
+
+_ON_TPU = None
+
+
+def _on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.devices()[0].platform == "tpu"
+    return _ON_TPU
+
+
+def resolve_kernel_mode(kernel: str | bool | None = "auto") -> str:
+    """Normalize a ``kernel=`` knob to a concrete mode: ``"on"``,
+    ``"off"`` or ``"interpret"`` (never ``"auto"``). Accepts the string
+    modes plus ``None``/``False`` (off) and ``True`` (on)."""
+    if kernel is None or kernel is False:
+        return "off"
+    if kernel is True:
+        kernel = "on"
+    if kernel not in KERNEL_MODES:
+        raise ValueError(
+            f"kernel must be one of {KERNEL_MODES}, got {kernel!r}")
+    if kernel == "auto":
+        return "on" if _on_tpu() else "off"
+    if kernel == "on" and not _on_tpu():
+        return "interpret"
+    return kernel
+
+
+def cell_update(free, ssum, comp, hist, cum, warm, servers, services,
+                seed_idx, rates, k_mask, ovh, policy_code, model_code,
+                mix, *, n_servers: int, n_bins: int, block: int,
+                interpret: bool = False):
+    """Kernel-path twin of ``ref.cell_update_ref`` (same signature, same
+    bits): validates the layout, derives the scalar-prefetch operands
+    from the plan parameters, and calls the Pallas kernel.
+
+    ``k_mask`` rows are prefix masks by plan construction
+    (``queueing._plan_cell_params``), so they compress losslessly to a
+    per-cell copy COUNT — an int the kernel prefetches and re-expands
+    with an iota compare (boolean, no rounding). A sketch whose
+    ``n_bins`` is not a multiple of the 128 lane width falls back to
+    the reference body (same bits, no kernel).
+    """
+    t_total = cum.shape[1]
+    need_hist = hist.size > 0
+    if need_hist and n_bins % LANE != 0:
+        return cell_update_ref(
+            free, ssum, comp, hist, cum, warm, servers, services,
+            seed_idx, rates, k_mask, ovh, policy_code, model_code, mix,
+            n_bins=n_bins, block=block)
+    if t_total % block != 0:
+        raise ValueError(
+            f"kernel mode needs the chunk padded to the block multiple "
+            f"(T={t_total}, block={block}); _chunk_layout pads when the "
+            f"kernel is on")
+    k_count = k_mask.astype(jax.numpy.int32).sum(axis=1)
+    return cell_update_tc(
+        free, ssum, comp, hist, cum, warm, servers, services,
+        seed_idx, k_count, policy_code, model_code, rates, ovh, mix,
+        n_servers=n_servers, n_bins=n_bins, block_t=block,
+        interpret=interpret)
+
+
+def cell_update_costs(*, n_cells: int, n_servers: int, k_max: int,
+                      n_arrivals: int, n_bins: int, n_seeds: int,
+                      n_svc: int | None = None, chunk: int | None = None,
+                      need_hist: bool = True) -> dict[str, float]:
+    """Analytic FLOPs / HBM-byte model of the fused kernel over a whole
+    stream, for the roofline benchmark.
+
+    Per arrival per cell the step body costs ~``k_max * (3 * n_servers
+    + 12) + 10`` flops (one-hot gather + scatter dominate at
+    ``O(k * N)``; the selects/compares of the policy branches are the
+    rest), plus ``2 * n_bins`` MAC-flops per histogrammed arrival for
+    the indicator matmuls. HBM bytes count one read+write of the
+    per-cell carry per chunk plus one pass over the seed-level sampled
+    inputs — the kernel's whole point is that the carry term is per
+    CHUNK, not per arrival.
+    """
+    n_svc = k_max if n_svc is None else n_svc
+    chunk = n_arrivals if chunk is None else min(chunk, n_arrivals)
+    n_chunks = -(-n_arrivals // chunk)
+    step_flops = k_max * (3 * n_servers + 12) + 10
+    hist_flops = 2 * n_bins if need_hist else 0
+    flops = float(n_cells) * n_arrivals * (step_flops + hist_flops)
+    carry_floats = n_servers + 2 + (n_bins if need_hist else 0)
+    carry_bytes = 2 * n_cells * carry_floats * 4          # r+w per chunk
+    input_bytes = n_seeds * chunk * (1 + k_max + n_svc) * 4
+    hbm_bytes = float(n_chunks) * (carry_bytes + input_bytes)
+    return {"flops": flops, "hbm_bytes": hbm_bytes,
+            "intensity": flops / hbm_bytes}

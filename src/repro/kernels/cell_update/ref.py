@@ -1,0 +1,180 @@
+"""Reference implementation of the fused cell update.
+
+``step_cell`` is THE single-arrival physics of the replication DES —
+free-time gather, policy/model selects, occupancy scatter, response
+min — shared by every execution path (``queueing.simulate*``, the
+sweep engine's scan body below, and the Pallas kernel, which mirrors
+it op-for-op). ``cell_update_ref`` is the ``lax.scan`` chunk body the
+kernel must match BIT FOR BIT; it is also the dispatch fallback
+(``use_kernel="off"``), so CPU/CI runs and TPU kernel runs are anchored
+to the same bits.
+
+Bit-exactness ground rules shared with ``kernel.py``:
+
+  * Every floating-point op sequence here is elementwise or a
+    min/max reduction over the tiny copy axis — no order-sensitive
+    float reductions — so the kernel can re-tile shapes freely without
+    changing bits.
+  * The Kahan update is GATED on the warmup weight via selects: a
+    zero-weight step leaves (ssum, comp) bitwise untouched (not just
+    algebraically — the ungated update would fold the compensation
+    term into the sum). That makes the summaries invariant to trailing
+    zero-weight padding, which the kernel path relies on (it always
+    pads chunks to a block multiple) and which keeps padded and
+    unpadded layouts bit-identical.
+  * ``optimization_barrier`` hides the compensated sum from XLA's
+    algebraic simplifier exactly as in the pre-kernel engine (see the
+    inline comment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scenario import Policy, ServiceModel
+from repro.kernels.hist_sketch import ops as hist_ops
+
+Array = jax.Array
+
+
+def step_cell(free: Array, t: Array, srv: Array, svc: Array,
+              svc_shared: Array, mask: Array, overhead: Array,
+              policy: Array, model: Array, mix: Array) -> tuple[Array, Array]:
+    """One arrival at one (seed, load, variant) grid cell. free (N,), t /
+    svc_shared / overhead / policy / model / mix scalars, srv/svc/mask
+    (k_max,) -> (new free, response).
+
+    ``policy`` / ``model`` are the cell's ``scenario.Policy`` /
+    ``scenario.ServiceModel`` codes; every variant's update is computed
+    and the codes select one (mixed grids share this single trace). The
+    ``Policy.REPLICATE_ALL`` + ``ServiceModel.IID`` path is the paper's
+    model, op-for-op identical to the pre-scenario engine (the bit-
+    identity anchor of ``Scenario.paper_default``).
+    """
+    cur = free[srv]
+    # SERVER_DEPENDENT (Shah et al.): blend the shared request component
+    # into every copy. mix=0 (and the IID select arm) is bit-exact svc.
+    svc = jnp.where(model == int(ServiceModel.SERVER_DEPENDENT),
+                    mix * svc_shared + (1.0 - mix) * svc, svc)
+    start = jnp.maximum(cur, t)
+    finish = start + svc
+    t_win = jnp.min(jnp.where(mask, finish, jnp.inf))
+    # REPLICATE_TO_IDLE dispatches the primary always, extras only to
+    # servers idle at the arrival instant.
+    dispatch = mask & ((jnp.arange(srv.shape[0]) == 0) | (cur <= t))
+    # Per-policy server-occupancy updates (masked copies rewrite their own
+    # old value — a no-op; srv entries are distinct by construction):
+    #   REPLICATE_ALL      every copy runs to completion.
+    #   CANCEL_ON_COMPLETE losers vacate at the winner's finish: a loser
+    #                      in service frees at t_win, a queued loser
+    #                      (cur >= t_win) never starts — max(cur, t_win)
+    #                      covers both (and equals finish for the winner).
+    #   REPLICATE_TO_IDLE  only dispatched copies occupy their server.
+    val_all = jnp.where(mask, finish, cur)
+    val_cancel = jnp.where(mask, jnp.maximum(cur, t_win), cur)
+    val_idle = jnp.where(dispatch, finish, cur)
+    new_val = jnp.where(
+        policy == int(Policy.CANCEL_ON_COMPLETE), val_cancel,
+        jnp.where(policy == int(Policy.REPLICATE_TO_IDLE), val_idle,
+                  val_all))
+    free = free.at[srv].set(new_val)
+    resp_win = t_win - t + overhead
+    resp_idle = jnp.min(jnp.where(dispatch, finish, jnp.inf)) - t + overhead
+    resp = jnp.where(policy == int(Policy.REPLICATE_TO_IDLE), resp_idle,
+                     resp_win)
+    return free, resp
+
+
+def kahan_fold(ssum: Array, comp: Array, resp: Array,
+               w: Array) -> tuple[Array, Array]:
+    """One gated Kahan step, shared verbatim by the scan body and the
+    Pallas kernel (same ops => same bits in both).
+
+    Kahan-compensated sum: sequential f32 accumulation over ~1e5+
+    terms would otherwise cost ~1e-4 relative error on the mean,
+    which is the signal threshold bisection keys on. Three guards
+    keep the update's rounding EXACTLY the same in every compilation
+    (the sharded-vs-unsharded and kernel-vs-scan bit-identity
+    contracts):
+
+      * the 0/1 warmup weight gates the WHOLE update via selects (a
+        ``resp * w - comp`` multiply-subtract invites FMA
+        contraction, and an ungated ``y = 0 - comp`` step would fold
+        the compensation into the sum — making the bits depend on
+        how much zero-weight padding trails the chunk);
+      * an ``optimization_barrier`` hides ``tot`` from XLA's
+        algebraic simplifier, which would otherwise rewrite
+        ``(tot - ssum) - y`` — compensation terms it sees as
+        algebraically zero — depending on the surrounding fusion
+        context.
+    """
+    y = resp - comp
+    tot = ssum + y
+    tot_b, y_b = jax.lax.optimization_barrier((tot, y))
+    comp_new = (tot_b - ssum) - y_b
+    live = w > 0
+    return jnp.where(live, tot_b, ssum), jnp.where(live, comp_new, comp)
+
+
+def cell_update_ref(free: Array, ssum: Array, comp: Array, hist: Array,
+                    cum: Array, warm: Array, servers: Array,
+                    services: Array, seed_idx: Array, rates: Array,
+                    k_mask: Array, ovh: Array, policy_code: Array,
+                    model_code: Array, mix: Array, *,
+                    n_servers: int | None = None, n_bins: int,
+                    block: int) -> tuple[Array, Array, Array, Array]:
+    """Scan-body reference for one chunk on the flat cell axis.
+
+    ``cum`` (S,T) are cumulative arrival offsets from the chunk start
+    (already masked for padding), ``warm`` (T,) the 0/1 post-warmup
+    weights, ``servers`` (S,T,k_max) / ``services`` (S,T,n_svc) the
+    sampled inputs (padding steps zeroed); the remaining args are the
+    per-cell carry and plan parameters of
+    ``queueing._sweep_chunk_cells``, which documents them. Returns the
+    updated carry with ``free`` NOT yet rebased (the caller rebases).
+    ``n_servers`` is accepted (dispatch-signature parity with
+    ``ops.cell_update``) but implied by ``free``.
+    """
+    del n_servers
+    k_max = k_mask.shape[1]
+    has_shared = services.shape[-1] > k_max
+    need_hist = hist.size > 0
+    T = cum.shape[1]
+    if need_hist:
+        assert T % block == 0, (T, block)
+
+    cell_c = jax.vmap(step_cell)        # one lane per cell of the flat axis
+
+    def step(carry, inp):
+        free, ssum, comp = carry
+        c, w, srv, svc = inp                       # (S,), (), (S,k), (S,n_svc)
+        t = c[seed_idx] / rates                       # (C,)
+        svc_c = svc[seed_idx]                         # (C, n_svc)
+        shared_c = svc_c[:, k_max] if has_shared else svc_c[:, 0]
+        free, resp = cell_c(free, t, srv[seed_idx], svc_c[:, :k_max],
+                            shared_c, k_mask, ovh, policy_code, model_code,
+                            mix)
+        ssum, comp = kahan_fold(ssum, comp, resp, w)
+        return (free, ssum, comp), (resp if need_hist else None)
+
+    xs = (cum.T, warm, jnp.moveaxis(servers, 1, 0),
+          jnp.moveaxis(services, 1, 0))
+    if need_hist:
+        xs = jax.tree.map(
+            lambda x: x.reshape((T // block, block) + x.shape[1:]), xs)
+
+        def outer(carry, xs_blk):
+            free, ssum, comp, hist = carry
+            (free, ssum, comp), resp = jax.lax.scan(
+                step, (free, ssum, comp), xs_blk)
+            idx = hist_ops.bin_indices(resp, xs_blk[1][:, None],
+                                       n_bins=n_bins)
+            hist = hist + hist_ops.hist_accum(idx, n_bins=n_bins,
+                                              block_t=block)
+            return (free, ssum, comp, hist), None
+
+        (free, ssum, comp, hist), _ = jax.lax.scan(
+            outer, (free, ssum, comp, hist), xs)
+    else:
+        (free, ssum, comp), _ = jax.lax.scan(step, (free, ssum, comp), xs)
+    return free, ssum, comp, hist

@@ -12,8 +12,10 @@ The subprocess test forces 8 host devices (the idiom of
 main test process) and checks cell counts both divisible and NOT
 divisible by the device count (exercising the pad/mask path), the
 dist-stacked driver, MIXED-policy scenario grids (policy/model codes
-sharded as per-cell coordinates), and threshold bisection (bare dist
-and Scenario forms).
+sharded as per-cell coordinates), threshold bisection (bare dist
+and Scenario forms), and the fused cell-update kernel (its per-cell
+grid maps 1:1 onto the sharded axis, so kernel mode must preserve the
+sharded==unsharded bit-identity too).
 """
 import subprocess
 import sys
@@ -95,6 +97,20 @@ class TestShardedSingleDeviceMesh:
         _assert_bit_identical(un, sh)
         assert un["mean"].shape == (2, 2, 5)
 
+    def test_kernel_mode_bit_identical(self):
+        # the fused cell-update kernel runs per shard on its local cells
+        # (interpret mode on CPU): sharded kernel == unsharded kernel ==
+        # unsharded scan, bit for bit
+        key = jax.random.PRNGKey(5)
+        scn = Scenario.paper_default(dists.exponential(), ks=(1, 2))
+        kw = dict(n_seeds=2, chunk_size=1_700)
+        un_scan = queueing.run(key, scn, RHOS, CFG, kernel="off", **kw)
+        un_kern = queueing.run(key, scn, RHOS, CFG, kernel="on", **kw)
+        sh_kern = queueing.run(key, scn, RHOS, CFG, kernel="on",
+                               mesh=make_sweep_mesh(1), **kw)
+        _assert_bit_identical(un_scan, un_kern)
+        _assert_bit_identical(un_kern, sh_kern)
+
     def test_rejects_wrong_mesh_axes(self):
         mesh = jax.make_mesh((1,), ("data",))
         with pytest.raises(ValueError, match="cells"):
@@ -169,6 +185,19 @@ kw = dict(n_seeds=1, chunk_size=1_700)
 check("mixed-policy",
       queueing.run(key, scns, rhos3, cfg, **kw),
       queueing.run(key, scns, rhos3, cfg, mesh=mesh, **kw))
+
+# fused cell-update kernel (interpret mode off-TPU), sharded at 8
+# devices: the kernel's per-cell grid maps 1:1 onto the sharded axis,
+# so sharded-kernel == unsharded-kernel == unsharded-scan bits
+scn = queueing.Scenario.paper_default(dists.exponential(), ks=(1, 2))
+un_scan = queueing.run(key, scn, rhos, cfg, kernel="off",
+                       n_seeds=2, chunk_size=2_000)
+un_kern = queueing.run(key, scn, rhos, cfg, kernel="interpret",
+                       n_seeds=2, chunk_size=2_000)
+sh_kern = queueing.run(key, scn, rhos, cfg, kernel="interpret",
+                       mesh=mesh, n_seeds=2, chunk_size=2_000)
+check("kernel unsharded-scan vs unsharded-kernel", un_scan, un_kern)
+check("kernel unsharded-kernel vs sharded-kernel", un_kern, sh_kern)
 
 # threshold bisection: every probe batch rides the sharded cell axis —
 # under a Scenario too (cancellation: replication helps everywhere, so
