@@ -70,13 +70,14 @@ def main() -> None:
 
     from benchmarks import (fig1_queueing, fig2_threshold, fig3_random,
                             fig4_overhead, fig5_diskdb, fig12_memcached,
-                            fig14_network, fig15_dns, fig_policy_space,
-                            roofline, serving_hedge, sweep_engine, tab_tcp)
+                            fig14_network, fig15_dns, fig_fault_masking,
+                            fig_policy_space, roofline, serving_hedge,
+                            sweep_engine, tab_tcp)
     from benchmarks.common import row_provenance
     modules = [sweep_engine, fig_policy_space, fig1_queueing,
                fig2_threshold, fig3_random, fig4_overhead, fig5_diskdb,
                fig12_memcached, fig14_network, fig15_dns, tab_tcp,
-               serving_hedge, roofline]
+               fig_fault_masking, serving_hedge, roofline]
 
     provenance = {"backend": jax.default_backend(),
                   "device_count": jax.device_count()}

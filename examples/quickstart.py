@@ -8,6 +8,12 @@
    replicate-all model has already flipped to harmful.
 3. Wrap a flaky "service" in the hedged-call combinator and watch the tail
    collapse.
+4. Fault masking — the paper's "even under exceptional conditions":
+   stragglers and blackhole failures as Scenario coordinates
+   (``Degradation``), masked by hedging in the engine; then a live
+   replica CRASHED mid-trace, masked by the hedged scheduler
+   (``serving.faults.FaultInjector`` — the full matrix is
+   ``benchmarks/fig_fault_masking.py``).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -64,3 +70,54 @@ for _ in range(30):
 print(f"\nhedged_call: p90 {np.percentile(lat1, 90) * 1e3:.0f} ms -> "
       f"{np.percentile(lat2, 90) * 1e3:.0f} ms "
       f"(mean {np.mean(lat1) * 1e3:.0f} -> {np.mean(lat2) * 1e3:.0f} ms)")
+
+# --- 4a. fault masking in the engine ------------------------------------
+# Degradation makes faults sweep coordinates: with probability p_slow a
+# copy's service is inflated 8x (straggler), with p_fail it never
+# returns (blackhole). Healthy cells keep their exact bits — fault draws
+# come from a dedicated CRN stream.
+from repro.core.scenario import Degradation, Policy
+from repro.serving.engine import SimulatedEngine
+from repro.serving.faults import FaultInjector
+from repro.serving.scheduler import HedgedScheduler
+from repro.core.hedging import HedgePolicy
+
+deg = Degradation(p_slow=0.05, slow_factor=8.0, p_fail=0.02)
+d = dists.exponential()
+scns = [
+    Scenario(dists=d, ks=(1,), degradation=deg),                # bare
+    Scenario(dists=d, policy=Policy.TIMEOUT_RETRY, delay=1.0,
+             ks=(2,), degradation=deg),                         # retry
+    Scenario(dists=d, policy=Policy.HEDGE_AFTER_DELAY, delay=1.0,
+             ks=(2,), degradation=deg),                         # hedge
+]
+out = queueing.run(key, scns, jnp.asarray([0.2]), cfg, n_seeds=2,
+                   percentiles=(99.0,))
+p99 = np.asarray(out["p99"]).mean(axis=0)[0]
+frac = np.asarray(out["completed"]).mean(axis=0)[0] / float(
+    np.asarray(out["count"]))
+print("\nfault masking (5% 8x-stragglers + 2% blackholes, load 0.2):")
+for name, j in (("bare k=1", 0), ("timeout-retry", 1),
+                ("hedge-after-delay", 2)):
+    print(f"  {name:18s} p99 {p99[j]:6.2f}   completed {frac[j]:.4f}")
+
+# --- 4b. fault masking in the serving stack -----------------------------
+# crash one of three replicas mid-trace; the hedged duplicate on a
+# healthy replica masks the blackhole at ~zero latency cost.
+inj = FaultInjector()
+engines = [inj.wrap(SimulatedEngine(lambda: 0.005, name=f"s{i}"))
+           for i in range(3)]
+sched = HedgedScheduler(engines,
+                        policy=HedgePolicy(max_k=2, threshold=1.1),
+                        tied_cancel=True, seed=0)
+try:
+    lats = []
+    for i in range(20):
+        if i == 10:
+            inj.crash("s1")  # blackhole: never answers, never removed
+        lats.append(sched.submit(np.zeros(2, np.int32),
+                                 timeout=5.0).latency)
+finally:
+    sched.shutdown()
+print(f"replica s1 crashed mid-trace: 20/20 completed, "
+      f"max latency {max(lats) * 1e3:.1f} ms (hedging masks the crash)")

@@ -9,6 +9,9 @@
 * The §3.1 TCP-handshake model: per-packet loss p, initial timeouts
   (3 s SYN, 3 s SYN-ACK, 3·RTT ACK), exponential backoff; duplication moves
   p -> p_pair (the measured correlated pair-loss probability).
+* Light-load means for the timed policies (``hedge_mean_light`` /
+  ``retry_mean_light``): the closed forms the engine's TIMEOUT_RETRY /
+  HEDGE_AFTER_DELAY codes are pinned against at low rho.
 """
 from __future__ import annotations
 
@@ -41,6 +44,56 @@ def mm1_replicated_mean(rho, k: int = 2) -> Array:
     rho = jnp.asarray(rho)
     rate = 1.0 - k * rho  # each copy's response ~ Exp(1 - k rho)
     return jnp.where(rate > 0.0, 1.0 / (k * rate), jnp.inf)
+
+
+def hedge_mean_light(d) -> Array:
+    """Light-load mean response of ``HEDGE_AFTER_DELAY`` with a copy
+    budget of 2, unit-mean exponential service and hedge delay ``d``
+    (no queueing, no faults).
+
+    The primary starts service immediately (S1 ~ Exp(1)); the hedge
+    fires at ``d`` only if the primary has not finished. If S1 <= d the
+    response is S1; otherwise, by memorylessness, the residual primary
+    and the fresh hedge race as min of two Exp(1) ~ Exp(2) from ``d``:
+
+      E[T] = E[S1; S1<=d] + P(S1>d) (d + 1/2)
+           = (1 - e^{-d} - d e^{-d}) + e^{-d} (d + 1/2)
+           = 1 - e^{-d}/2.
+
+    Monotone increasing in ``d``: 1/2 at d=0 (= REPLICATE_ALL's
+    min-of-two) up to 1 (no hedging) as d -> inf — the monotonicity the
+    engine's hedge-delay sweep is pinned against.
+    """
+    d = jnp.asarray(d)
+    return 1.0 - jnp.exp(-d) / 2.0
+
+
+def retry_mean_light(d, f=0.0) -> Array:
+    """Light-load mean response of ``TIMEOUT_RETRY`` with an attempt
+    budget of 2, unit-mean exponential service, deadline ``d`` and
+    blackhole probability ``f`` (each dispatched copy is lost in
+    transit with prob ``f``, independently; the LAST in-budget attempt
+    is escalated out-of-band and cannot be lost — the engine's
+    ``alive_eff`` rule).
+
+    The first attempt dispatches at 0, the retry at ``d`` (backoff
+    offsets [0, 1]) only if nothing has completed. Conditioning on the
+    first attempt's fate:
+
+      alive (1-f):  identical to the hedge race -> 1 - e^{-d}/2
+                    (see ``hedge_mean_light``);
+      lost (f):     nothing can complete before the retry, which is
+                    exempt -> T = d + S2, mean d + 1.
+
+      E[T] = (1-f) (1 - e^{-d}/2) + f (1 + d).
+
+    Setting f=0 recovers the hedge mean — at light load the two
+    policies differ only under faults, which is exactly the
+    fault-masking gap fig_fault_masking measures (under load the retry
+    baseline also pays the duplicate-work tax).
+    """
+    d, f = jnp.asarray(d), jnp.asarray(f)
+    return (1.0 - f) * (1.0 - jnp.exp(-d) / 2.0) + f * (1.0 + d)
 
 
 def mm1_cancel_bounds(rho, k: int = 2) -> tuple[Array, Array]:

@@ -239,17 +239,32 @@ def _arrival_part(key: Array, n: int, m: int, k_max: int):
 # collide with a copy index works.
 _SHARED_SVC_FOLD = 0x5CA1AB1E
 
+# DEDICATED fold_in index of the degradation model's per-copy uniforms
+# (copy j draws from fold_in(fold_in(k_svc, _DEGRADE_FOLD), j)). The
+# PR-7 CRN contract: failure/straggler draws live on their OWN branch
+# of the key tree — the service columns, the shared component and the
+# arrival stream are untouched — so a healthy grid samples exactly the
+# pre-degradation randomness (healthy cells keep today's bits), and
+# degraded vs healthy cells stay CRN-paired draw-for-draw.
+_DEGRADE_FOLD = 0xFA11ED
+
 
 def _service_part(key: Array, dist: ServiceDist, cfg: SimConfig,
-                  n_copies: int, with_shared: bool = False):
+                  n_copies: int, with_shared: bool = False,
+                  with_degr: bool = False):
     """Per-copy fold_in keys so copy j's service times are identical for
     every k_max (CRN: k=1 and k=2 share the first copy's service draw).
     ``with_shared`` appends the SERVER_DEPENDENT shared request component
-    as one extra LAST column, drawn from the fixed
+    as one extra column, drawn from the fixed
     ``fold_in(k_svc, _SHARED_SVC_FOLD)``: the copy columns are
     bit-identical either way, and the shared column is identical for
     every ``n_copies`` — so it is CRN-shared across k, across grid
-    layouts, and across the sweep/simulate entry points."""
+    layouts, and across the sweep/simulate entry points. ``with_degr``
+    appends ``n_copies`` more uniform(0,1) columns (the degradation
+    draws, one per copy) from the dedicated ``_DEGRADE_FOLD`` branch;
+    column layout is ``[copies][shared?][degradation?]`` and the
+    consumers receive the shared flag statically (the count alone is
+    ambiguous at ``n_copies == 1``)."""
     m = cfg.n_arrivals
     _, _, _, k_svc = jax.random.split(key, 4)
     cols = [dist.sample(jax.random.fold_in(k_svc, j), (m,))
@@ -257,17 +272,22 @@ def _service_part(key: Array, dist: ServiceDist, cfg: SimConfig,
     if with_shared:
         cols.append(dist.sample(
             jax.random.fold_in(k_svc, _SHARED_SVC_FOLD), (m,)))
+    if with_degr:
+        k_deg = jax.random.fold_in(k_svc, _DEGRADE_FOLD)
+        cols.extend(jax.random.uniform(jax.random.fold_in(k_deg, j), (m,))
+                    for j in range(n_copies))
     return jnp.stack(cols, axis=1)
 
 
 def _sample_inputs(key: Array, dist: ServiceDist, cfg: SimConfig, k_max: int,
-                   with_shared: bool = False):
+                   with_shared: bool = False, with_degr: bool = False):
     """Draw all randomness up front. Column 0 of servers/services is shared
-    by every k (CRN); services carry the extra shared-component LAST
-    column when ``with_shared`` (SERVER_DEPENDENT scenarios)."""
+    by every k (CRN); services carry the extra shared-component column
+    when ``with_shared`` (SERVER_DEPENDENT scenarios) and the per-copy
+    degradation uniforms when ``with_degr`` (degraded scenarios)."""
     unit_gaps, servers = _arrival_part(key, cfg.n_servers, cfg.n_arrivals,
                                        k_max)
-    services = _service_part(key, dist, cfg, k_max, with_shared)
+    services = _service_part(key, dist, cfg, k_max, with_shared, with_degr)
     return unit_gaps, servers, services
 
 
@@ -291,12 +311,22 @@ def _scan_sim(arrivals: Array, servers: Array, services: Array, n_servers: int,
     pol = jnp.asarray(int(variant.policy), jnp.int32)
     mdl = jnp.asarray(int(variant.service_model), jnp.int32)
     mix = jnp.asarray(variant.mix, jnp.float32)
+    psl = jnp.asarray(variant.p_slow, jnp.float32)
+    sfa = jnp.asarray(variant.slow_factor, jnp.float32)
+    pfl = jnp.asarray(variant.p_fail, jnp.float32)
+    dly = jnp.asarray(variant.delay, jnp.float32)
+    n_base = k + (1 if variant.needs_shared_draw else 0)
+    has_degr = variant.needs_degradation_draw
+
+    has_timed = variant.policy in scenario_mod.TIMED_POLICIES
 
     def step(free: Array, inp):
         t, srv, svc = inp
-        shared = svc[k] if svc.shape[0] > k else svc[0]  # dummy when IID
-        return _step_cell(free, t, srv, svc[:k], shared, mask, ovh, pol,
-                          mdl, mix)
+        shared = svc[k] if variant.needs_shared_draw else svc[0]
+        degr = svc[n_base:n_base + k] if has_degr else jnp.zeros((k,))
+        return _step_cell(free, t, srv, svc[:k], shared, degr, mask, ovh,
+                          pol, mdl, mix, psl, sfa, pfl, dly,
+                          has_timed=has_timed)
 
     free0 = jnp.zeros((n_servers,))
     _, resp = jax.lax.scan(step, free0, (arrivals, servers, services))
@@ -318,7 +348,8 @@ def simulate(key: Array, dist: ServiceDist, rho: Array, cfg: SimConfig,
         warmup_frac=cfg.warmup_frac)
     variant = scn.variant_for(k)
     unit_gaps, servers, services = _sample_inputs(
-        key, dist, cfg, k, with_shared=variant.needs_shared_draw)
+        key, dist, cfg, k, with_shared=variant.needs_shared_draw,
+        with_degr=variant.needs_degradation_draw)
     rate = cfg.n_servers * rho
     arrivals = jnp.cumsum(unit_gaps / rate)
     return _scan_sim(arrivals, servers[:, :k], services,
@@ -335,7 +366,8 @@ def simulate_grid(key: Array, dist: ServiceDist, rhos: Array, cfg: SimConfig,
         warmup_frac=cfg.warmup_frac)
     variant = scn.variant_for(k)
     unit_gaps, servers, services = _sample_inputs(
-        key, dist, cfg, k, with_shared=variant.needs_shared_draw)
+        key, dist, cfg, k, with_shared=variant.needs_shared_draw,
+        with_degr=variant.needs_degradation_draw)
     rates = cfg.n_servers * rhos  # (B,)
     arrivals = jnp.cumsum(unit_gaps)[None, :] / rates[:, None]  # (B, M)
     sim = jax.vmap(
@@ -378,65 +410,78 @@ def _sample_sweep_arrivals(key: Array, n_servers: int, n_arrivals: int,
 
 def _sample_sweep_services(key: Array, dist: ServiceDist, cfg: SimConfig,
                            k_max: int, n_seeds: int,
-                           with_shared: bool = False):
-    """(S,M,n_svc) service draws (``n_svc = k_max + with_shared``).
+                           with_shared: bool = False,
+                           with_degr: bool = False):
+    """(S,M,n_svc) service draws (``n_svc = k_max + with_shared +
+    k_max * with_degr``, layout ``[copies][shared?][degradation?]``).
     Deliberately NOT jitted: eager sampling reuses jax's per-op caches
     across distributions, so sweeping 15 families costs 15 x ~20ms
     instead of 15 x ~1s of per-family jit compiles (the PRNG bits are
     identical either way)."""
     keys = jax.random.split(key, n_seeds)
-    return jnp.stack([_service_part(keys[s], dist, cfg, k_max, with_shared)
+    return jnp.stack([_service_part(keys[s], dist, cfg, k_max, with_shared,
+                                    with_degr)
                       for s in range(n_seeds)], axis=0)
 
 
 def _sample_sweep_inputs(key: Array, dist: ServiceDist, cfg: SimConfig,
                          k_max: int, n_seeds: int,
-                         with_shared: bool = False):
+                         with_shared: bool = False,
+                         with_degr: bool = False):
     """Per-seed randomness for the engine: (S,M) gaps, (S,M,k_max) servers,
-    (S,M,k_max + with_shared) services (the shared-component LAST column
-    serves SERVER_DEPENDENT grids). Bit-identical to ``n_seeds``
-    sequential ``_sample_inputs`` calls on
-    ``jax.random.split(key, n_seeds)``."""
+    (S,M,n_svc) services (shared component column for SERVER_DEPENDENT
+    grids, per-copy degradation uniforms for degraded grids — see
+    ``_service_part``). Bit-identical to ``n_seeds`` sequential
+    ``_sample_inputs`` calls on ``jax.random.split(key, n_seeds)``."""
     unit_gaps, servers = _sample_sweep_arrivals(
         key, cfg.n_servers, cfg.n_arrivals, k_max, n_seeds)
     services = _sample_sweep_services(key, dist, cfg, k_max, n_seeds,
-                                      with_shared)
+                                      with_shared, with_degr)
     return unit_gaps, servers, services
 
 
 @partial(jax.jit, static_argnames=("n_servers", "n_bins", "block",
-                                   "use_kernel"))
-def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
+                                   "use_kernel", "has_shared",
+                                   "has_timed"))
+def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, cnt: Array,
+                       hist: Array,
                        unit_gaps: Array, servers: Array, services: Array,
                        start: Array, n_valid: Array, warmup_start: Array,
                        seed_idx: Array, rates: Array, k_mask: Array,
                        ovh: Array, policy_code: Array, model_code: Array,
-                       mix: Array, *, n_servers: int, n_bins: int,
-                       block: int, use_kernel: str = "off"):
+                       mix: Array, p_slow: Array, slow_factor: Array,
+                       p_fail: Array, delay: Array, *, n_servers: int,
+                       n_bins: int, block: int, use_kernel: str = "off",
+                       has_shared: bool = False, has_timed: bool = False):
     """Scenario- and distribution-agnostic fused core over ONE chunk of
     arrivals, on a flat cell axis (see ``repro.core.cellplan``).
 
     Per-cell carry threaded across chunks: ``free`` (C,N) server-free
     times RELATIVE to the chunk-start arrival time, ``ssum``/``comp``
-    (C,) Kahan mean state, ``hist`` (C, n_bins) sketch counts (shape
-    (0, 0) skips the sketch). Sampled inputs stay at SEED granularity —
-    ``unit_gaps`` (S,T), ``servers`` (S,T,k_max), ``services``
-    (S,T,n_svc) where ``n_svc > k_max`` means the last column is the
-    SERVER_DEPENDENT shared request component — and ``seed_idx`` (C,)
-    maps each cell to its input row, so one sampled row is shared by
-    all (load, k) cells of a seed: the gather happens per scan step on
-    a (S,k_max) slice, and the (C,T,...) expansion is never
+    (C,) Kahan mean state, ``cnt`` (C,) completed post-warmup response
+    counts (== the static post-warmup count for cells that cannot lose
+    requests; less for degraded cells with blackholed copies), ``hist``
+    (C, n_bins) sketch counts (shape (0, 0) skips the sketch). Sampled
+    inputs stay at SEED granularity — ``unit_gaps`` (S,T), ``servers``
+    (S,T,k_max), ``services`` (S,T,n_svc) with column layout
+    ``[k_max copies][shared if has_shared][k_max degradation uniforms
+    if present]`` (``has_shared`` is static; the degradation columns
+    are detected from the remainder) — and ``seed_idx`` (C,) maps each
+    cell to its input row, so one sampled row is shared by all
+    (load, k) cells of a seed: the gather happens per scan step on a
+    (S,k_max) slice, and the (C,T,...) expansion is never
     materialized. The sharded driver runs this same body per shard with
     the inputs replicated and ``seed_idx`` restricted to the local
     cells (global seed indices, sharded over the mesh).
-    ``rates``/``ovh``/``mix`` (C,), ``k_mask`` (C,k_max) and the
-    ``policy_code``/``model_code`` (C,) scenario coordinates are
-    per-cell parameters gathered from the plan; the vmapped
-    ``_step_cell`` branches on the codes per lane, which is what lets a
-    MIXED grid (cells disagreeing on policy/model) run in this one
-    compiled body. Callers that pass SERVER_DEPENDENT codes must supply
-    the extra services column (the IID-only layout reuses column 0 as a
-    dummy shared component that the select discards).
+    ``rates``/``ovh``/``mix``/``p_slow``/``slow_factor``/``p_fail``/
+    ``delay`` (C,), ``k_mask`` (C,k_max) and the ``policy_code``/
+    ``model_code`` (C,) scenario coordinates are per-cell parameters
+    gathered from the plan; the vmapped ``_step_cell`` branches on the
+    codes per lane, which is what lets a MIXED grid (cells disagreeing
+    on policy/model/degradation) run in this one compiled body. Callers
+    that pass SERVER_DEPENDENT or degraded codes must supply the extra
+    services columns (healthy/IID layouts reuse column 0 / zeros as
+    dummies that the selects discard).
 
     ``start`` is the global index of the chunk's first step; ``n_valid``
     the real (non-padding) steps. Steps past ``n_valid`` are masked to
@@ -473,14 +518,17 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, hist: Array,
     body = (cell_update_ref if use_kernel == "off"
             else partial(cell_ops.cell_update,
                          interpret=(use_kernel == "interpret")))
-    free, ssum, comp, hist = body(
-        free, ssum, comp, hist, cum, warm, servers, services, seed_idx,
-        rates, k_mask, ovh, policy_code, model_code, mix,
-        n_servers=n_servers, n_bins=n_bins, block=block)
+    free, ssum, comp, cnt, hist = body(
+        free, ssum, comp, cnt, hist, cum, warm,
+        valid.astype(jnp.float32), servers, services, seed_idx,
+        rates, k_mask, ovh, policy_code, model_code, mix, p_slow,
+        slow_factor, p_fail, delay,
+        n_servers=n_servers, n_bins=n_bins, block=block,
+        has_shared=has_shared, has_timed=has_timed)
 
     # rebase to the chunk-end arrival time so floats stay O(chunk duration)
     free = free - (cum[:, -1][seed_idx] / rates)[:, None]
-    return free, ssum, comp, hist
+    return free, ssum, comp, cnt, hist
 
 
 # --- plan construction / finalization shared by both execution layers ----
@@ -489,9 +537,10 @@ def _plan_cell_params(plan: cellplan.CellPlan, rhos: Array, cfg: SimConfig,
                       variants):
     """Per-cell engine parameters gathered from the plan's coordinates:
     arrival rates (C,), copy masks (C,k_max), client overheads (C,),
-    service-model mixes (C,). ``variants`` may be a plain ``ks`` tuple
-    (paper default per k, overhead from ``cfg``) or per-variant
-    ``scenario.Variant``s."""
+    service-model mixes (C,), degradation probabilities / straggler
+    factors / blackhole probabilities / policy delays (C,) each.
+    ``variants`` may be a plain ``ks`` tuple (paper default per k,
+    overhead from ``cfg``) or per-variant ``scenario.Variant``s."""
     variants = tuple(
         v if isinstance(v, Variant)
         else Variant(k=int(v), overhead=cfg.client_overhead)
@@ -502,18 +551,24 @@ def _plan_cell_params(plan: cellplan.CellPlan, rhos: Array, cfg: SimConfig,
     ovh = jnp.asarray([_overhead_when_replicated(v.overhead, v.k)
                        for v in variants], jnp.float32)
     mix = jnp.asarray([v.mix for v in variants], jnp.float32)
+    p_slow = jnp.asarray([v.p_slow for v in variants], jnp.float32)
+    s_fac = jnp.asarray([v.slow_factor for v in variants], jnp.float32)
+    p_fail = jnp.asarray([v.p_fail for v in variants], jnp.float32)
+    delay = jnp.asarray([v.delay for v in variants], jnp.float32)
     return (rates[plan.load_idx], k_mask[plan.k_idx], ovh[plan.k_idx],
-            mix[plan.k_idx])
+            mix[plan.k_idx], p_slow[plan.k_idx], s_fac[plan.k_idx],
+            p_fail[plan.k_idx], delay[plan.k_idx])
 
 
 def _init_cell_state(plan: cellplan.CellPlan, cfg: SimConfig, n_bins: int,
                      need_hist: bool):
-    """Zeroed per-cell carry: free times, Kahan state, sketch counts."""
+    """Zeroed per-cell carry: free times, Kahan state, completed-response
+    counts, sketch counts."""
     free = jnp.zeros((plan.n_padded, cfg.n_servers))
-    ssum = comp = jnp.zeros((plan.n_padded,))
+    ssum = comp = cnt = jnp.zeros((plan.n_padded,))
     hist = (jnp.zeros((plan.n_padded, n_bins)) if need_hist
             else jnp.zeros((0, 0)))
-    return free, ssum, comp, hist
+    return free, ssum, comp, cnt, hist
 
 
 def _chunk_layout(cfg: SimConfig, chunk_size: int | None, need_hist: bool,
@@ -542,15 +597,22 @@ def _pad_chunk_inputs(unit_gaps: Array, servers: Array, services: Array,
     return unit_gaps, servers, services
 
 
-def _finalize_summary(plan: cellplan.CellPlan, ssum: Array, hist: Array,
-                      count: int,
+def _finalize_summary(plan: cellplan.CellPlan, ssum: Array, cnt: Array,
+                      hist: Array, count: int,
                       percentiles: tuple[float, ...]) -> dict[str, Array]:
     """Per-cell streaming state -> stacked (S,B,K) summaries. This is the
     single point where the sharded executor's device-local buffers are
     gathered (``unflatten`` slices pad cells away first, so they cannot
-    contribute to any summary)."""
+    contribute to any summary). ``count`` is the static post-warmup
+    OFFERED count; ``cnt`` the per-cell COMPLETED count (less when a
+    degraded cell blackholes every copy of a request). The mean divides
+    by ``cnt`` — bit-identical to the pre-degradation ``ssum / count``
+    for cells that cannot lose requests, since their float count equals
+    the int exactly (f32 is exact on integers below 2**24)."""
+    completed = cellplan.unflatten(plan, cnt)
     out: dict[str, Array] = {
-        "mean": cellplan.unflatten(plan, ssum) / count, "count": count}
+        "mean": cellplan.unflatten(plan, ssum) / completed,
+        "count": count, "completed": completed}
     if len(percentiles) > 0:
         quant = hist_ops.sketch_quantiles(
             cellplan.unflatten(plan, hist),
@@ -580,27 +642,32 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
     plan = cellplan.make_cell_plan(
         n_seeds_total, rhos.shape[0], len(variants),
         policies=policies, models=models)
-    rates_c, k_mask_c, ovh_c, mix_c = _plan_cell_params(plan, rhos, cfg,
-                                                        variants)
+    (rates_c, k_mask_c, ovh_c, mix_c, pslow_c, sfac_c, pfail_c,
+     delay_c) = _plan_cell_params(plan, rhos, cfg, variants)
+    has_shared = scenario_mod.any_server_dependent(variants)
+    has_timed = scenario_mod.any_timed(variants)
     warmup_start = int(m * warmup_frac)
     need_hist = len(percentiles) > 0
     t_chunk, n_chunks, block, pad = _chunk_layout(
         cfg, chunk_size, need_hist, kernel_on=use_kernel != "off")
-    free, ssum, comp, hist = _init_cell_state(plan, cfg, n_bins, need_hist)
+    free, ssum, comp, cnt, hist = _init_cell_state(plan, cfg, n_bins,
+                                                   need_hist)
 
     for c in range(n_chunks):
         unit_gaps, servers, services = _pad_chunk_inputs(
             *sampler(c, t_chunk), pad)
         start = c * t_chunk
-        free, ssum, comp, hist = _sweep_chunk_cells(
-            free, ssum, comp, hist, unit_gaps, servers, services,
+        free, ssum, comp, cnt, hist = _sweep_chunk_cells(
+            free, ssum, comp, cnt, hist, unit_gaps, servers, services,
             jnp.asarray(start), jnp.asarray(min(t_chunk, m - start)),
             jnp.asarray(warmup_start), plan.seed_idx, rates_c, k_mask_c,
-            ovh_c, plan.policy_code, plan.model_code, mix_c,
+            ovh_c, plan.policy_code, plan.model_code, mix_c, pslow_c,
+            sfac_c, pfail_c, delay_c,
             n_servers=cfg.n_servers, n_bins=n_bins, block=block,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, has_shared=has_shared,
+            has_timed=has_timed)
 
-    return _finalize_summary(plan, ssum, hist, m - warmup_start,
+    return _finalize_summary(plan, ssum, cnt, hist, m - warmup_start,
                              percentiles)
 
 
@@ -612,7 +679,7 @@ def _chunk_key(key: Array, chunk_idx: int, chunk_size: int | None) -> Array:
 
 def _sweep_sampler(key: Array, dist: ServiceDist, cfg: SimConfig,
                    k_max: int, n_seeds: int, chunk_size: int | None,
-                   with_shared: bool = False):
+                   with_shared: bool = False, with_degr: bool = False):
     """The per-chunk sampler closure behind ``run``/``sweep``. Shared —
     by this exact function, not a copy — with the sharded executor, so
     the two paths cannot drift apart on the CRN-critical sampling code
@@ -622,7 +689,8 @@ def _sweep_sampler(key: Array, dist: ServiceDist, cfg: SimConfig,
         ccfg = dataclasses.replace(cfg, n_arrivals=t)
         return _sample_sweep_inputs(_chunk_key(key, c, chunk_size), dist,
                                     ccfg, k_max, n_seeds,
-                                    with_shared=with_shared)
+                                    with_shared=with_shared,
+                                    with_degr=with_degr)
 
     return sampler
 
@@ -630,7 +698,8 @@ def _sweep_sampler(key: Array, dist: ServiceDist, cfg: SimConfig,
 def _sweep_dists_sampler(key: Array, dist_list, cfg: SimConfig,
                          k_max: int, n_seeds: int,
                          chunk_size: int | None,
-                         with_shared: bool = False):
+                         with_shared: bool = False,
+                         with_degr: bool = False):
     """The per-chunk sampler closure behind multi-distribution runs
     (shared with the sharded executor, like ``_sweep_sampler``). Every
     distribution sees the same key, hence the same arrival process and
@@ -644,7 +713,7 @@ def _sweep_dists_sampler(key: Array, dist_list, cfg: SimConfig,
             ck, cfg.n_servers, t, k_max, n_seeds)
         services = jnp.concatenate(
             [_sample_sweep_services(ck, dd, ccfg, k_max, n_seeds,
-                                    with_shared)
+                                    with_shared, with_degr)
              for dd in dist_list], axis=0)
         return (jnp.tile(gaps1, (d, 1)), jnp.tile(servers1, (d, 1, 1)),
                 services)
@@ -675,6 +744,11 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
                         entirely — e.g. threshold estimation needs means
                         only)
       ``count``         post-warmup arrivals per cell (scalar)
+      ``completed``     per-cell count of post-warmup requests that
+                        COMPLETED — equals ``count`` except in degraded
+                        cells where every copy of a request was
+                        blackholed (those requests are excluded from
+                        ``mean`` and the percentiles)
 
     ``chunk_size=None`` pre-samples the whole stream; an int streams
     arrivals in chunks of that many steps so peak memory is independent
@@ -702,13 +776,16 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
     rhos = jnp.asarray(rhos)
     k_max = max(v.k for v in variants)
     with_shared = scenario_mod.any_server_dependent(variants)
+    with_degr = scenario_mod.any_degraded(variants)
     d = len(dist_list)
     if d == 1:
         sampler = _sweep_sampler(key, dist_list[0], cfg, k_max, n_seeds,
-                                 chunk_size, with_shared=with_shared)
+                                 chunk_size, with_shared=with_shared,
+                                 with_degr=with_degr)
     else:
         sampler = _sweep_dists_sampler(key, dist_list, cfg, k_max, n_seeds,
-                                       chunk_size, with_shared=with_shared)
+                                       chunk_size, with_shared=with_shared,
+                                       with_degr=with_degr)
 
     kwargs = dict(variants=variants, warmup_frac=warmup_frac,
                   percentiles=tuple(percentiles), n_bins=n_bins,

@@ -25,6 +25,42 @@ Replication policies (``Policy``):
     always dispatches; extra copies dispatch only to servers that are
     idle at the arrival instant, and dispatched copies run to
     completion.
+  * ``TIMEOUT_RETRY`` — the NON-redundant robustness baseline: one copy
+    at a time, resent after a deadline ``delay`` with exponential
+    backoff (attempt ``j`` dispatches ``delay * sum_{i<j} min(2^i,
+    BACKOFF_CAP)`` after the arrival, cap 8x — see
+    ``repro.kernels.cell_update.ref``). ``ks`` bounds the number of
+    ATTEMPTS; the final attempt is exempt from blackhole loss (it
+    models the out-of-band escalation every real retry layer has), so
+    retried requests always complete.
+  * ``HEDGE_AFTER_DELAY`` — Joshi-style deferred hedging: the primary
+    dispatches at the arrival; duplicate ``j`` dispatches at
+    ``t + j * delay`` ONLY if nothing has completed by then.
+    ``delay=0`` degenerates BIT-IDENTICALLY to ``REPLICATE_ALL`` (all
+    copies fire at ``t``; the engine special-cases ``delay <= 0`` so
+    the dispatch gate cannot flip on a zero-service draw).
+
+Degradation model (``Degradation``) — the paper's "exceptional
+conditions" as first-class sweep coordinates:
+
+  * with probability ``p_slow`` a copy is served by a STRAGGLER: its
+    service time is inflated ``x slow_factor``;
+  * with probability ``p_fail`` a copy BLACKHOLES: it is lost in
+    transit — it never occupies its server and never responds. A
+    request whose every dispatched copy blackholes never completes;
+    the engine reports such cells' summaries over COMPLETED requests
+    plus a per-cell ``completed`` count (``TIMEOUT_RETRY``'s final
+    attempt is exempt, so retry cells always complete).
+
+  CRN contract: both events are driven by ONE uniform draw per
+  (arrival, copy) sampled from a DEDICATED ``fold_in`` index
+  (``queueing._DEGRADE_FOLD``) — never from the service-time key
+  stream — so healthy cells (``p_slow = p_fail = 0``) consume exactly
+  the pre-degradation draws and keep their bits, and degraded cells
+  stay CRN-paired with healthy ones copy-for-copy. The draw decides
+  blackhole on ``u < p_fail`` and straggler on ``u >= 1 - p_slow``
+  (disjoint since ``p_fail + p_slow <= 1``), so raising one
+  probability never reshuffles the other's events.
 
 Service models (``ServiceModel``):
 
@@ -71,6 +107,8 @@ class Policy(enum.IntEnum):
     REPLICATE_ALL = 0
     CANCEL_ON_COMPLETE = 1
     REPLICATE_TO_IDLE = 2
+    TIMEOUT_RETRY = 3
+    HEDGE_AFTER_DELAY = 4
 
 
 class ServiceModel(enum.IntEnum):
@@ -85,8 +123,55 @@ class ServiceModel(enum.IntEnum):
 REPLICATE_ALL = Policy.REPLICATE_ALL
 CANCEL_ON_COMPLETE = Policy.CANCEL_ON_COMPLETE
 REPLICATE_TO_IDLE = Policy.REPLICATE_TO_IDLE
+TIMEOUT_RETRY = Policy.TIMEOUT_RETRY
+HEDGE_AFTER_DELAY = Policy.HEDGE_AFTER_DELAY
 IID = ServiceModel.IID
 SERVER_DEPENDENT = ServiceModel.SERVER_DEPENDENT
+
+# Policies whose dispatch schedule reads the per-variant ``delay`` knob.
+TIMED_POLICIES = (Policy.TIMEOUT_RETRY, Policy.HEDGE_AFTER_DELAY)
+
+
+@dataclasses.dataclass(frozen=True)
+class Degradation:
+    """Per-copy failure/straggler model (see the module design note).
+
+    ``p_slow``/``p_fail`` are per-COPY probabilities; ``slow_factor``
+    multiplies a straggler copy's service time. The healthy default
+    (``HEALTHY``) is exactly the pre-degradation engine: both selects
+    in ``step_cell`` are inert and no extra randomness is sampled, so
+    healthy cells are bit-identical to pre-PR-7 captures.
+    """
+
+    p_slow: float = 0.0
+    slow_factor: float = 1.0
+    p_fail: float = 0.0
+
+    def __post_init__(self):
+        p_slow, p_fail = float(self.p_slow), float(self.p_fail)
+        slow_factor = float(self.slow_factor)
+        if not 0.0 <= p_slow <= 1.0 or not 0.0 <= p_fail <= 1.0:
+            raise ValueError(
+                f"p_slow/p_fail must be in [0, 1], got {p_slow}/{p_fail}")
+        if p_slow + p_fail > 1.0:
+            raise ValueError(
+                "p_slow + p_fail must be <= 1 (the events share one "
+                f"uniform draw), got {p_slow} + {p_fail}")
+        if slow_factor < 1.0:
+            raise ValueError(
+                f"slow_factor must be >= 1, got {slow_factor}")
+        if p_slow == 0.0:
+            slow_factor = 1.0  # inert -> canonical (hash/provenance)
+        object.__setattr__(self, "p_slow", p_slow)
+        object.__setattr__(self, "p_fail", p_fail)
+        object.__setattr__(self, "slow_factor", slow_factor)
+
+    @property
+    def healthy(self) -> bool:
+        return self.p_slow == 0.0 and self.p_fail == 0.0
+
+
+HEALTHY = Degradation()
 
 _POLICY_NAMES = {p.name.lower(): p for p in Policy}
 _MODEL_NAMES = {m.name.lower(): m for m in ServiceModel}
@@ -108,10 +193,13 @@ def parse_service_model(name: Union[str, int, ServiceModel]) -> ServiceModel:
 
 @dataclasses.dataclass(frozen=True)
 class Variant:
-    """One execution variant — a (k, policy, model, mix, overhead) point.
+    """One execution variant — a (k, policy, model, mix, overhead,
+    degradation, delay) point.
 
     The engine's cell plan crosses variants with (seed, load): variant
     ``j`` of a scenario grid occupies the plan's k-axis slot ``j``.
+    ``delay`` is the TIMED_POLICIES deadline/hedge delay; the
+    degradation triple rides as three more per-cell float coordinates.
     """
 
     k: int
@@ -119,10 +207,18 @@ class Variant:
     service_model: ServiceModel = ServiceModel.IID
     mix: float = 0.0
     overhead: float = 0.0  # client overhead; the engine charges it iff k > 1
+    p_slow: float = 0.0
+    slow_factor: float = 1.0
+    p_fail: float = 0.0
+    delay: float = 0.0
 
     @property
     def needs_shared_draw(self) -> bool:
         return self.service_model == ServiceModel.SERVER_DEPENDENT
+
+    @property
+    def needs_degradation_draw(self) -> bool:
+        return self.p_slow > 0.0 or self.p_fail > 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +241,8 @@ class Scenario:
     ks: tuple[int, ...] = (1, 2)
     client_overhead: float = 0.0
     warmup_frac: float = 0.1
+    degradation: Degradation = HEALTHY
+    delay: float = 0.0  # TIMED_POLICIES deadline; normalized to 0 otherwise
 
     def __post_init__(self):
         d = self.dists
@@ -163,9 +261,17 @@ class Scenario:
                 f"Scenario.warmup_frac must be in [0, 1), got "
                 f"{self.warmup_frac}")
         model = ServiceModel(self.service_model)
+        policy = Policy(self.policy)
+        degr = self.degradation
+        if not isinstance(degr, Degradation):
+            raise TypeError(
+                f"Scenario.degradation must be a Degradation, got {degr!r}")
+        delay = float(self.delay)
+        if delay < 0.0:
+            raise ValueError(f"Scenario.delay must be >= 0, got {delay}")
         object.__setattr__(self, "dists", d)
         object.__setattr__(self, "ks", ks)
-        object.__setattr__(self, "policy", Policy(self.policy))
+        object.__setattr__(self, "policy", policy)
         object.__setattr__(self, "service_model", model)
         object.__setattr__(self, "mix",
                            float(self.mix) if model == SERVER_DEPENDENT
@@ -173,6 +279,10 @@ class Scenario:
         object.__setattr__(self, "client_overhead",
                            float(self.client_overhead))
         object.__setattr__(self, "warmup_frac", float(self.warmup_frac))
+        # delay is inert outside TIMED_POLICIES -> canonical 0.0 so
+        # behaviorally identical scenarios hash/compare identically.
+        object.__setattr__(self, "delay",
+                           delay if policy in TIMED_POLICIES else 0.0)
 
     @classmethod
     def paper_default(cls, dists: Union[ServiceDist,
@@ -204,7 +314,11 @@ class Scenario:
         """The per-cell coordinates of this scenario at replication ``k``."""
         return Variant(k=int(k), policy=self.policy,
                        service_model=self.service_model, mix=self.mix,
-                       overhead=self.client_overhead)
+                       overhead=self.client_overhead,
+                       p_slow=self.degradation.p_slow,
+                       slow_factor=self.degradation.slow_factor,
+                       p_fail=self.degradation.p_fail,
+                       delay=self.delay)
 
     def variants(self) -> tuple[Variant, ...]:
         """One ``Variant`` per entry of ``ks`` (the plan's k-axis order)."""
@@ -213,6 +327,7 @@ class Scenario:
 
 jax.tree_util.register_static(Scenario)
 jax.tree_util.register_static(Variant)
+jax.tree_util.register_static(Degradation)
 
 ScenarioLike = Union[Scenario, Sequence[Scenario]]
 
@@ -257,16 +372,35 @@ def provenance(scenario: ScenarioLike) -> Union[dict, list]:
     overhead per scenario."""
     if not isinstance(scenario, Scenario):
         return [provenance(s) for s in scenario]
-    return {"policy": scenario.policy.name,
+    prov = {"policy": scenario.policy.name,
             "service_model": scenario.service_model.name,
             "mix": scenario.mix, "ks": list(scenario.ks),
             "client_overhead": scenario.client_overhead,
             "dists": [d.name for d in scenario.dists]}
+    if not scenario.degradation.healthy or scenario.delay:
+        prov["degradation"] = {"p_slow": scenario.degradation.p_slow,
+                               "slow_factor": scenario.degradation.slow_factor,
+                               "p_fail": scenario.degradation.p_fail}
+        prov["delay"] = scenario.delay
+    return prov
 
 
 def any_server_dependent(variants: Iterable[Variant]) -> bool:
     """Whether the engine must sample the extra shared-component column."""
     return any(v.needs_shared_draw for v in variants)
+
+
+def any_degraded(variants: Iterable[Variant]) -> bool:
+    """Whether the engine must sample the per-copy degradation uniforms."""
+    return any(v.needs_degradation_draw for v in variants)
+
+
+def any_timed(variants: Iterable[Variant]) -> bool:
+    """Whether the grid contains a TIMED_POLICIES variant — a STATIC
+    flag: the scan body compiles its timed-dispatch block only then,
+    keeping every non-timed grid on the exact pre-timed compiled
+    program (see ``cell_update.ref.step_cell``)."""
+    return any(v.policy in TIMED_POLICIES for v in variants)
 
 
 def variant_codes(variants):

@@ -82,15 +82,19 @@ def _shard_map_unchecked(f, mesh, in_specs, out_specs):
 
 @functools.lru_cache(maxsize=None)
 def _body_fn(mesh: jax.sharding.Mesh, n_servers: int, n_bins: int,
-             block: int, use_kernel: str = "off"):
+             block: int, use_kernel: str = "off",
+             has_shared: bool = False, has_timed: bool = False):
     """Build (and cache) the jitted, shard_mapped chunk-body executor.
 
     The carry and the per-cell parameters — including the scenario
-    policy/model codes and service-model mixes — are sharded over
-    ``"cells"``; the seed-level sampled inputs are replicated (each
-    device reads only its cells' rows via the sharded ``seed_idx``).
-    Cached per mesh so repeated engine calls (threshold bisection!)
-    reuse the wrapper and its jit cache.
+    policy/model codes, service-model mixes and the degradation /
+    timed-policy parameters — are sharded over ``"cells"``; the
+    seed-level sampled inputs are replicated (each device reads only
+    its cells' rows via the sharded ``seed_idx``). Cached per mesh so
+    repeated engine calls (threshold bisection!) reuse the wrapper and
+    its jit cache. ``has_shared`` / ``has_timed`` are the static
+    services-layout / timed-block flags of ``cell_update_ref`` (part of
+    the cache key, like the kernel mode).
 
     ``use_kernel`` is a RESOLVED cell-update kernel mode (see
     ``queueing.run``): the Pallas kernel runs per shard on its local
@@ -98,22 +102,25 @@ def _body_fn(mesh: jax.sharding.Mesh, n_servers: int, n_bins: int,
     hist_sketch kernel — so every mode preserves the bit-identity
     contract.
     """
-    def chunk_body(free, ssum, comp, hist, seed_idx, rates, k_mask, ovh,
-                   policy_code, model_code, mix,
+    def chunk_body(free, ssum, comp, cnt, hist, seed_idx, rates, k_mask,
+                   ovh, policy_code, model_code, mix, p_slow, slow_factor,
+                   p_fail, delay,
                    unit_gaps, servers, services, start, n_valid,
                    warmup_start):
         return queueing._sweep_chunk_cells(
-            free, ssum, comp, hist, unit_gaps, servers, services, start,
-            n_valid, warmup_start, seed_idx, rates, k_mask, ovh,
-            policy_code, model_code, mix,
+            free, ssum, comp, cnt, hist, unit_gaps, servers, services,
+            start, n_valid, warmup_start, seed_idx, rates, k_mask, ovh,
+            policy_code, model_code, mix, p_slow, slow_factor, p_fail,
+            delay,
             n_servers=n_servers, n_bins=n_bins, block=block,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, has_shared=has_shared,
+            has_timed=has_timed)
 
     cells = P("cells")
     return jax.jit(_shard_map_unchecked(
         chunk_body, mesh,
-        in_specs=(cells,) * 11 + (P(),) * 6,
-        out_specs=(cells,) * 4))
+        in_specs=(cells,) * 16 + (P(),) * 6,
+        out_specs=(cells,) * 5))
 
 
 def _sweep_cells_sharded(sampler, n_seeds_total: int,
@@ -144,29 +151,33 @@ def _sweep_cells_sharded(sampler, n_seeds_total: int,
                                    len(variants),
                                    pad_to=mesh.devices.size,
                                    policies=policies, models=models)
-    rates_c, k_mask_c, ovh_c, mix_c = queueing._plan_cell_params(
-        plan, rhos, cfg, variants)
+    (rates_c, k_mask_c, ovh_c, mix_c, pslow_c, sfac_c, pfail_c,
+     delay_c) = queueing._plan_cell_params(plan, rhos, cfg, variants)
+    has_shared = scenario_mod.any_server_dependent(variants)
+    has_timed = scenario_mod.any_timed(variants)
     warmup_start = int(m * warmup_frac)
     need_hist = len(percentiles) > 0
     t_chunk, n_chunks, block, pad = queueing._chunk_layout(
         cfg, chunk_size, need_hist, kernel_on=use_kernel != "off")
-    free, ssum, comp, hist = queueing._init_cell_state(plan, cfg, n_bins,
-                                                       need_hist)
-    run_chunk = _body_fn(mesh, cfg.n_servers, n_bins, block, use_kernel)
+    free, ssum, comp, cnt, hist = queueing._init_cell_state(
+        plan, cfg, n_bins, need_hist)
+    run_chunk = _body_fn(mesh, cfg.n_servers, n_bins, block, use_kernel,
+                         has_shared, has_timed)
 
     for c in range(n_chunks):
         unit_gaps, servers, services = queueing._pad_chunk_inputs(
             *sampler(c, t_chunk), pad)
         start = c * t_chunk
-        free, ssum, comp, hist = run_chunk(
-            free, ssum, comp, hist, plan.seed_idx, rates_c, k_mask_c,
-            ovh_c, plan.policy_code, plan.model_code, mix_c,
+        free, ssum, comp, cnt, hist = run_chunk(
+            free, ssum, comp, cnt, hist, plan.seed_idx, rates_c, k_mask_c,
+            ovh_c, plan.policy_code, plan.model_code, mix_c, pslow_c,
+            sfac_c, pfail_c, delay_c,
             unit_gaps, servers, services, jnp.asarray(start),
             jnp.asarray(min(t_chunk, m - start)),
             jnp.asarray(warmup_start))
 
-    return queueing._finalize_summary(plan, ssum, hist, m - warmup_start,
-                                      percentiles)
+    return queueing._finalize_summary(plan, ssum, cnt, hist,
+                                      m - warmup_start, percentiles)
 
 
 def run_sharded(key: Array, scenario, rhos: Array, cfg: queueing.SimConfig,

@@ -23,8 +23,10 @@ whole chunk and touches HBM once per (cell, chunk):
                                   in the scan body.
 
 Per-cell plan coordinates ride as SCALAR-PREFETCH operands (seed_idx,
-k_count, policy_code, model_code, rates, overhead, mix — see
-``repro.core.cellplan``): the seed coordinate drives the input
+k_count, policy_code, model_code, rates, overhead, mix, and the PR-7
+degradation / timed-policy parameters p_slow, slow_factor, p_fail,
+delay — see ``repro.core.cellplan``): the seed coordinate drives the
+input
 BlockSpec index maps, so each cell's grid row streams exactly its
 seed's (block_t,) slice of the sampled inputs and the (C, T)
 expansion is never materialized — the same "gather by coordinate, not
@@ -51,7 +53,12 @@ Bit-identity with the scan body (the contract the parity tests pin):
 
 The CRN / fold_in contract is untouched: sampling stays host-side and
 seed-level (see ``queueing.py``); the kernel only changes WHERE the
-deterministic update runs. Off-TPU the kernel runs in Pallas interpret
+deterministic update runs. That includes the degradation model's CRN
+contract (``ref.step_cell``'s design note): the per-copy failure /
+straggler uniforms arrive as extra ``services`` columns drawn from the
+dedicated ``_DEGRADE_FOLD`` branch, the kernel never samples, and a
+healthy grid carries no such columns — so healthy cells keep their
+pre-degradation bits through this kernel exactly as through the scan. Off-TPU the kernel runs in Pallas interpret
 mode, which executes the same jnp ops through XLA CPU — that is what
 keeps kernel-mode CI runs bit-exact against the scan body rather than
 "close".
@@ -66,23 +73,24 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.scenario import Policy, ServiceModel
-from repro.kernels.cell_update.ref import kahan_fold
+from repro.kernels.cell_update.ref import kahan_fold, retry_offsets
 from repro.kernels.hist_sketch import ops as hist_ops
 from repro.kernels.hist_sketch.kernel import LANE
 
 
 def _cell_kernel(seed_ref, kcnt_ref, pol_ref, mdl_ref, rate_ref, ovh_ref,
-                 mix_ref, free_in, ssum_in, comp_in, *rest, n_servers: int,
+                 mix_ref, psl_ref, sfa_ref, pfl_ref, dly_ref,
+                 free_in, ssum_in, comp_in, cnt_in, *rest, n_servers: int,
                  k_max: int, n_svc: int, block_t: int, n_hi: int,
-                 need_hist: bool):
+                 need_hist: bool, has_shared: bool):
     if need_hist:
-        (hist_in, cum_ref, warm_ref, srv_ref, svc_ref,
-         free_out, ssum_out, comp_out, hist_out,
-         free_s, ssum_s, comp_s, hist_s) = rest
+        (hist_in, cum_ref, warm_ref, valid_ref, srv_ref, svc_ref,
+         free_out, ssum_out, comp_out, cnt_out, hist_out,
+         free_s, ssum_s, comp_s, cnt_s, hist_s) = rest
     else:
-        (cum_ref, warm_ref, srv_ref, svc_ref,
-         free_out, ssum_out, comp_out,
-         free_s, ssum_s, comp_s) = rest
+        (cum_ref, warm_ref, valid_ref, srv_ref, svc_ref,
+         free_out, ssum_out, comp_out, cnt_out,
+         free_s, ssum_s, comp_s, cnt_s) = rest
     ic = pl.program_id(0)
     it = pl.program_id(1)
 
@@ -91,6 +99,7 @@ def _cell_kernel(seed_ref, kcnt_ref, pol_ref, mdl_ref, rate_ref, ovh_ref,
         free_s[...] = free_in[...]
         ssum_s[...] = ssum_in[...]
         comp_s[...] = comp_in[...]
+        cnt_s[...] = cnt_in[...]
         if need_hist:
             hist_s[...] = hist_in[0]
 
@@ -99,72 +108,125 @@ def _cell_kernel(seed_ref, kcnt_ref, pol_ref, mdl_ref, rate_ref, ovh_ref,
     ovh = ovh_ref[ic]
     mix = mix_ref[ic]
     kcnt = kcnt_ref[ic]
+    psl = psl_ref[ic]
+    sfa = sfa_ref[ic]
+    pfl = pfl_ref[ic]
+    dly = dly_ref[ic]
     is_sd = mdl_ref[ic] == int(ServiceModel.SERVER_DEPENDENT)
     is_cancel = pol_ref[ic] == int(Policy.CANCEL_ON_COMPLETE)
     is_idle = pol_ref[ic] == int(Policy.REPLICATE_TO_IDLE)
+    is_retry = pol_ref[ic] == int(Policy.TIMEOUT_RETRY)
+    is_timed = is_retry | (pol_ref[ic] == int(Policy.HEDGE_AFTER_DELAY))
 
     iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k_max), 1)
     mask = iota_k < kcnt            # k_mask rows are prefixes by plan
     primary = iota_k == 0
     iota_n = jax.lax.broadcasted_iota(jnp.int32, (k_max, n_servers), 1)
+    # timed-policy dispatch-time coefficients (see ref.step_cell).
+    # Pallas kernels cannot capture non-scalar constants, so the backoff
+    # offsets are assembled from scalar selects — exact small floats,
+    # same values as the ref's literal array.
+    retry_coeff = jnp.zeros((1, k_max), jnp.float32)
+    for j, off in enumerate(retry_offsets(k_max)):
+        retry_coeff = jnp.where(iota_k == j, off, retry_coeff)
+    coeff = jnp.where(is_retry, retry_coeff, iota_k.astype(jnp.float32))
+    # TIMEOUT_RETRY's LAST in-budget attempt ignores its blackhole draw
+    last_attempt = is_retry & (iota_k == kcnt - 1)
+    n_base = k_max + (1 if has_shared else 0)
+    has_degr = n_svc > n_base
 
     cum_blk = cum_ref[0]            # (block_t,) this seed's time block
     warm_blk = warm_ref[0]          # (block_t,)
+    valid_blk = valid_ref[0]        # (block_t,)
     srv_blk = srv_ref[0]            # (block_t, k_max)
     svc_blk = svc_ref[0]            # (block_t, n_svc)
 
     def step(s, carry):
         if need_hist:
-            free, ssum, comp, resp_blk = carry
+            free, ssum, comp, cnt, resp_blk, wl_blk = carry
         else:
-            free, ssum, comp = carry
+            free, ssum, comp, cnt = carry
         t = cum_blk[s] / rate
         srv = jax.lax.dynamic_slice(srv_blk, (s, 0), (1, k_max))
         svc_row = jax.lax.dynamic_slice(svc_blk, (s, 0), (1, n_svc))
-        shared = svc_row[0, n_svc - 1] if n_svc > k_max else svc_row[0, 0]
+        shared = svc_row[0, k_max] if has_shared else svc_row[0, 0]
+        degr = (svc_row[:, n_base:n_base + k_max] if has_degr
+                else jnp.zeros((1, k_max), jnp.float32))
         svc = svc_row[:, :k_max]
         w = warm_blk[s]
+        # padding steps zero the effective delay (see ref.step_cell)
+        dly_eff = jnp.where(valid_blk[s] > 0, dly, 0.0)
         # exact gather: one-hot pick of free[srv] (no arithmetic on it)
         oh = srv[0, :, None] == iota_n                      # (k, N)
         cur = jnp.max(jnp.where(oh, free, -jnp.inf), axis=1)[None, :]
         # step_cell, op-for-op on (1, k) lanes
         svc = jnp.where(is_sd, mix * shared + (1.0 - mix) * svc, svc)
+        svc = jnp.where(degr >= 1.0 - psl, svc * sfa, svc)
+        alive = degr >= pfl
         start = jnp.maximum(cur, t)
         finish = start + svc
-        t_win = jnp.min(jnp.where(mask, finish, jnp.inf))
+        t_win = jnp.min(jnp.where(mask & alive, finish, jnp.inf))
         dispatch = mask & (primary | (cur <= t))
-        val_all = jnp.where(mask, finish, cur)
-        val_cancel = jnp.where(mask, jnp.maximum(cur, t_win), cur)
-        val_idle = jnp.where(dispatch, finish, cur)
-        new_val = jnp.where(is_cancel, val_cancel,
-                            jnp.where(is_idle, val_idle, val_all))
+        val_all = jnp.where(mask & alive, finish, cur)
+        val_cancel = jnp.where(mask & alive, jnp.maximum(cur, t_win), cur)
+        val_idle = jnp.where(dispatch & alive, finish, cur)
+        # timed policies: sequential dispatch, unrolled in copy order
+        # with scalar extracts (mirrors ref.step_cell's Python loop)
+        disp_t = t + dly_eff * coeff
+        alive_eff = alive | last_attempt
+        fired_finish = jnp.maximum(cur, disp_t) + svc
+        fire_all = dly_eff <= 0.0
+        best = jnp.inf
+        made = jnp.zeros((1, k_max), bool)
+        for j in range(k_max):
+            made_j = mask[0, j] if j == 0 else (
+                mask[0, j] & (fire_all | (best > disp_t[0, j])))
+            best = jnp.minimum(
+                best, jnp.where(made_j & alive_eff[0, j],
+                                fired_finish[0, j], jnp.inf))
+            made = made | ((iota_k == j) & made_j)
+        val_timed = jnp.where(made & alive_eff, fired_finish, cur)
+        new_val = jnp.where(
+            is_cancel, val_cancel,
+            jnp.where(is_idle, val_idle,
+                      jnp.where(is_timed, val_timed, val_all)))
         # scatter: unrolled selects in copy order == XLA's last-wins
         # .at[srv].set (srv entries distinct; masked copies rewrite
         # their own old value either way)
         for j in range(k_max):
             free = jnp.where(oh[j][None, :], new_val[0, j], free)
         resp_win = t_win - t + ovh
-        resp_idle = (jnp.min(jnp.where(dispatch, finish, jnp.inf))
+        resp_idle = (jnp.min(jnp.where(dispatch & alive, finish, jnp.inf))
                      - t + ovh)
-        resp = jnp.where(is_idle, resp_idle, resp_win)
-        ssum, comp = kahan_fold(ssum, comp, resp, w)
+        resp_timed = best - t + ovh
+        resp = jnp.where(is_idle, resp_idle,
+                         jnp.where(is_timed, resp_timed, resp_win))
+        w_live = w * jnp.isfinite(resp).astype(jnp.float32)
+        ssum, comp = kahan_fold(ssum, comp, resp, w_live)
+        cnt = cnt + w_live
         if need_hist:
             resp_blk = jax.lax.dynamic_update_slice(
                 resp_blk, resp.reshape(1, 1), (s, 0))
-            return free, ssum, comp, resp_blk
-        return free, ssum, comp
+            wl_blk = jax.lax.dynamic_update_slice(
+                wl_blk, w_live.reshape(1, 1), (s, 0))
+            return free, ssum, comp, cnt, resp_blk, wl_blk
+        return free, ssum, comp, cnt
 
-    carry = (free_s[...], ssum_s[0, 0], comp_s[0, 0])
+    carry = (free_s[...], ssum_s[0, 0], comp_s[0, 0], cnt_s[0, 0])
     if need_hist:
-        carry += (jnp.zeros((block_t, 1), jnp.float32),)
+        carry += (jnp.zeros((block_t, 1), jnp.float32),
+                  jnp.zeros((block_t, 1), jnp.float32))
     carry = jax.lax.fori_loop(0, block_t, step, carry)
     free_s[...] = carry[0]
     ssum_s[0, 0] = carry[1]
     comp_s[0, 0] = carry[2]
+    cnt_s[0, 0] = carry[3]
     if need_hist:
         # hist_sketch accumulation (see that kernel's design note):
-        # idx == -1 (padding / pre-warmup) matches no indicator row
-        idx = hist_ops.bin_indices(carry[3], warm_blk[:, None],
+        # idx == -1 (padding / pre-warmup / incomplete) matches no
+        # indicator row — the completed weight, not the raw warmup
+        # weight, gates the bins (same as the ref's w_live)
+        idx = hist_ops.bin_indices(carry[4], carry[5],
                                    n_bins=n_hi * LANE)       # (block_t, 1)
         hi = idx // LANE
         lo = idx - hi * LANE
@@ -181,26 +243,36 @@ def _cell_kernel(seed_ref, kcnt_ref, pol_ref, mdl_ref, rate_ref, ovh_ref,
         free_out[...] = free_s[...]
         ssum_out[...] = ssum_s[...]
         comp_out[...] = comp_s[...]
+        cnt_out[...] = cnt_s[...]
         if need_hist:
             hist_out[0] = hist_s[...]
 
 
 @functools.partial(jax.jit, static_argnames=("n_servers", "n_bins",
-                                             "block_t", "interpret"))
+                                             "block_t", "interpret",
+                                             "has_shared"))
 def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
-                   hist: jax.Array, cum: jax.Array, warm: jax.Array,
+                   cnt: jax.Array, hist: jax.Array, cum: jax.Array,
+                   warm: jax.Array, valid: jax.Array,
                    servers: jax.Array, services: jax.Array,
                    seed_idx: jax.Array, k_count: jax.Array,
                    policy: jax.Array, model: jax.Array, rates: jax.Array,
-                   ovh: jax.Array, mix: jax.Array, *, n_servers: int,
-                   n_bins: int, block_t: int, interpret: bool = False):
-    """One chunk of the fused cell update. Carry free (C,N) / ssum, comp
-    (C,) / hist (C, n_bins) (shape (0,0) skips the sketch); inputs cum
-    (S,T) cumulative offsets, warm (T,) 0/1 weights, servers (S,T,k_max),
-    services (S,T,n_svc); per-cell scalar-prefetch coordinates (C,) each.
-    Requires ``T % block_t == 0`` and (with the sketch) ``n_bins % 128
-    == 0`` — ``ops.cell_update`` pads/validates. Returns the updated
-    carry, free NOT yet rebased (the caller rebases, same as the ref).
+                   ovh: jax.Array, mix: jax.Array, p_slow: jax.Array,
+                   slow_factor: jax.Array, p_fail: jax.Array,
+                   delay: jax.Array, *, n_servers: int,
+                   n_bins: int, block_t: int, interpret: bool = False,
+                   has_shared: bool = False):
+    """One chunk of the fused cell update. Carry free (C,N) / ssum, comp,
+    cnt (C,) / hist (C, n_bins) (shape (0,0) skips the sketch); inputs
+    cum (S,T) cumulative offsets, warm (T,) 0/1 post-warmup weights,
+    valid (T,) 0/1 real-step flags, servers (S,T,k_max), services
+    (S,T,n_svc) laid out ``[copies][shared if has_shared][degradation
+    uniforms if present]``; per-cell scalar-prefetch coordinates (C,)
+    each (the degradation / timed-policy parameters ride the same
+    prefetch path as the policy codes). Requires ``T % block_t == 0``
+    and (with the sketch) ``n_bins % 128 == 0`` — ``ops.cell_update``
+    pads/validates. Returns the updated carry, free NOT yet rebased
+    (the caller rebases, same as the ref).
     """
     c_cells = free.shape[0]
     t_total = cum.shape[1]
@@ -213,7 +285,8 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
 
     kernel = functools.partial(
         _cell_kernel, n_servers=n_servers, k_max=k_max, n_svc=n_svc,
-        block_t=block_t, n_hi=n_hi, need_hist=need_hist)
+        block_t=block_t, n_hi=n_hi, need_hist=need_hist,
+        has_shared=has_shared)
 
     def cell_row(ic, it, *_):
         return (ic, 0)
@@ -225,6 +298,7 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
         pl.BlockSpec((1, n_servers), cell_row),                  # free
         pl.BlockSpec((1, 1), cell_row),                          # ssum
         pl.BlockSpec((1, 1), cell_row),                          # comp
+        pl.BlockSpec((1, 1), cell_row),                          # cnt
     ]
     if need_hist:
         in_specs.append(
@@ -232,6 +306,7 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
     in_specs += [
         pl.BlockSpec((1, block_t), seed_time),                   # cum
         pl.BlockSpec((1, block_t), lambda ic, it, *_: (0, it)),  # warm
+        pl.BlockSpec((1, block_t), lambda ic, it, *_: (0, it)),  # valid
         pl.BlockSpec((1, block_t, k_max),
                      lambda ic, it, seed, *_: (seed[ic], it, 0)),
         pl.BlockSpec((1, block_t, n_svc),
@@ -241,13 +316,16 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
         pl.BlockSpec((1, n_servers), cell_row),
         pl.BlockSpec((1, 1), cell_row),
         pl.BlockSpec((1, 1), cell_row),
+        pl.BlockSpec((1, 1), cell_row),
     ]
     out_shape = [
         jax.ShapeDtypeStruct((c_cells, n_servers), jnp.float32),
         jax.ShapeDtypeStruct((c_cells, 1), jnp.float32),
         jax.ShapeDtypeStruct((c_cells, 1), jnp.float32),
+        jax.ShapeDtypeStruct((c_cells, 1), jnp.float32),
     ]
     scratch = [pltpu.VMEM((1, n_servers), jnp.float32),
+               pltpu.VMEM((1, 1), jnp.float32),
                pltpu.VMEM((1, 1), jnp.float32),
                pltpu.VMEM((1, 1), jnp.float32)]
     if need_hist:
@@ -257,20 +335,24 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
             jax.ShapeDtypeStruct((c_cells, n_hi, LANE), jnp.float32))
         scratch.append(pltpu.VMEM((n_hi, LANE), jnp.float32))
 
-    operands = [free, ssum.reshape(c_cells, 1), comp.reshape(c_cells, 1)]
+    operands = [free, ssum.reshape(c_cells, 1), comp.reshape(c_cells, 1),
+                cnt.reshape(c_cells, 1)]
     if need_hist:
         operands.append(hist.reshape(c_cells, n_hi, LANE))
-    operands += [cum, warm.reshape(1, t_total), servers, services]
+    operands += [cum, warm.reshape(1, t_total), valid.reshape(1, t_total),
+                 servers, services]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=7,
+        num_scalar_prefetch=11,
         grid=(c_cells, n_tb),
         in_specs=in_specs,
         out_specs=out_specs,
         scratch_shapes=scratch)
     out = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
                          interpret=interpret)(
-        seed_idx, k_count, policy, model, rates, ovh, mix, *operands)
-    free_o, ssum_o, comp_o = out[0], out[1][:, 0], out[2][:, 0]
-    hist_o = out[3].reshape(c_cells, n_hi * LANE) if need_hist else hist
-    return free_o, ssum_o, comp_o, hist_o
+        seed_idx, k_count, policy, model, rates, ovh, mix, p_slow,
+        slow_factor, p_fail, delay, *operands)
+    free_o, ssum_o, comp_o, cnt_o = (out[0], out[1][:, 0], out[2][:, 0],
+                                     out[3][:, 0])
+    hist_o = out[4].reshape(c_cells, n_hi * LANE) if need_hist else hist
+    return free_o, ssum_o, comp_o, cnt_o, hist_o

@@ -53,10 +53,12 @@ def resolve_kernel_mode(kernel: str | bool | None = "auto") -> str:
     return kernel
 
 
-def cell_update(free, ssum, comp, hist, cum, warm, servers, services,
-                seed_idx, rates, k_mask, ovh, policy_code, model_code,
-                mix, *, n_servers: int, n_bins: int, block: int,
-                interpret: bool = False):
+def cell_update(free, ssum, comp, cnt, hist, cum, warm, valid, servers,
+                services, seed_idx, rates, k_mask, ovh, policy_code,
+                model_code, mix, p_slow, slow_factor, p_fail, delay, *,
+                n_servers: int, n_bins: int, block: int,
+                interpret: bool = False, has_shared: bool = False,
+                has_timed: bool = False):
     """Kernel-path twin of ``ref.cell_update_ref`` (same signature, same
     bits): validates the layout, derives the scalar-prefetch operands
     from the plan parameters, and calls the Pallas kernel.
@@ -64,17 +66,23 @@ def cell_update(free, ssum, comp, hist, cum, warm, servers, services,
     ``k_mask`` rows are prefix masks by plan construction
     (``queueing._plan_cell_params``), so they compress losslessly to a
     per-cell copy COUNT — an int the kernel prefetches and re-expands
-    with an iota compare (boolean, no rounding). A sketch whose
-    ``n_bins`` is not a multiple of the 128 lane width falls back to
-    the reference body (same bits, no kernel).
+    with an iota compare (boolean, no rounding). The degradation /
+    timed-policy parameters (``p_slow``/``slow_factor``/``p_fail``/
+    ``delay``) prefetch as-is; ``has_timed`` only routes the scan
+    fallback (the kernel's timed ops are always compiled — scalar
+    selects keep them inert and bit-invisible for non-timed cells). A
+    sketch whose ``n_bins`` is not a multiple of the 128 lane width
+    falls back to the reference body (same bits, no kernel).
     """
     t_total = cum.shape[1]
     need_hist = hist.size > 0
     if need_hist and n_bins % LANE != 0:
         return cell_update_ref(
-            free, ssum, comp, hist, cum, warm, servers, services,
-            seed_idx, rates, k_mask, ovh, policy_code, model_code, mix,
-            n_bins=n_bins, block=block)
+            free, ssum, comp, cnt, hist, cum, warm, valid, servers,
+            services, seed_idx, rates, k_mask, ovh, policy_code,
+            model_code, mix, p_slow, slow_factor, p_fail, delay,
+            n_bins=n_bins, block=block, has_shared=has_shared,
+            has_timed=has_timed)
     if t_total % block != 0:
         raise ValueError(
             f"kernel mode needs the chunk padded to the block multiple "
@@ -82,10 +90,11 @@ def cell_update(free, ssum, comp, hist, cum, warm, servers, services,
             f"kernel is on")
     k_count = k_mask.astype(jax.numpy.int32).sum(axis=1)
     return cell_update_tc(
-        free, ssum, comp, hist, cum, warm, servers, services,
+        free, ssum, comp, cnt, hist, cum, warm, valid, servers, services,
         seed_idx, k_count, policy_code, model_code, rates, ovh, mix,
+        p_slow, slow_factor, p_fail, delay,
         n_servers=n_servers, n_bins=n_bins, block_t=block,
-        interpret=interpret)
+        interpret=interpret, has_shared=has_shared)
 
 
 def cell_update_costs(*, n_cells: int, n_servers: int, k_max: int,

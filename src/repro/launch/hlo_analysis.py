@@ -133,11 +133,19 @@ def _dot_flops(ins: Instr, syms: dict[str, str]) -> float:
     if dims_list:
         for d in dims_list[0]:
             result_elems *= d
-    # lhs operand name = first %ref in the parens
-    m = re.match(r"%?([\w\.\-]+)", ins.rest)
+    # lhs operand = first argument in the parens. Depending on the XLA
+    # HLO printer version that is either "%name" (resolve its type via
+    # the symbol table) or "type %name" (type inline, e.g.
+    # "dot(f32[128,128]{1,0} %gte.3, ...)") — newer printers inline the
+    # operand types, which used to collapse the contracting factor to 1.
     contract = 1
-    if m:
-        lhs_type = syms.get(m.group(1), "")
+    mt = re.match(r"\(?([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s", ins.rest)
+    if mt:
+        lhs_type = mt.group(1)
+    else:
+        m = re.match(r"%?([\w\.\-]+)", ins.rest)
+        lhs_type = syms.get(m.group(1), "") if m else ""
+    if lhs_type:
         lhs_dims_list = _shape_dims(lhs_type)
         mcd = _CDIMS_RE.search(ins.rest)
         if lhs_dims_list and mcd:

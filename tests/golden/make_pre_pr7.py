@@ -1,0 +1,62 @@
+"""Regenerate the pre-PR-7 healthy-cell capture (``pre_pr7.npz``).
+
+Run at the PR-6 tree (commit 1c31482) — i.e. BEFORE the degradation
+model landed — this records ``queueing.run`` summaries for a mixed grid
+of every pre-existing policy x service-model combination, across
+chunked/unchunked and scan/interpret-kernel paths. The PR-7 acceptance
+contract (tests/test_faults.py::TestHealthyBitIdentity) is that healthy
+cells (``p_slow = p_fail = 0``) reproduce these bits exactly after the
+failure/straggler model landed.
+
+Usage: PYTHONPATH=src python tests/golden/make_pre_pr7.py
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queueing
+from repro.core.distributions import exponential
+from repro.core.scenario import (CANCEL_ON_COMPLETE, REPLICATE_TO_IDLE,
+                                 SERVER_DEPENDENT, Scenario)
+
+CFG = queueing.SimConfig(n_servers=6, n_arrivals=4096)
+RHOS = (0.3, 0.6)
+KEY_SEED = 7
+PERCENTILES = (50.0, 99.0)
+
+
+def scenarios():
+    dist = exponential()
+    return (
+        Scenario.paper_default(dist, ks=(1, 2)),
+        Scenario(dists=dist, policy=CANCEL_ON_COMPLETE, ks=(2,)),
+        Scenario(dists=dist, policy=REPLICATE_TO_IDLE, ks=(2,),
+                 client_overhead=0.25),
+        Scenario(dists=dist, service_model=SERVER_DEPENDENT, mix=0.7,
+                 ks=(2,)),
+    )
+
+
+def capture():
+    key = jax.random.PRNGKey(KEY_SEED)
+    rhos = jnp.asarray(RHOS)
+    out = {}
+    runs = {
+        "unchunked_off": dict(chunk_size=None, kernel="off"),
+        "chunked_off": dict(chunk_size=1536, kernel="off"),
+        "unchunked_interp": dict(chunk_size=None, kernel="interpret"),
+    }
+    for name, kw in runs.items():
+        res = queueing.run(key, scenarios(), rhos, CFG,
+                           n_seeds=2, percentiles=PERCENTILES, **kw)
+        for stat in ("mean", "p50", "p99"):
+            out[f"{name}/{stat}"] = np.asarray(res[stat])
+    return out
+
+
+if __name__ == "__main__":
+    path = os.path.join(os.path.dirname(__file__), "pre_pr7.npz")
+    np.savez(path, **capture())
+    print(f"wrote {path}")

@@ -29,6 +29,7 @@ MODULES = [
     "sweep_engine",
     "fig_policy_space",
     "fig14_network",
+    "fig_fault_masking",
 ]
 
 
@@ -92,6 +93,24 @@ def test_sweep_engine_kernel_row():
     assert kernel in ("on", "interpret")  # never the scan fallback
     assert "bit_identical=True" in row[2], row
     assert "speedup=" in row[2] and "scan_s=" in row[2], row
+
+
+def test_fig_fault_masking_chaos_acceptance():
+    """The chaos demo's acceptance booleans (25% of replicas crashed
+    mid-trace: hedged completes 100% within 2x its no-fault p99, the
+    timeout-retry baseline degrades at least as much) hold even at
+    smoke sizes — the JSON artifact records them per PR."""
+    import benchmarks.fig_fault_masking as ffm
+    rows = ffm.run(smoke=True)
+    by_name = {r[0]: r for r in rows}
+    chaos = by_name["fig_fault_masking/chaos"][2]
+    assert "hedged_completes_all=True" in chaos, chaos
+    assert "hedged_p99_within_2x=True" in chaos, chaos
+    assert "retry_degrades_more=True" in chaos, chaos
+    assert "masked=True" in chaos, chaos
+    engine = by_name["fig_fault_masking/engine"][2]
+    assert "retry_completes_all=True" in engine, engine
+    assert "completion_order=True" in engine, engine
 
 
 def test_fig12_accepts_chunked_engine_config():

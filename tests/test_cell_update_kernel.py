@@ -135,26 +135,27 @@ class TestPadCellIsolation:
         plan = cellplan.make_cell_plan(1, 3, 2, pad_to=4, policies=pol,
                                        models=mdl)
         assert plan.n_padded > plan.n_cells
-        rates_c, k_mask_c, ovh_c, mix_c = queueing._plan_cell_params(
-            plan, rhos, cfg, variants)
-        free, ssum, comp, hist = queueing._init_cell_state(
+        (rates_c, k_mask_c, ovh_c, mix_c, pslow_c, sfac_c, pfail_c,
+         delay_c) = queueing._plan_cell_params(plan, rhos, cfg, variants)
+        free, ssum, comp, cnt, hist = queueing._init_cell_state(
             plan, cfg, queueing.DEFAULT_BINS, True)
         sampler = queueing._sweep_sampler(key, d, cfg, 2, 1, None)
         pad = (-cfg.n_arrivals) % 512
         inputs = queueing._pad_chunk_inputs(*sampler(0, cfg.n_arrivals),
                                             pad)
-        args = (free, ssum, comp, hist, *inputs, jnp.asarray(0),
+        args = (free, ssum, comp, cnt, hist, *inputs, jnp.asarray(0),
                 jnp.asarray(cfg.n_arrivals), jnp.asarray(250),
                 plan.seed_idx, rates_c, k_mask_c, ovh_c,
-                plan.policy_code, plan.model_code, mix_c)
+                plan.policy_code, plan.model_code, mix_c, pslow_c,
+                sfac_c, pfail_c, delay_c)
         kw = dict(n_servers=cfg.n_servers, n_bins=queueing.DEFAULT_BINS,
                   block=512)
         out_off = queueing._sweep_chunk_cells(*args, use_kernel="off",
                                               **kw)
         out_on = queueing._sweep_chunk_cells(*args,
                                              use_kernel="interpret", **kw)
-        for name, a, b in zip(("free", "ssum", "comp", "hist"), out_off,
-                              out_on):
+        for name, a, b in zip(("free", "ssum", "comp", "cnt", "hist"),
+                              out_off, out_on):
             assert jnp.array_equal(a, b), name
 
 

@@ -97,19 +97,22 @@ class TestPadCellIsolation:
                                            pad_to=pad_to,
                                            policies=policies,
                                            models=models)
-            rates, k_mask, ovh, mix = queueing._plan_cell_params(
-                plan, rhos, cfg, variants)
+            (rates, k_mask, ovh, mix, pslow, sfac, pfail,
+             delay) = queueing._plan_cell_params(plan, rhos, cfg,
+                                                 variants)
             state = queueing._init_cell_state(plan, cfg, 128, True)
             state = queueing._sweep_chunk_cells(
                 *state, gaps, servers, services, jnp.asarray(0),
                 jnp.asarray(1024), jnp.asarray(100), plan.seed_idx,
                 rates, k_mask, ovh, plan.policy_code, plan.model_code,
-                mix, n_servers=5, n_bins=128, block=512)
+                mix, pslow, sfac, pfail, delay,
+                n_servers=5, n_bins=128, block=512)
             outs[pad_to] = state
         return outs
 
     def _assert_valid_cells_match(self, outs):
-        for i, name in enumerate(("free", "ssum", "comp", "hist")):
+        for i, name in enumerate(("free", "ssum", "comp", "cnt",
+                                  "hist")):
             a, b = outs[1][i], outs[8][i][:6]
             assert jnp.array_equal(a, b), name
 
@@ -137,7 +140,9 @@ class TestPadCellIsolation:
         ssum = ssum.at[6:].set(jnp.inf)
         hist = jnp.zeros((8, 128)).at[:, 3].set(10.0)
         hist = hist.at[6:].set(jnp.nan)
-        out = queueing._finalize_summary(plan, ssum, hist, 10, (99.0,))
+        cnt = jnp.full((8,), 10.0).at[6:].set(jnp.nan)  # poisoned pads
+        out = queueing._finalize_summary(plan, ssum, cnt, hist, 10,
+                                         (99.0,))
         assert out["mean"].shape == (1, 3, 2)
         assert bool(jnp.all(jnp.isfinite(out["mean"])))
         assert bool(jnp.all(jnp.isfinite(out["p99"])))

@@ -1,0 +1,245 @@
+"""Failure/straggler model + timed policies: the PR-7 engine contracts.
+
+* Healthy-cell bit-identity: every pre-existing policy x service-model
+  combination reproduces the pre-PR-7 golden capture
+  (``tests/golden/pre_pr7.npz``) BIT FOR BIT across chunked/unchunked
+  and scan/interpret paths — the degradation model and the timed-policy
+  block cost healthy grids nothing, not even a ULP.
+* CRN isolation: appending a degraded variant to a grid leaves the
+  healthy cells' bits untouched (fault draws come from a dedicated
+  ``fold_in`` stream).
+* ``HEDGE_AFTER_DELAY(delay=0)`` is bit-identical to ``REPLICATE_ALL``
+  (same dispatch set, exact min-folds), healthy and degraded.
+* The new policy codes are bit-identical across the scan body, the
+  interpreted kernel and the sharded executor.
+* Physics pins: light-load means match the closed forms
+  (``analytic.retry_mean_light`` / ``analytic.hedge_mean_light``),
+  hedge-delay means are monotone in the delay, and completed-count
+  semantics (blackholed requests drop out; TIMEOUT_RETRY's exempt last
+  attempt always completes).
+"""
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analytic, queueing
+from repro.core.distributions import exponential
+from repro.core.scenario import (CANCEL_ON_COMPLETE, REPLICATE_TO_IDLE,
+                                 SERVER_DEPENDENT, Degradation, Policy,
+                                 Scenario)
+
+GOLD = Path(__file__).parent / "golden" / "pre_pr7.npz"
+CFG = queueing.SimConfig(n_servers=6, n_arrivals=4096)
+RHOS = jnp.asarray((0.3, 0.6))
+KEY = jax.random.PRNGKey(7)
+
+
+def _golden_scenarios():
+    dist = exponential()
+    return (
+        Scenario.paper_default(dist, ks=(1, 2)),
+        Scenario(dists=dist, policy=CANCEL_ON_COMPLETE, ks=(2,)),
+        Scenario(dists=dist, policy=REPLICATE_TO_IDLE, ks=(2,),
+                 client_overhead=0.25),
+        Scenario(dists=dist, service_model=SERVER_DEPENDENT, mix=0.7,
+                 ks=(2,)),
+    )
+
+
+def _timed_scenarios(dist):
+    return [
+        Scenario(dists=dist, policy=Policy.TIMEOUT_RETRY, delay=1.5,
+                 ks=(2,)),
+        Scenario(dists=dist, policy=Policy.HEDGE_AFTER_DELAY, delay=0.7,
+                 ks=(2,)),
+        Scenario(dists=dist, policy=Policy.HEDGE_AFTER_DELAY, delay=0.7,
+                 service_model=SERVER_DEPENDENT, mix=0.7, ks=(2,),
+                 degradation=Degradation(p_slow=0.1, slow_factor=3.0,
+                                         p_fail=0.05)),
+        Scenario(dists=dist, service_model=SERVER_DEPENDENT, mix=0.7,
+                 ks=(1, 2)),
+    ]
+
+
+class TestHealthyBitIdentity:
+    @pytest.mark.parametrize("run_name,kw", [
+        ("unchunked_off", dict(chunk_size=None, kernel="off")),
+        ("chunked_off", dict(chunk_size=1536, kernel="off")),
+        ("unchunked_interp", dict(chunk_size=None, kernel="interpret")),
+    ])
+    def test_golden_capture(self, run_name, kw):
+        gold = np.load(GOLD)
+        out = queueing.run(KEY, _golden_scenarios(), RHOS, CFG, n_seeds=2,
+                           percentiles=(50.0, 99.0), **kw)
+        for stat in ("mean", "p50", "p99"):
+            np.testing.assert_array_equal(
+                np.asarray(out[stat]), gold[f"{run_name}/{stat}"],
+                err_msg=f"{run_name}/{stat} drifted from pre-PR-7 bits")
+        # healthy cells lose nothing: completed == static offered count
+        np.testing.assert_array_equal(
+            np.asarray(out["completed"]),
+            np.broadcast_to(np.asarray(out["count"], np.float32),
+                            np.asarray(out["completed"]).shape))
+
+    def test_degraded_variant_leaves_healthy_cells_untouched(self):
+        dist = exponential()
+        healthy = [Scenario.paper_default(dist, ks=(1, 2))]
+        mixed = healthy + [Scenario(
+            dists=dist, ks=(2,),
+            degradation=Degradation(p_slow=0.2, slow_factor=4.0,
+                                    p_fail=0.1))]
+        a = queueing.run(KEY, healthy, RHOS, CFG, n_seeds=2,
+                         percentiles=(99.0,))
+        b = queueing.run(KEY, mixed, RHOS, CFG, n_seeds=2,
+                         percentiles=(99.0,))
+        for stat in ("mean", "p99", "completed"):
+            np.testing.assert_array_equal(
+                np.asarray(a[stat]), np.asarray(b[stat])[:, :, :2],
+                err_msg=f"degraded neighbour changed healthy {stat} bits")
+        # and the degraded cell actually loses requests
+        assert (np.asarray(b["completed"])[:, :, 2]
+                < np.asarray(b["count"])).all()
+
+
+class TestHedgeDelayZero:
+    @pytest.mark.parametrize("mode", ["off", "interpret"])
+    @pytest.mark.parametrize("degraded", [False, True])
+    def test_bitwise_replicate_all(self, mode, degraded):
+        dist = exponential()
+        kw = ({"degradation": Degradation(p_slow=0.15, slow_factor=4.0,
+                                          p_fail=0.1)}
+              if degraded else {})
+        scns = [
+            Scenario(dists=dist, policy=Policy.HEDGE_AFTER_DELAY,
+                     delay=0.0, ks=(2,), **kw),
+            Scenario(dists=dist, policy=Policy.REPLICATE_ALL, ks=(2,),
+                     **kw),
+        ]
+        out = queueing.run(jax.random.PRNGKey(11), scns, RHOS, CFG,
+                           n_seeds=2, percentiles=(50.0, 99.0),
+                           kernel=mode)
+        for stat in ("mean", "p50", "p99", "completed"):
+            s = np.asarray(out[stat])
+            np.testing.assert_array_equal(
+                s[:, :, 0], s[:, :, 1],
+                err_msg=f"HEDGE(d=0) != REPLICATE_ALL on {stat} "
+                        f"(mode={mode}, degraded={degraded})")
+
+
+class TestTimedPolicyParity:
+    def test_scan_vs_interpret_kernel(self):
+        scns = _timed_scenarios(exponential())
+        outs = {m: queueing.run(KEY, scns, RHOS, CFG, n_seeds=2,
+                                percentiles=(50.0, 99.0), kernel=m)
+                for m in ("off", "interpret")}
+        for stat in ("mean", "p50", "p99", "completed"):
+            np.testing.assert_array_equal(
+                np.asarray(outs["off"][stat]),
+                np.asarray(outs["interpret"][stat]),
+                err_msg=f"scan vs kernel drift on {stat}")
+
+    def test_sharded_parity(self):
+        # 1-device "cells" mesh: full shard_map machinery in-process
+        # (the test_sweep_shard idiom)
+        scns = _timed_scenarios(exponential())
+        cfg = queueing.SimConfig(n_servers=6, n_arrivals=2048)
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("cells",))
+        base = queueing.run(KEY, scns, RHOS, cfg, n_seeds=2,
+                            percentiles=(99.0,))
+        shrd = queueing.run(KEY, scns, RHOS, cfg, n_seeds=2,
+                            percentiles=(99.0,), mesh=mesh)
+        for stat in ("mean", "p99", "completed"):
+            np.testing.assert_array_equal(
+                np.asarray(base[stat]), np.asarray(shrd[stat]),
+                err_msg=f"sharded vs unsharded drift on {stat}")
+
+
+class TestTimedPolicyPhysics:
+    DELAYS = (0.0, 0.5, 1.0, 2.0)
+
+    @pytest.fixture(scope="class")
+    def light_load_means(self):
+        dist = exponential()
+        cfg = queueing.SimConfig(n_servers=10, n_arrivals=20_000)
+        scns = [Scenario(dists=dist, policy=Policy.HEDGE_AFTER_DELAY,
+                         delay=d, ks=(2,)) for d in self.DELAYS]
+        scns += [
+            Scenario(dists=dist, policy=Policy.TIMEOUT_RETRY, delay=1.0,
+                     ks=(2,)),
+            Scenario(dists=dist, policy=Policy.TIMEOUT_RETRY, delay=1.0,
+                     ks=(2,), degradation=Degradation(p_fail=0.3)),
+        ]
+        out = queueing.run(jax.random.PRNGKey(5), scns,
+                           jnp.asarray((0.01,)), cfg, n_seeds=4,
+                           percentiles=())
+        return out, np.asarray(out["mean"]).mean(axis=0)[0]
+
+    def test_hedge_matches_closed_form(self, light_load_means):
+        _, means = light_load_means
+        for i, d in enumerate(self.DELAYS):
+            np.testing.assert_allclose(
+                means[i], float(analytic.hedge_mean_light(d)), rtol=0.04)
+
+    def test_hedge_delay_monotone(self, light_load_means):
+        _, means = light_load_means
+        assert (np.diff(means[:len(self.DELAYS)]) > 0).all()
+
+    def test_retry_matches_closed_form(self, light_load_means):
+        _, means = light_load_means
+        np.testing.assert_allclose(
+            means[4], float(analytic.retry_mean_light(1.0, 0.0)),
+            rtol=0.04)
+        np.testing.assert_allclose(
+            means[5], float(analytic.retry_mean_light(1.0, 0.3)),
+            rtol=0.04)
+
+    def test_retry_always_completes(self, light_load_means):
+        # the last in-budget attempt is blackhole-exempt, so even a
+        # faulty retry cell completes every request
+        out, _ = light_load_means
+        np.testing.assert_array_equal(
+            np.asarray(out["completed"])[:, :, 5],
+            np.broadcast_to(np.asarray(out["count"], np.float32),
+                            np.asarray(out["completed"])[:, :, 5].shape))
+
+    def test_blackhole_only_grid_loses_requests(self):
+        # k=1 REPLICATE_ALL with p_fail: completed/count ~ 1 - p_fail
+        dist = exponential()
+        cfg = queueing.SimConfig(n_servers=6, n_arrivals=8192)
+        scn = Scenario(dists=dist, ks=(1,),
+                       degradation=Degradation(p_fail=0.25))
+        out = queueing.run(jax.random.PRNGKey(2), [scn],
+                           jnp.asarray((0.2,)), cfg, n_seeds=4,
+                           percentiles=())
+        frac = (np.asarray(out["completed"]).mean()
+                / float(np.asarray(out["count"])))
+        assert abs(frac - 0.75) < 0.03
+        assert np.isfinite(np.asarray(out["mean"])).all()
+
+
+class TestStragglers:
+    def test_stragglers_inflate_tail_hedging_masks_them(self):
+        # a 5% x8 straggler mix wrecks the k=1 p99; hedging with a
+        # short delay recovers most of it (the paper's fault-masking
+        # story at the engine level; with p_slow=0.05 a double-straggle
+        # is 0.25% — beyond the p99 the hedge is judged on)
+        dist = exponential()
+        cfg = queueing.SimConfig(n_servers=10, n_arrivals=8192)
+        deg = Degradation(p_slow=0.05, slow_factor=8.0)
+        scns = [
+            Scenario(dists=dist, ks=(1,)),
+            Scenario(dists=dist, ks=(1,), degradation=deg),
+            Scenario(dists=dist, policy=Policy.HEDGE_AFTER_DELAY,
+                     delay=1.0, ks=(2,), degradation=deg),
+        ]
+        out = queueing.run(jax.random.PRNGKey(9), scns,
+                           jnp.asarray((0.2,)), cfg, n_seeds=4,
+                           percentiles=(99.0,))
+        p99 = np.asarray(out["p99"]).mean(axis=0)[0]
+        clean, straggled, hedged = p99
+        assert straggled > 2.0 * clean
+        assert hedged < 0.5 * straggled

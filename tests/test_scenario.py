@@ -378,11 +378,12 @@ class TestVariantPlumbing:
         from repro.core import cellplan
         plan = cellplan.make_cell_plan(1, 2, 2)
         cfg = dataclasses.replace(CFG, client_overhead=0.5)
-        rates, k_mask, ovh, mix = queueing._plan_cell_params(
-            plan, RHOS, cfg, (1, 2))
-        v_rates, v_k_mask, v_ovh, v_mix = queueing._plan_cell_params(
+        legacy = queueing._plan_cell_params(plan, RHOS, cfg, (1, 2))
+        via_variants = queueing._plan_cell_params(
             plan, RHOS, cfg, (Variant(k=1, overhead=0.5),
                               Variant(k=2, overhead=0.5)))
-        for a, b in ((rates, v_rates), (k_mask, v_k_mask), (ovh, v_ovh),
-                     (mix, v_mix)):
+        # 8 per-cell params: rates, k_mask, overhead, mix, p_slow,
+        # slow_factor, p_fail, delay — identical either way
+        assert len(legacy) == len(via_variants) == 8
+        for a, b in zip(legacy, via_variants):
             assert jnp.array_equal(a, b)

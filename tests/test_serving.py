@@ -1,4 +1,5 @@
-"""Serving-layer tests: engine correctness, hedged scheduler semantics."""
+"""Serving-layer tests: engine correctness, hedged scheduler semantics,
+fault injection and elastic chaos (replica killed mid-trace)."""
 import threading
 import time
 
@@ -10,7 +11,8 @@ from repro.configs import get_smoke_config
 from repro.core.hedging import HedgePolicy, LoadMeter
 from repro.models import lm
 from repro.serving.engine import InferenceEngine, SimulatedEngine
-from repro.serving.scheduler import HedgedScheduler
+from repro.serving.faults import FaultInjector, ReplicaCrashed
+from repro.serving.scheduler import HedgedScheduler, RetryPolicy
 
 
 def make_sim(mean_s=0.01, tail_s=0.3, tail_p=0.0, seed=0):
@@ -134,3 +136,177 @@ class TestHedgedScheduler:
         l1, l2 = run(1), run(2)
         assert np.percentile(l2, 90) < np.percentile(l1, 90)
         assert np.mean(l2) < np.mean(l1)
+
+
+class TestSchedulerRobustness:
+    def test_shutdown_idempotent(self):
+        sched = HedgedScheduler([SimulatedEngine(lambda: 0.01, name="a")])
+        sched.shutdown()
+        sched.shutdown()  # must be a no-op, not an error
+
+    def test_retry_policy_resends_after_deadline(self):
+        # first attempt lands on a stalled replica; the resend completes
+        inj = FaultInjector()
+        engines = [inj.wrap(SimulatedEngine(lambda: 0.01, name=f"s{i}"))
+                   for i in range(2)]
+        inj.stall("s0")
+        sched = HedgedScheduler(engines, seed=3)
+        try:
+            # force the primary onto the stalled replica: retry with a
+            # short deadline must fail over to the healthy one
+            done = 0
+            for _ in range(6):
+                req = sched.submit(
+                    np.zeros(2, np.int32), timeout=5.0,
+                    retry=RetryPolicy(deadline=0.05, max_retries=2))
+                assert req.completed_by == "s1"
+                done += 1
+            assert done == 6
+            assert sched.stats["hedged"] == 0  # baseline never hedges
+            # with 2 replicas and a stalled s0, roughly half the
+            # primaries land on s0 and need a resend
+            assert sched.stats["retries"] >= 1
+        finally:
+            sched.shutdown()
+            inj.heal("s0")
+
+    def test_hedge_after_delay_defers_duplicates(self):
+        # fast primaries: with a generous hedge delay no duplicate is
+        # ever issued; with delay 0 every request is hedged
+        engines = [SimulatedEngine(lambda: 0.005, name=f"s{i}")
+                   for i in range(3)]
+        sched = HedgedScheduler(
+            engines, policy=HedgePolicy(max_k=2, threshold=1.1),
+            hedge_delay=0.5, seed=4)
+        try:
+            for _ in range(5):
+                sched.submit(np.zeros(2, np.int32), timeout=5.0)
+            assert sched.stats["hedged"] == 0
+            for _ in range(5):
+                sched.submit(np.zeros(2, np.int32), timeout=5.0,
+                             hedge_delay=0.0)
+            assert sched.stats["hedged"] == 5
+        finally:
+            sched.shutdown()
+
+    def test_hedge_after_delay_rescues_straggler(self):
+        # slow primary, short hedge delay: the duplicate fires and wins
+        inj = FaultInjector()
+        engines = [inj.wrap(SimulatedEngine(lambda: 0.01, name=f"s{i}"))
+                   for i in range(2)]
+        inj.slow("s0", 100.0)
+        sched = HedgedScheduler(
+            engines, policy=HedgePolicy(max_k=2, threshold=1.1),
+            hedge_delay=0.05, tied_cancel=True, seed=5)
+        try:
+            lats = [sched.submit(np.zeros(2, np.int32), timeout=5.0).latency
+                    for _ in range(6)]
+            # every request completes well under the 1 s straggled time
+            assert max(lats) < 0.5
+        finally:
+            sched.shutdown()
+            inj.heal("s0")
+
+    def test_shed_watermark_disables_duplicates(self):
+        engines = [SimulatedEngine(lambda: 0.005, name=f"s{i}")
+                   for i in range(2)]
+        sched = HedgedScheduler(
+            engines, policy=HedgePolicy(max_k=2, threshold=1.1),
+            shed_watermark=0.0, seed=6)   # always above the watermark
+        try:
+            sched.submit(np.zeros(2, np.int32), timeout=5.0)
+            assert sched.stats["shed"] == 1
+            assert sched.stats["hedged"] == 0
+        finally:
+            sched.shutdown()
+
+    def test_remove_replica_requeues_pending_work(self):
+        # fill a worker's queue while it is stalled, then remove it:
+        # the queued copies must land on the survivor and complete
+        inj = FaultInjector()
+        engines = [inj.wrap(SimulatedEngine(lambda: 0.005, name=f"s{i}"))
+                   for i in range(2)]
+        inj.stall("s0")
+        sched = HedgedScheduler(
+            engines, policy=HedgePolicy(max_k=2, threshold=1.1), seed=7)
+        try:
+            reqs, threads = [], []
+
+            def go():
+                reqs.append(sched.submit(np.zeros(2, np.int32),
+                                         timeout=10.0))
+
+            for _ in range(4):
+                t = threading.Thread(target=go)
+                t.start()
+                threads.append(t)
+            time.sleep(0.2)      # let copies queue up behind the stall
+            assert sched.remove_replica("s0")
+            for t in threads:
+                t.join(timeout=10.0)
+            assert len(reqs) == 4
+            assert all(r.completed_by == "s1" for r in reqs)
+        finally:
+            sched.shutdown()
+            inj.heal("s0")
+
+
+class TestFaultInjector:
+    def test_crash_raises_and_heal_restores(self):
+        inj = FaultInjector()
+        eng = inj.wrap(SimulatedEngine(lambda: 0.005, name="x"))
+        inj.crash("x")
+        with pytest.raises(ReplicaCrashed):
+            eng.generate(np.zeros(2, np.int32), 2)
+        inj.heal("x")
+        assert eng.generate(np.zeros(2, np.int32), 2) is not None
+
+    def test_slow_inflates_service_time(self):
+        inj = FaultInjector()
+        eng = inj.wrap(SimulatedEngine(lambda: 0.02, name="x"))
+        t0 = time.monotonic()
+        eng.generate(np.zeros(2, np.int32), 2)
+        base = time.monotonic() - t0
+        inj.slow("x", 5.0)
+        t0 = time.monotonic()
+        eng.generate(np.zeros(2, np.int32), 2)
+        slowed = time.monotonic() - t0
+        assert slowed > 2.0 * base
+
+    def test_scheduled_crash_fires_later(self):
+        inj = FaultInjector()
+        eng = inj.wrap(SimulatedEngine(lambda: 0.001, name="x"))
+        inj.crash("x", after=0.15)
+        assert eng.generate(np.zeros(2, np.int32), 2) is not None
+        time.sleep(0.3)
+        with pytest.raises(ReplicaCrashed):
+            eng.generate(np.zeros(2, np.int32), 2)
+
+
+class TestElasticChaos:
+    @pytest.mark.parametrize("tied_cancel", [False, True])
+    def test_replica_killed_mid_trace(self, tied_cancel):
+        # 4 replicas, a trace of requests; mid-trace one replica is
+        # crashed AND removed. Every request must complete: in-flight
+        # copies on the victim are masked by their hedged sibling,
+        # queued copies are requeued by remove_replica.
+        inj = FaultInjector()
+        engines = [inj.wrap(SimulatedEngine(make_sim(0.01, seed=i),
+                                            name=f"s{i}"))
+                   for i in range(4)]
+        sched = HedgedScheduler(
+            engines, policy=HedgePolicy(max_k=2, threshold=1.1),
+            tied_cancel=tied_cancel, seed=8)
+        try:
+            reqs = []
+            for i in range(30):
+                if i == 10:
+                    inj.crash("s1")          # dies with work in flight
+                    assert sched.remove_replica("s1")
+                reqs.append(sched.submit(np.zeros(2, np.int32),
+                                         timeout=10.0))
+            assert len(reqs) == 30
+            assert all(r.done_event.is_set() for r in reqs)
+            assert all(r.completed_by != "s1" for r in reqs[10:])
+        finally:
+            sched.shutdown()
