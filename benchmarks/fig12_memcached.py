@@ -2,37 +2,47 @@
 replication a net loss beyond ~10% load; the stub measurement bounds the
 overhead at ~9% of mean service.
 
-The gain curve comes from one fused ``queueing.sweep`` over
-(seeds x loads x {k=1, k=2}); pass ``chunk_size`` to stream arrivals
-through the chunked engine (None preserves the pre-sampled behavior)."""
+The memcached service model is fitted once into a unit-mean
+quantile-table ``EmpiricalDist`` (``storage_sim.empirical_service_dist``)
+and the gain curve comes from one ``threshold.scenario_gain`` engine
+call over (seeds x loads x {k=1, k=2}); pass ``chunk_size`` to stream
+arrivals through the chunked engine (None preserves the pre-sampled
+behavior)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, timed
-from repro.core import queueing, storage_sim
+from repro.core import queueing, scenario as scn_mod, storage_sim, threshold
+from repro.core.scenario import Scenario
+from repro.kernels.cell_update import resolve_kernel_mode
 
 
-def run(smoke: bool = False,
-        chunk_size: int | None = None) -> list[Row]:
+def run(smoke: bool = False, chunk_size: int | None = None,
+        mesh=None, kernel: str = "auto") -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(5)
-    dist, ms_scale, ovh = storage_sim.service_dist(storage_sim.MEMCACHED)
+    resolved = resolve_kernel_mode(kernel)
+    mesh_shape = tuple(mesh.devices.shape) if mesh is not None else None
+    dist, ms_scale, ovh = storage_sim.empirical_service_dist(
+        storage_sim.MEMCACHED)
+    scn = Scenario(dists=dist, ks=(1, 2), client_overhead=ovh)
     loads = jnp.asarray([0.1, 0.3, 0.5, 0.7, 0.9])
     cfg = queueing.SimConfig(n_servers=20,
-                             n_arrivals=4_000 if smoke else 60_000,
-                             client_overhead=ovh)
+                             n_arrivals=4_000 if smoke else 60_000)
 
     def work():
-        return queueing.replication_gain(key, dist, loads, cfg, n_seeds=2,
-                                         chunk_size=chunk_size)
+        return threshold.scenario_gain(key, scn, loads, cfg, n_seeds=2,
+                                       chunk_size=chunk_size, mesh=mesh,
+                                       kernel=resolved)
 
     g, us = timed(work)
     for i, rho in enumerate(loads):
         rows.append((f"fig12/memcached/rho={float(rho):.1f}", us / 5,
                      f"gain_ms={float(g[i]) * ms_scale:.4f};"
-                     f"helps={bool(g[i] > 0)}"))
+                     f"helps={bool(g[i] > 0)}",
+                     mesh_shape, scn_mod.provenance(scn), resolved))
     # fig13: the stub version quantifies the client-side overhead fraction
     rows.append(("fig13/stub_overhead", 0.0,
                  f"overhead_frac={ovh:.3f};mean_service_ms={ms_scale:.3f}"))

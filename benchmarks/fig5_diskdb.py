@@ -1,17 +1,25 @@
-"""Figures 5-11: the disk-backed database study, reproduced by running the
-paper-calibrated storage service-time models through the §2.1 queueing
-simulator. One variant per paper figure.
+"""Figures 5-11: the disk-backed database study — all seven paper
+variants as ONE heterogeneous mixed grid.
 
-Per variant: one fused ``queueing.sweep`` (k=1 and k=2 together, streaming
-percentiles) plus one fused threshold sweep. The client overhead is a
-traced scalar, so all seven variants share engine compilations."""
+Each variant's paper-calibrated storage model is fitted once into a
+unit-mean quantile-table ``EmpiricalDist`` (``storage_sim
+.empirical_service_dist``), wrapped in a single-dist ``Scenario`` with
+its own client overhead, and the whole sequence runs through ONE
+``queueing.run`` call: "which storage variant" is just the per-cell
+``dist_id`` coordinate, so the seven variants share one compiled scan
+(or kernel) instead of seven re-traces. Thresholds come from ONE
+mixed-grid ``threshold.scenario_gain`` call over the load grid —
+seven gain curves from one engine execution — read off per variant
+with ``threshold.crossing_load``."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, timed
-from repro.core import queueing, storage_sim, threshold
+from repro.core import queueing, scenario as scn_mod, storage_sim, threshold
+from repro.core.scenario import Scenario
+from repro.kernels.cell_update import resolve_kernel_mode
 
 VARIANTS = {
     "fig5_base": storage_sim.StorageConfig(),
@@ -26,31 +34,45 @@ VARIANTS = {
 LOADS = jnp.asarray([0.1, 0.2, 0.3, 0.4])
 
 
-def run(smoke: bool = False) -> list[Row]:
+def run(smoke: bool = False, mesh=None, kernel: str = "auto") -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(4)
+    resolved = resolve_kernel_mode(kernel)
+    mesh_shape = tuple(mesh.devices.shape) if mesh is not None else None
     variants = (dict(list(VARIANTS.items())[:2]) if smoke else VARIANTS)
-    for name, scfg in variants.items():
-        dist, ms_scale, ovh = storage_sim.service_dist(scfg)
-        cfg = queueing.SimConfig(n_servers=20,
-                                 n_arrivals=4_000 if smoke else 60_000,
-                                 client_overhead=ovh)
+    fits = [storage_sim.empirical_service_dist(scfg)
+            for scfg in variants.values()]
+    scns = tuple(Scenario(dists=dist, ks=(1, 2), client_overhead=ovh)
+                 for dist, _, ovh in fits)
+    cfg = queueing.SimConfig(n_servers=20,
+                             n_arrivals=4_000 if smoke else 60_000)
+    rhos = jnp.linspace(0.05, 0.495, 8 if smoke else 24)
 
-        def work(dist=dist, cfg=cfg):
-            s = queueing.sweep(key, dist, LOADS, cfg, ks=(1, 2), n_seeds=1)
-            t = threshold.threshold_grid(key, dist, cfg, n_seeds=1)
-            return s, t
+    def work():
+        # ONE mixed-grid sweep (percentiles) + ONE mixed-grid gain curve:
+        # every storage variant is a dist_id coordinate of the same
+        # compiled engine call.
+        s = queueing.run(key, scns, LOADS, cfg, n_seeds=1, mesh=mesh,
+                         kernel=resolved)
+        g = threshold.scenario_gain(key, scns, rhos, cfg, n_seeds=1,
+                                    mesh=mesh, kernel=resolved)
+        return s, g
 
-        (s, t), us = timed(work)
-        m1 = float(s["mean"][0, 0, 0]) * ms_scale
-        m2 = float(s["mean"][0, 0, 1]) * ms_scale
-        p99_1 = float(s["p99"][0, 1, 0]) * ms_scale
-        p99_2 = float(s["p99"][0, 1, 1]) * ms_scale
-        p999_1 = float(s["p99.9"][0, 0, 0]) * ms_scale
-        p999_2 = float(s["p99.9"][0, 0, 1]) * ms_scale
-        rows.append((f"fig5-11/{name}", us,
+    (s, g), us = timed(work)
+    for i, (name, (dist, ms_scale, ovh)) in enumerate(
+            zip(variants, fits)):
+        c1, c2 = 2 * i, 2 * i + 1  # paired (k=1, k=2) variant columns
+        t = threshold.crossing_load(rhos, g[:, i])
+        m1 = float(s["mean"][0, 0, c1]) * ms_scale
+        m2 = float(s["mean"][0, 0, c2]) * ms_scale
+        p99_1 = float(s["p99"][0, 1, c1]) * ms_scale
+        p99_2 = float(s["p99"][0, 1, c2]) * ms_scale
+        p999_1 = float(s["p99.9"][0, 0, c1]) * ms_scale
+        p999_2 = float(s["p99.9"][0, 0, c2]) * ms_scale
+        rows.append((f"fig5-11/{name}", us / len(fits),
                      f"threshold={t:.2f};mean@0.1={m1:.2f}->{m2:.2f}ms;"
                      f"p99@0.2={p99_1:.1f}->{p99_2:.1f}ms;"
                      f"p999@0.1_ratio={p999_1 / max(p999_2, 1e-9):.2f}x;"
-                     f"overhead_frac={ovh:.3f}"))
+                     f"overhead_frac={ovh:.3f}",
+                     mesh_shape, scn_mod.provenance(scns[i]), resolved))
     return rows

@@ -14,8 +14,10 @@ comparable across machines AND across points of the policy space.
 ``--smoke`` runs every module at tiny sizes — CI uses ``--json --smoke``
 to refresh the perf-trajectory artifact on every push without paying for
 full-size sweeps. ``--devices N`` builds an N-way ``"cells"`` sweep mesh
-and hands it to mesh-aware modules (currently ``sweep_engine``), which
-then emit sharded rows; on CPU export
+and hands it to mesh-aware modules (``sweep_engine`` plus the
+empirical-system figures ``fig5_diskdb`` / ``fig12_memcached`` /
+``fig15_dns`` / ``fig_cross_system``), which then emit sharded rows; on
+CPU export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 ``--kernel {auto,on,off}`` picks the engine's fused cell-update kernel
 mode for kernel-aware modules (``sweep_engine``, ``fig_policy_space``;
@@ -70,14 +72,15 @@ def main() -> None:
 
     from benchmarks import (fig1_queueing, fig2_threshold, fig3_random,
                             fig4_overhead, fig5_diskdb, fig12_memcached,
-                            fig14_network, fig15_dns, fig_fault_masking,
-                            fig_policy_space, roofline, serving_hedge,
-                            sweep_engine, tab_tcp)
+                            fig14_network, fig15_dns, fig_cross_system,
+                            fig_fault_masking, fig_policy_space, roofline,
+                            serving_hedge, sweep_engine, tab_tcp)
     from benchmarks.common import row_provenance
     modules = [sweep_engine, fig_policy_space, fig1_queueing,
                fig2_threshold, fig3_random, fig4_overhead, fig5_diskdb,
-               fig12_memcached, fig14_network, fig15_dns, tab_tcp,
-               fig_fault_masking, serving_hedge, roofline]
+               fig12_memcached, fig14_network, fig15_dns,
+               fig_cross_system, tab_tcp, fig_fault_masking,
+               serving_hedge, roofline]
 
     provenance = {"backend": jax.default_backend(),
                   "device_count": jax.device_count()}

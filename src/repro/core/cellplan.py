@@ -60,6 +60,7 @@ class CellPlan:
     valid: Array       # (n_padded,) bool  — False for pad cells
     policy_code: Array  # (n_padded,) int32 — scenario.Policy per cell
     model_code: Array   # (n_padded,) int32 — scenario.ServiceModel per cell
+    dist_id: Array      # (n_padded,) int32 — dist-union index per cell
 
     @property
     def stacked_shape(self) -> tuple[int, int, int]:
@@ -68,7 +69,8 @@ class CellPlan:
 
 def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
                    pad_to: int = 1,
-                   policies=None, models=None) -> CellPlan:
+                   policies=None, models=None,
+                   dist_ids=None) -> CellPlan:
     """Flatten an (S, B, K) grid into a padded cell axis.
 
     Cell ``c`` maps to coordinates ``(c // (B*K), (c // K) % B, c % K)``
@@ -77,17 +79,18 @@ def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
     multiple of ``pad_to``) copy cell 0's coordinates and are flagged
     ``valid=False``.
 
-    ``policies`` / ``models`` are per-VARIANT code sequences of length
-    ``n_ks`` (``repro.core.scenario`` ints); each cell inherits the
-    codes of its variant slot, pad cells inherit cell 0's. ``None``
-    means all cells run the paper default (code 0: replicate-all,
-    i.i.d. service).
+    ``policies`` / ``models`` / ``dist_ids`` are per-VARIANT code
+    sequences of length ``n_ks`` (``repro.core.scenario`` ints); each
+    cell inherits the codes of its variant slot, pad cells inherit cell
+    0's. ``None`` means all cells run the paper default (code 0:
+    replicate-all, i.i.d. service, dist-union slot 0).
     """
     if min(n_seeds, n_loads, n_ks, pad_to) < 1:
         raise ValueError(
             f"all plan axes must be >= 1, got {(n_seeds, n_loads, n_ks)} "
             f"pad_to={pad_to}")
-    for name, codes in (("policies", policies), ("models", models)):
+    for name, codes in (("policies", policies), ("models", models),
+                        ("dist_ids", dist_ids)):
         if codes is not None and len(codes) != n_ks:
             raise ValueError(f"{name} must have one code per variant "
                              f"({n_ks}), got {len(codes)}")
@@ -103,6 +106,8 @@ def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
         [int(p) for p in policies], np.int32)
     model = np.zeros(n_ks, np.int32) if models is None else np.asarray(
         [int(m) for m in models], np.int32)
+    did = np.zeros(n_ks, np.int32) if dist_ids is None else np.asarray(
+        [int(d) for d in dist_ids], np.int32)
     return CellPlan(
         n_seeds=n_seeds, n_loads=n_loads, n_ks=n_ks,
         n_cells=n_cells, n_padded=n_padded,
@@ -111,7 +116,8 @@ def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
         k_idx=jnp.asarray(k_idx, jnp.int32),
         valid=jnp.asarray(c < n_cells),
         policy_code=jnp.asarray(policy[k_idx], jnp.int32),
-        model_code=jnp.asarray(model[k_idx], jnp.int32))
+        model_code=jnp.asarray(model[k_idx], jnp.int32),
+        dist_id=jnp.asarray(did[k_idx], jnp.int32))
 
 
 def unflatten(plan: CellPlan, x: Array) -> Array:

@@ -20,6 +20,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import distributions
+
 Array = jax.Array
 
 TIMEOUT_MS = 2000.0
@@ -83,6 +85,28 @@ def replicated_response(lat: Array, ranking: Array, k: int) -> Array:
     """Stage 2: query the top-k ranked servers in parallel, take the min."""
     top = ranking[:k]
     return jnp.min(lat[:, top], axis=1)
+
+
+def empirical_k_dists(key: Array, pop: DNSPopulation,
+                      ks=range(1, 11), *, n_samples: int = 200_000,
+                      n_quantiles: int = 512
+                      ) -> tuple[distributions.EmpiricalDist, ...]:
+    """Fit one unit-mean quantile-table ``EmpiricalDist`` per replication
+    level: rank the population once, sample one shared latency table,
+    and fit ``distributions.empirical`` on ``min`` over the top-k
+    servers for each ``k``. Fitting the *min* (rather than composing
+    per-server fits) preserves the shared-component correlation that
+    bounds the k=10 tail. The fits are engine food — e.g. the Fig 15
+    benchmark runs all ten as one heterogeneous mixed grid, and each
+    fit's ``.scale`` recovers milliseconds."""
+    k_rank, k_lat = jax.random.split(key)
+    ranking = rank_servers(k_rank, pop)
+    lat = sample_latencies(k_lat, pop, int(n_samples))
+    return tuple(
+        distributions.empirical(replicated_response(lat, ranking, k),
+                                n_quantiles=n_quantiles,
+                                name=f"dns(k={int(k)})")
+        for k in ks)
 
 
 def marginal_savings_ms_per_kb(means: Array, pop: DNSPopulation) -> Array:

@@ -79,9 +79,10 @@ class HedgePolicy:
     def k_for(self, utilization: float) -> int:
         if self.client_overhead_frac >= self.overhead_cutoff:
             return 1
-        # duplicating multiplies utilization by k; stay under the threshold.
+        # duplicating multiplies utilization by k; pick the largest k
+        # whose k-fold load stays under the threshold.
         k = self.max_k
-        while k > 1 and utilization >= self.threshold:
+        while k > 1 and k * utilization >= self.threshold:
             k -= 1
         return k
 

@@ -71,7 +71,6 @@ def _links_for_path(src: int, dst: int, up1: int, up2: int) -> list[int]:
         out.append(L_AE + agg_s * 3 + (ed % 3))
         out.append(L_EH + dst)
         return out
-    core = up1 * 3 + up2           # agg position up1 connects cores 3*up1..
     agg_d = pd * 3 + up1
     out.append(L_EA + es * 3 + up1)
     out.append(L_AC + agg_s * 3 + up2)
@@ -206,7 +205,10 @@ def _simulate(meta: Array, paths: Array, lens: Array, *, n_slots: int,
 
 
 def flow_completion_times(cfg: NetConfig, n_slots: int | None = None):
-    """Run the sim; returns (fct_slots (n_flows,), sizes, short_mask)."""
+    """Run the sim; returns (fct_slots (n_flows,), sizes, short_mask,
+    undelivered_mask). FCTs are RELATIVE slots (completion - start + 1);
+    undelivered flows are censored at the horizon in the same units
+    (n_slots - start)."""
     meta, paths, lens, sizes, starts = build_workload(cfg)
     if n_slots is None:
         n_slots = int(starts.max() + sizes.max() * 3 + 8 * cfg.rto_slots)
@@ -229,7 +231,11 @@ def flow_completion_times(cfg: NetConfig, n_slots: int | None = None):
     valid = np.arange(max_pkts)[None, :] < sizes[:, None]
     undelivered = ((best == big) & valid).any(axis=1)
     last = np.where(valid, best, -big).max(axis=1)
-    fct = np.where(undelivered, float(n_slots),
+    # Censor undelivered flows at the horizon IN RELATIVE SLOTS
+    # (n_slots - starts) so they share units with delivered flows'
+    # last - starts + 1 — the absolute n_slots would inflate censored
+    # FCTs by a start-time-dependent amount.
+    fct = np.where(undelivered, (float(n_slots) - starts).astype(np.float64),
                    last.astype(np.float64) - starts + 1.0)
     short = sizes <= 10
     return fct, sizes, short, undelivered

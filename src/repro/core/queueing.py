@@ -442,7 +442,7 @@ def _sample_sweep_inputs(key: Array, dist: ServiceDist, cfg: SimConfig,
 
 @partial(jax.jit, static_argnames=("n_servers", "n_bins", "block",
                                    "use_kernel", "has_shared",
-                                   "has_timed"))
+                                   "has_timed", "has_dists"))
 def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, cnt: Array,
                        hist: Array,
                        unit_gaps: Array, servers: Array, services: Array,
@@ -450,9 +450,11 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, cnt: Array,
                        seed_idx: Array, rates: Array, k_mask: Array,
                        ovh: Array, policy_code: Array, model_code: Array,
                        mix: Array, p_slow: Array, slow_factor: Array,
-                       p_fail: Array, delay: Array, *, n_servers: int,
+                       p_fail: Array, delay: Array, svc_idx: Array = None,
+                       *, n_servers: int,
                        n_bins: int, block: int, use_kernel: str = "off",
-                       has_shared: bool = False, has_timed: bool = False):
+                       has_shared: bool = False, has_timed: bool = False,
+                       has_dists: bool = False):
     """Scenario- and distribution-agnostic fused core over ONE chunk of
     arrivals, on a flat cell axis (see ``repro.core.cellplan``).
 
@@ -473,6 +475,15 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, cnt: Array,
     materialized. The sharded driver runs this same body per shard with
     the inputs replicated and ``seed_idx`` restricted to the local
     cells (global seed indices, sharded over the mesh).
+
+    HETEROGENEOUS grids (``has_dists=True``, per-cell ``dist_id``):
+    ``services`` carries one (n_seeds, T, n_svc) table PER dist-union
+    member stacked along axis 0, and ``svc_idx`` (C,) =
+    ``dist_id * n_seeds + seed_idx`` routes each cell's SERVICE gather
+    to its system's table — gaps/servers/rebase stay ``seed_idx``-keyed
+    (arrivals and copy sets are CRN-shared across systems). With
+    ``has_dists=False`` (the default) ``svc_idx`` is unused and the
+    compiled program is exactly the pre-dist_id one.
     ``rates``/``ovh``/``mix``/``p_slow``/``slow_factor``/``p_fail``/
     ``delay`` (C,), ``k_mask`` (C,k_max) and the ``policy_code``/
     ``model_code`` (C,) scenario coordinates are per-cell parameters
@@ -522,9 +533,9 @@ def _sweep_chunk_cells(free: Array, ssum: Array, comp: Array, cnt: Array,
         free, ssum, comp, cnt, hist, cum, warm,
         valid.astype(jnp.float32), servers, services, seed_idx,
         rates, k_mask, ovh, policy_code, model_code, mix, p_slow,
-        slow_factor, p_fail, delay,
+        slow_factor, p_fail, delay, svc_idx,
         n_servers=n_servers, n_bins=n_bins, block=block,
-        has_shared=has_shared, has_timed=has_timed)
+        has_shared=has_shared, has_timed=has_timed, has_dists=has_dists)
 
     # rebase to the chunk-end arrival time so floats stay O(chunk duration)
     free = free - (cum[:, -1][seed_idx] / rates)[:, None]
@@ -641,11 +652,18 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
     policies, models = scenario_mod.variant_codes(variants)
     plan = cellplan.make_cell_plan(
         n_seeds_total, rhos.shape[0], len(variants),
-        policies=policies, models=models)
+        policies=policies, models=models,
+        dist_ids=scenario_mod.variant_dist_ids(variants))
     (rates_c, k_mask_c, ovh_c, mix_c, pslow_c, sfac_c, pfail_c,
      delay_c) = _plan_cell_params(plan, rhos, cfg, variants)
     has_shared = scenario_mod.any_server_dependent(variants)
     has_timed = scenario_mod.any_timed(variants)
+    has_dists = scenario_mod.any_dist_ids(variants)
+    # heterogeneous grids: route each cell's service gather to its
+    # system's table row (services stacks one table per union member
+    # along the seed axis); None keeps the legacy jaxpr untouched
+    svc_idx_c = (plan.dist_id * n_seeds_total + plan.seed_idx
+                 if has_dists else None)
     warmup_start = int(m * warmup_frac)
     need_hist = len(percentiles) > 0
     t_chunk, n_chunks, block, pad = _chunk_layout(
@@ -662,10 +680,10 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
             jnp.asarray(start), jnp.asarray(min(t_chunk, m - start)),
             jnp.asarray(warmup_start), plan.seed_idx, rates_c, k_mask_c,
             ovh_c, plan.policy_code, plan.model_code, mix_c, pslow_c,
-            sfac_c, pfail_c, delay_c,
+            sfac_c, pfail_c, delay_c, svc_idx_c,
             n_servers=cfg.n_servers, n_bins=n_bins, block=block,
             use_kernel=use_kernel, has_shared=has_shared,
-            has_timed=has_timed)
+            has_timed=has_timed, has_dists=has_dists)
 
     return _finalize_summary(plan, ssum, cnt, hist, m - warmup_start,
                              percentiles)
@@ -721,6 +739,34 @@ def _sweep_dists_sampler(key: Array, dist_list, cfg: SimConfig,
     return sampler
 
 
+def _dist_table_sampler(key: Array, dist_list, cfg: SimConfig,
+                        k_max: int, n_seeds: int,
+                        chunk_size: int | None,
+                        with_shared: bool = False,
+                        with_degr: bool = False):
+    """The per-chunk sampler behind HETEROGENEOUS grids (per-cell
+    ``dist_id``). Unlike ``_sweep_dists_sampler`` it does NOT tile the
+    arrivals: gaps/servers stay (n_seeds, T) and only ``services``
+    stacks one (n_seeds, T, n_svc) table per dist-union member along
+    axis 0 — cells reach their system's table through ``svc_idx =
+    dist_id * n_seeds + seed_idx`` while sharing one arrival process and
+    copy sets (CRN across systems; dist-0 rows are bit-identical to a
+    pure single-dist run of the same key)."""
+
+    def sampler(c: int, t: int):
+        ck = _chunk_key(key, c, chunk_size)
+        ccfg = dataclasses.replace(cfg, n_arrivals=t)
+        gaps, servers = _sample_sweep_arrivals(
+            ck, cfg.n_servers, t, k_max, n_seeds)
+        services = jnp.concatenate(
+            [_sample_sweep_services(ck, dd, ccfg, k_max, n_seeds,
+                                    with_shared, with_degr)
+             for dd in dist_list], axis=0)
+        return gaps, servers, services
+
+    return sampler
+
+
 def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
         cfg: SimConfig, *, n_seeds: int = 2,
         percentiles: tuple[float, ...] = DEFAULT_PERCENTILES,
@@ -736,7 +782,14 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
     ``(n_seeds, len(rhos), n_variants)`` — for a single scenario the
     variant axis is its ``ks`` in order; a sequence concatenates each
     scenario's variants. Scenarios with multiple ``dists`` add a leading
-    dist axis (``sweep_dists`` layout):
+    dist axis (``sweep_dists`` layout). A HETEROGENEOUS sequence —
+    scenarios with DIFFERENT single dists — instead keeps the
+    ``(n_seeds, B, n_variants)`` layout: each variant carries its
+    ``dist_id`` into the deduped dist union (see ``scenario.combine``),
+    the engine samples one service table per union member, and every
+    cell's service gather routes to its system's table inside the same
+    compiled mixed grid ("which system" is just one more variant
+    coordinate):
 
       ``mean``          streaming mean response
       ``p<q>``          histogram-sketch percentile per entry of
@@ -777,27 +830,37 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
     k_max = max(v.k for v in variants)
     with_shared = scenario_mod.any_server_dependent(variants)
     with_degr = scenario_mod.any_degraded(variants)
+    has_dists = scenario_mod.any_dist_ids(variants)
     d = len(dist_list)
     if d == 1:
         sampler = _sweep_sampler(key, dist_list[0], cfg, k_max, n_seeds,
                                  chunk_size, with_shared=with_shared,
                                  with_degr=with_degr)
+    elif has_dists:
+        # heterogeneous grid: the dist union stacks service TABLES only;
+        # the plan's seed axis stays n_seeds and each cell routes to its
+        # system's table via its dist_id (no per-dist output axis — the
+        # variant axis already carries "which system")
+        sampler = _dist_table_sampler(key, dist_list, cfg, k_max, n_seeds,
+                                      chunk_size, with_shared=with_shared,
+                                      with_degr=with_degr)
     else:
         sampler = _sweep_dists_sampler(key, dist_list, cfg, k_max, n_seeds,
                                        chunk_size, with_shared=with_shared,
                                        with_degr=with_degr)
 
+    n_seeds_total = n_seeds if has_dists else d * n_seeds
     kwargs = dict(variants=variants, warmup_frac=warmup_frac,
                   percentiles=tuple(percentiles), n_bins=n_bins,
                   chunk_size=chunk_size,
                   use_kernel=cell_ops.resolve_kernel_mode(kernel))
     if mesh is not None:
         from repro.distributed.sweep_shard import _sweep_cells_sharded
-        out = _sweep_cells_sharded(sampler, d * n_seeds, rhos, cfg,
+        out = _sweep_cells_sharded(sampler, n_seeds_total, rhos, cfg,
                                    mesh=mesh, **kwargs)
     else:
-        out = _run_engine(sampler, d * n_seeds, rhos, cfg, **kwargs)
-    if d > 1:
+        out = _run_engine(sampler, n_seeds_total, rhos, cfg, **kwargs)
+    if d > 1 and not has_dists:
         out = {k: (v.reshape((d, n_seeds) + v.shape[1:])
                    if isinstance(v, jax.Array) else v)
                for k, v in out.items()}

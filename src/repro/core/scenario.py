@@ -211,6 +211,7 @@ class Variant:
     slow_factor: float = 1.0
     p_fail: float = 0.0
     delay: float = 0.0
+    dist_id: int = 0  # index into the grid's dist union ("which system")
 
     @property
     def needs_shared_draw(self) -> bool:
@@ -338,9 +339,17 @@ def combine(scenario: ScenarioLike) -> tuple[tuple[ServiceDist, ...], float,
 
     A sequence concatenates each scenario's variants along the plan's
     k-axis — mixed-policy / mixed-model grids run in ONE engine call and
-    one compiled body. All scenarios of a grid must share ``dists`` and
-    ``warmup_frac`` (they share the sampled inputs and the warmup
-    cutoff); ``ks`` / policy / model / mix / overhead vary per variant.
+    one compiled body. All scenarios of a grid must share
+    ``warmup_frac`` (they share the warmup cutoff); ``ks`` / policy /
+    model / mix / overhead vary per variant.
+
+    Scenarios may also differ in ``dists`` — the HETEROGENEOUS grid:
+    each scenario then contributes exactly one distribution ("its
+    system"), the distinct dists are deduped into a union tuple, and
+    every variant carries its ``dist_id`` index into that union as one
+    more per-cell coordinate (``repro.core.queueing`` samples one
+    service table per union member and routes each cell to its own —
+    this is how different SYSTEMS share one compiled mixed grid).
 
     Returns ``(dists, warmup_frac, variants)``.
     """
@@ -354,16 +363,30 @@ def combine(scenario: ScenarioLike) -> tuple[tuple[ServiceDist, ...], float,
                         f"Scenarios, got {scenario!r}")
     first = scns[0]
     for s in scns[1:]:
-        if s.dists != first.dists:
-            raise ValueError(
-                "all scenarios of a mixed grid must share dists "
-                f"(got {s.dists} vs {first.dists})")
         if s.warmup_frac != first.warmup_frac:
             raise ValueError(
                 "all scenarios of a mixed grid must share warmup_frac "
                 f"(got {s.warmup_frac} vs {first.warmup_frac})")
-    variants = tuple(v for s in scns for v in s.variants())
-    return first.dists, first.warmup_frac, variants
+    if all(s.dists == first.dists for s in scns):
+        # homogeneous grid: every cell reads dist stack 0 (legacy path;
+        # multi-dist stacks ride the seed axis exactly as before)
+        variants = tuple(v for s in scns for v in s.variants())
+        return first.dists, first.warmup_frac, variants
+    for s in scns:
+        if len(s.dists) != 1:
+            raise ValueError(
+                "scenarios of a heterogeneous mixed grid must each "
+                f"carry exactly one dist, got {s.dists}")
+    union: list[ServiceDist] = []
+    variants_l: list[Variant] = []
+    for s in scns:
+        d = s.dists[0]
+        if d not in union:
+            union.append(d)
+        did = union.index(d)
+        variants_l.extend(dataclasses.replace(v, dist_id=did)
+                          for v in s.variants())
+    return tuple(union), first.warmup_frac, tuple(variants_l)
 
 
 def provenance(scenario: ScenarioLike) -> Union[dict, list]:
@@ -413,3 +436,21 @@ def variant_codes(variants):
         return None, None
     return ([int(v.policy) for v in variants],
             [int(v.service_model) for v in variants])
+
+
+def variant_dist_ids(variants):
+    """Per-variant ``dist_id`` list for ``cellplan.make_cell_plan``, or
+    ``None`` (dist 0 everywhere) for a legacy ``ks`` tuple of ints."""
+    variants = tuple(variants)
+    if not variants or not isinstance(variants[0], Variant):
+        return None
+    return [int(v.dist_id) for v in variants]
+
+
+def any_dist_ids(variants) -> bool:
+    """Whether the grid is HETEROGENEOUS (some variant reads a dist
+    union slot other than 0) — a STATIC flag: the engine samples one
+    service table per union member and threads per-cell table indices
+    only then, keeping every homogeneous grid on the exact pre-dist_id
+    compiled program."""
+    return any(isinstance(v, Variant) and v.dist_id != 0 for v in variants)

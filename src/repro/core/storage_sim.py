@@ -21,6 +21,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import distributions
 from repro.core.distributions import ServiceDist
 
 Array = jax.Array
@@ -64,9 +65,14 @@ def _sample_ms(cfg: StorageConfig, key: Array, shape: tuple[int, ...]) -> Array:
     else:  # pragma: no cover - config error
         raise ValueError(f"unknown file_dist {cfg.file_dist}")
     hit = jax.random.uniform(k_hit, shape) < cfg.hit_rate
-    # seek with mean seek_ms and CV seek_cv: seek = m*(1-cv) + Exp(m*cv)
-    seek = cfg.seek_ms * (1.0 - cfg.seek_cv) + \
-        cfg.seek_ms * cfg.seek_cv * jax.random.exponential(k_seek, shape)
+    # seek with mean seek_ms and CV seek_cv: Gamma(1/cv^2) * seek_ms*cv^2
+    # (non-negative for ANY cv — the old shifted-exponential model went
+    # below zero whenever cv > 1, e.g. fig9's seek_cv=1.5)
+    if cfg.seek_cv == 0.0:
+        seek = jnp.full(shape, cfg.seek_ms)
+    else:
+        a = 1.0 / cfg.seek_cv**2
+        seek = jax.random.gamma(k_seek, a, shape) * (cfg.seek_ms / a)
     t_mem = cfg.mem_base_ms + size / cfg.mem_kb_per_ms
     t_disk = seek + size / cfg.disk_kb_per_ms
     return jnp.where(hit, t_mem, t_disk)
@@ -99,3 +105,25 @@ def service_dist(cfg: StorageConfig) -> tuple[ServiceDist, float, float]:
     dist = ServiceDist(name, sample)
     overhead = client_overhead_ms(cfg) / scale
     return dist, scale, overhead
+
+
+def empirical_service_dist(cfg: StorageConfig, key: Array | None = None, *,
+                           n_samples: int = 200_000,
+                           n_quantiles: int = 512,
+                           ) -> tuple[distributions.EmpiricalDist, float,
+                                      float]:
+    """Quantile-table twin of ``service_dist``: fit a unit-mean
+    ``EmpiricalDist`` to ``_sample_ms`` draws so the storage system rides
+    the engine's per-cell dist_id coordinate (and the fused kernel) like
+    any other distribution.
+
+    Returns ``(dist, ms_scale, normalized client overhead)`` where
+    ``ms_scale == dist.scale`` is the fitted sample mean in ms.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    ms = _sample_ms(cfg, key, (int(n_samples),))
+    name = (f"storage(file={cfg.mean_file_kb:g}KB,{cfg.file_dist},"
+            f"cache={cfg.cache_disk_ratio:g})")
+    dist = distributions.empirical(ms, n_quantiles=n_quantiles, name=name)
+    return dist, dist.scale, client_overhead_ms(cfg) / dist.scale

@@ -83,7 +83,22 @@ def scenario_gain(key: Array, dist_or_scenario, rhos: Array,
     The scenario-aware generalization of ``queueing.replication_gain``.
     ``kernel`` picks the engine's chunk-body implementation (see
     ``queueing.run``) — every mode is bit-identical, so thresholds are
-    too."""
+    too.
+
+    A SEQUENCE of single-dist Scenarios compares many SYSTEMS in one
+    mixed-grid engine call (per-cell ``dist_id``; see
+    ``scenario.combine``): each scenario is replaced with ``ks=(1, k)``,
+    the paired columns interleave on the variant axis, and the result is
+    ``(B, n_scenarios)`` — one gain curve per system, CRN-paired within
+    each system."""
+    if (not isinstance(dist_or_scenario, Scenario)
+            and isinstance(dist_or_scenario, (list, tuple))
+            and all(isinstance(s, Scenario) for s in dist_or_scenario)):
+        scns = tuple(_as_scenario(s, cfg, k) for s in dist_or_scenario)
+        out = run(key, scns, rhos, cfg, n_seeds=n_seeds, percentiles=(),
+                  chunk_size=chunk_size, mesh=mesh, kernel=kernel)
+        m = out["mean"]  # (S, B, 2 * n_scenarios), pairs interleaved
+        return jnp.mean(m[:, :, 0::2] - m[:, :, 1::2], axis=0)
     scn = _as_scenario(dist_or_scenario, cfg, k)
     out = run(key, scn, rhos, cfg, n_seeds=n_seeds, percentiles=(),
               chunk_size=chunk_size, mesh=mesh, kernel=kernel)
@@ -148,6 +163,15 @@ def threshold_bisect(key: Array, dist_or_scenario, cfg: SimConfig, *,
             level += 1
         call += 1
     return 0.5 * (a + b)
+
+
+def crossing_load(rhos: Array, g: Array) -> float:
+    """Threshold load from a sampled gain curve: linear interpolation of
+    the first sign change of ``g(rho)`` (``rhos[-1]`` if replication
+    helps everywhere sampled, ``rhos[0]`` if it never helps). The public
+    companion of ``scenario_gain`` — feed it one column of a mixed-grid
+    gain matrix to read each system's crossover off the same sweep."""
+    return _interp_crossing(rhos, g)
 
 
 def _interp_crossing(rhos: Array, g: Array) -> float:

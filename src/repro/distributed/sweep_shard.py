@@ -83,7 +83,8 @@ def _shard_map_unchecked(f, mesh, in_specs, out_specs):
 @functools.lru_cache(maxsize=None)
 def _body_fn(mesh: jax.sharding.Mesh, n_servers: int, n_bins: int,
              block: int, use_kernel: str = "off",
-             has_shared: bool = False, has_timed: bool = False):
+             has_shared: bool = False, has_timed: bool = False,
+             has_dists: bool = False):
     """Build (and cache) the jitted, shard_mapped chunk-body executor.
 
     The carry and the per-cell parameters — including the scenario
@@ -104,22 +105,22 @@ def _body_fn(mesh: jax.sharding.Mesh, n_servers: int, n_bins: int,
     """
     def chunk_body(free, ssum, comp, cnt, hist, seed_idx, rates, k_mask,
                    ovh, policy_code, model_code, mix, p_slow, slow_factor,
-                   p_fail, delay,
+                   p_fail, delay, svc_idx,
                    unit_gaps, servers, services, start, n_valid,
                    warmup_start):
         return queueing._sweep_chunk_cells(
             free, ssum, comp, cnt, hist, unit_gaps, servers, services,
             start, n_valid, warmup_start, seed_idx, rates, k_mask, ovh,
             policy_code, model_code, mix, p_slow, slow_factor, p_fail,
-            delay,
+            delay, svc_idx if has_dists else None,
             n_servers=n_servers, n_bins=n_bins, block=block,
             use_kernel=use_kernel, has_shared=has_shared,
-            has_timed=has_timed)
+            has_timed=has_timed, has_dists=has_dists)
 
     cells = P("cells")
     return jax.jit(_shard_map_unchecked(
         chunk_body, mesh,
-        in_specs=(cells,) * 16 + (P(),) * 6,
+        in_specs=(cells,) * 17 + (P(),) * 6,
         out_specs=(cells,) * 5))
 
 
@@ -147,14 +148,18 @@ def _sweep_cells_sharded(sampler, n_seeds_total: int,
     m = cfg.n_arrivals
     variants = tuple(variants)
     policies, models = scenario_mod.variant_codes(variants)
-    plan = cellplan.make_cell_plan(n_seeds_total, rhos.shape[0],
-                                   len(variants),
-                                   pad_to=mesh.devices.size,
-                                   policies=policies, models=models)
+    plan = cellplan.make_cell_plan(
+        n_seeds_total, rhos.shape[0], len(variants),
+        pad_to=mesh.devices.size, policies=policies, models=models,
+        dist_ids=scenario_mod.variant_dist_ids(variants))
     (rates_c, k_mask_c, ovh_c, mix_c, pslow_c, sfac_c, pfail_c,
      delay_c) = queueing._plan_cell_params(plan, rhos, cfg, variants)
     has_shared = scenario_mod.any_server_dependent(variants)
     has_timed = scenario_mod.any_timed(variants)
+    has_dists = scenario_mod.any_dist_ids(variants)
+    # per-cell service-table row (== seed_idx for homogeneous grids,
+    # where the body ignores it; see queueing._sweep_chunk_cells)
+    svc_idx_c = plan.dist_id * n_seeds_total + plan.seed_idx
     warmup_start = int(m * warmup_frac)
     need_hist = len(percentiles) > 0
     t_chunk, n_chunks, block, pad = queueing._chunk_layout(
@@ -162,7 +167,7 @@ def _sweep_cells_sharded(sampler, n_seeds_total: int,
     free, ssum, comp, cnt, hist = queueing._init_cell_state(
         plan, cfg, n_bins, need_hist)
     run_chunk = _body_fn(mesh, cfg.n_servers, n_bins, block, use_kernel,
-                         has_shared, has_timed)
+                         has_shared, has_timed, has_dists)
 
     for c in range(n_chunks):
         unit_gaps, servers, services = queueing._pad_chunk_inputs(
@@ -171,7 +176,7 @@ def _sweep_cells_sharded(sampler, n_seeds_total: int,
         free, ssum, comp, cnt, hist = run_chunk(
             free, ssum, comp, cnt, hist, plan.seed_idx, rates_c, k_mask_c,
             ovh_c, plan.policy_code, plan.model_code, mix_c, pslow_c,
-            sfac_c, pfail_c, delay_c,
+            sfac_c, pfail_c, delay_c, svc_idx_c,
             unit_gaps, servers, services, jnp.asarray(start),
             jnp.asarray(min(t_chunk, m - start)),
             jnp.asarray(warmup_start))

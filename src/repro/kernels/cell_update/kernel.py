@@ -250,7 +250,7 @@ def _cell_kernel(seed_ref, kcnt_ref, pol_ref, mdl_ref, rate_ref, ovh_ref,
 
 @functools.partial(jax.jit, static_argnames=("n_servers", "n_bins",
                                              "block_t", "interpret",
-                                             "has_shared"))
+                                             "has_shared", "has_dists"))
 def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
                    cnt: jax.Array, hist: jax.Array, cum: jax.Array,
                    warm: jax.Array, valid: jax.Array,
@@ -259,9 +259,10 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
                    policy: jax.Array, model: jax.Array, rates: jax.Array,
                    ovh: jax.Array, mix: jax.Array, p_slow: jax.Array,
                    slow_factor: jax.Array, p_fail: jax.Array,
-                   delay: jax.Array, *, n_servers: int,
+                   delay: jax.Array, svc_idx: jax.Array = None, *,
+                   n_servers: int,
                    n_bins: int, block_t: int, interpret: bool = False,
-                   has_shared: bool = False):
+                   has_shared: bool = False, has_dists: bool = False):
     """One chunk of the fused cell update. Carry free (C,N) / ssum, comp,
     cnt (C,) / hist (C, n_bins) (shape (0,0) skips the sketch); inputs
     cum (S,T) cumulative offsets, warm (T,) 0/1 post-warmup weights,
@@ -273,6 +274,15 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
     and (with the sketch) ``n_bins % 128 == 0`` — ``ops.cell_update``
     pads/validates. Returns the updated carry, free NOT yet rebased
     (the caller rebases, same as the ref).
+
+    ``has_dists`` (static) is the heterogeneous-grid path: ``services``
+    stacks one (n_seeds, T, n_svc) table per dist-union member along
+    axis 0 and ``svc_idx`` (C,) joins the scalar-prefetch operands SOLELY
+    to drive the services BlockSpec index map — the kernel BODY never
+    reads it (exactly like ``seed_idx``), each cell's grid row simply
+    streams its system's service slice. ``has_dists=False`` keeps the
+    11-operand prefetch layout, so homogeneous grids compile the exact
+    pre-dist_id program.
     """
     c_cells = free.shape[0]
     t_total = cum.shape[1]
@@ -287,6 +297,19 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
         _cell_kernel, n_servers=n_servers, k_max=k_max, n_svc=n_svc,
         block_t=block_t, n_hi=n_hi, need_hist=need_hist,
         has_shared=has_shared)
+    if has_dists:
+        # svc_idx is prefetch operand 1, for the services index map
+        # only; the body is the homogeneous kernel unchanged.
+        base_kernel = kernel
+
+        def kernel(seed_ref, svcid_ref, *rest):
+            return base_kernel(seed_ref, *rest)
+
+        def svc_time(ic, it, seed, svcid, *_):
+            return (svcid[ic], it, 0)
+    else:
+        def svc_time(ic, it, seed, *_):
+            return (seed[ic], it, 0)
 
     def cell_row(ic, it, *_):
         return (ic, 0)
@@ -309,8 +332,7 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
         pl.BlockSpec((1, block_t), lambda ic, it, *_: (0, it)),  # valid
         pl.BlockSpec((1, block_t, k_max),
                      lambda ic, it, seed, *_: (seed[ic], it, 0)),
-        pl.BlockSpec((1, block_t, n_svc),
-                     lambda ic, it, seed, *_: (seed[ic], it, 0)),
+        pl.BlockSpec((1, block_t, n_svc), svc_time),
     ]
     out_specs = [
         pl.BlockSpec((1, n_servers), cell_row),
@@ -342,16 +364,19 @@ def cell_update_tc(free: jax.Array, ssum: jax.Array, comp: jax.Array,
     operands += [cum, warm.reshape(1, t_total), valid.reshape(1, t_total),
                  servers, services]
 
+    prefetch = [seed_idx]
+    if has_dists:
+        prefetch.append(svc_idx)
+    prefetch += [k_count, policy, model, rates, ovh, mix, p_slow,
+                 slow_factor, p_fail, delay]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=11,
+        num_scalar_prefetch=len(prefetch),
         grid=(c_cells, n_tb),
         in_specs=in_specs,
         out_specs=out_specs,
         scratch_shapes=scratch)
     out = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
-                         interpret=interpret)(
-        seed_idx, k_count, policy, model, rates, ovh, mix, p_slow,
-        slow_factor, p_fail, delay, *operands)
+                         interpret=interpret)(*prefetch, *operands)
     free_o, ssum_o, comp_o, cnt_o = (out[0], out[1][:, 0], out[2][:, 0],
                                      out[3][:, 0])
     hist_o = out[4].reshape(c_cells, n_hi * LANE) if need_hist else hist

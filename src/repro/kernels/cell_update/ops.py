@@ -55,10 +55,11 @@ def resolve_kernel_mode(kernel: str | bool | None = "auto") -> str:
 
 def cell_update(free, ssum, comp, cnt, hist, cum, warm, valid, servers,
                 services, seed_idx, rates, k_mask, ovh, policy_code,
-                model_code, mix, p_slow, slow_factor, p_fail, delay, *,
+                model_code, mix, p_slow, slow_factor, p_fail, delay,
+                svc_idx=None, *,
                 n_servers: int, n_bins: int, block: int,
                 interpret: bool = False, has_shared: bool = False,
-                has_timed: bool = False):
+                has_timed: bool = False, has_dists: bool = False):
     """Kernel-path twin of ``ref.cell_update_ref`` (same signature, same
     bits): validates the layout, derives the scalar-prefetch operands
     from the plan parameters, and calls the Pallas kernel.
@@ -80,9 +81,9 @@ def cell_update(free, ssum, comp, cnt, hist, cum, warm, valid, servers,
         return cell_update_ref(
             free, ssum, comp, cnt, hist, cum, warm, valid, servers,
             services, seed_idx, rates, k_mask, ovh, policy_code,
-            model_code, mix, p_slow, slow_factor, p_fail, delay,
+            model_code, mix, p_slow, slow_factor, p_fail, delay, svc_idx,
             n_bins=n_bins, block=block, has_shared=has_shared,
-            has_timed=has_timed)
+            has_timed=has_timed, has_dists=has_dists)
     if t_total % block != 0:
         raise ValueError(
             f"kernel mode needs the chunk padded to the block multiple "
@@ -92,9 +93,9 @@ def cell_update(free, ssum, comp, cnt, hist, cum, warm, valid, servers,
     return cell_update_tc(
         free, ssum, comp, cnt, hist, cum, warm, valid, servers, services,
         seed_idx, k_count, policy_code, model_code, rates, ovh, mix,
-        p_slow, slow_factor, p_fail, delay,
+        p_slow, slow_factor, p_fail, delay, svc_idx,
         n_servers=n_servers, n_bins=n_bins, block_t=block,
-        interpret=interpret, has_shared=has_shared)
+        interpret=interpret, has_shared=has_shared, has_dists=has_dists)
 
 
 def cell_update_costs(*, n_cells: int, n_servers: int, k_max: int,

@@ -228,9 +228,10 @@ def cell_update_ref(free: Array, ssum: Array, comp: Array, cnt: Array,
                     rates: Array, k_mask: Array, ovh: Array,
                     policy_code: Array, model_code: Array, mix: Array,
                     p_slow: Array, slow_factor: Array, p_fail: Array,
-                    delay: Array, *, n_servers: int | None = None,
+                    delay: Array, svc_idx: Array = None, *,
+                    n_servers: int | None = None,
                     n_bins: int, block: int, has_shared: bool = False,
-                    has_timed: bool = False
+                    has_timed: bool = False, has_dists: bool = False
                     ) -> tuple[Array, Array, Array, Array, Array]:
     """Scan-body reference for one chunk on the flat cell axis.
 
@@ -259,6 +260,14 @@ def cell_update_ref(free: Array, ssum: Array, comp: Array, cnt: Array,
     ``has_timed`` are the static layout / compiled-program flags from
     the variant list (see ``step_cell`` on why ``has_timed`` gates the
     timed block at trace time).
+
+    ``has_dists`` (static) routes the per-step SERVICE gather through
+    ``svc_idx`` (C,) instead of ``seed_idx`` — heterogeneous grids stack
+    one service table per dist-union member along the seed axis and
+    ``svc_idx = dist_id * n_seeds + seed_idx`` picks each cell's table
+    row; arrivals/servers/time stay ``seed_idx``-keyed (CRN across
+    systems). ``has_dists=False`` never touches ``svc_idx``, keeping the
+    homogeneous trace unchanged.
     """
     del n_servers
     k_max = k_mask.shape[1]
@@ -277,7 +286,7 @@ def cell_update_ref(free: Array, ssum: Array, comp: Array, cnt: Array,
         free, ssum, comp, cnt = carry
         c, w, v, srv, svc = inp                # (S,), (), (), (S,k), (S,n_svc)
         t = c[seed_idx] / rates                       # (C,)
-        svc_c = svc[seed_idx]                         # (C, n_svc)
+        svc_c = svc[svc_idx if has_dists else seed_idx]  # (C, n_svc)
         shared_c = svc_c[:, k_max] if has_shared else svc_c[:, 0]
         degr_c = (svc_c[:, n_base:n_base + k_max] if has_degr
                   else jnp.zeros_like(svc_c[:, :k_max]))

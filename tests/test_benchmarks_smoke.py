@@ -30,6 +30,7 @@ MODULES = [
     "fig_policy_space",
     "fig14_network",
     "fig_fault_masking",
+    "fig_cross_system",
 ]
 
 
@@ -111,6 +112,28 @@ def test_fig_fault_masking_chaos_acceptance():
     engine = by_name["fig_fault_masking/engine"][2]
     assert "retry_completes_all=True" in engine, engine
     assert "completion_order=True" in engine, engine
+
+
+def test_fig_cross_system_crossover_row():
+    """The cross-system figure's summary row reports one crossover load
+    per system off a SINGLE mixed-grid gain call, the expected ordering
+    (heavy-tailed disk and DNS cross later than overhead-dominated
+    memcached), and a kernel-parity row pinning scan == kernel on the
+    heterogeneous grid."""
+    import benchmarks.fig_cross_system as fcs
+    from benchmarks.common import row_provenance
+    rows = fcs.run(smoke=True)
+    by_name = {r[0]: r for r in rows}
+    cross = by_name["fig_cross_system/crossover"][2]
+    for system in ("disk", "memcached", "dns"):
+        assert f"{system}=" in cross, cross
+    assert "order=" in cross, cross
+    assert cross.index("memcached=") > cross.index("disk="), cross
+    _, scn, kernel = row_provenance(by_name["fig_cross_system/disk"])
+    assert scn["ks"] == [1, 2] and len(scn["dists"]) == 1
+    assert kernel in ("on", "off", "interpret")
+    parity = by_name["fig_cross_system/kernel_parity"][2]
+    assert "bit_identical=True" in parity, parity
 
 
 def test_fig12_accepts_chunked_engine_config():

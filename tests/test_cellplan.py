@@ -76,10 +76,28 @@ class TestPlanCoordinates:
         with pytest.raises(ValueError):
             cellplan.make_cell_plan(1, 2, 2, policies=[0])
 
+    def test_default_dist_ids_zero(self):
+        # homogeneous grids: every cell reads dist union slot 0
+        plan = cellplan.make_cell_plan(2, 3, 2)
+        assert not bool(plan.dist_id.any())
+
+    def test_per_variant_dist_ids_gather_and_pad(self):
+        # heterogeneous grid: variant slot j carries its system's
+        # dist_id; cells inherit their slot's id, pads cell 0's.
+        plan = cellplan.make_cell_plan(1, 3, 2, pad_to=8,  # 6 -> 8
+                                       dist_ids=[0, 1])
+        assert jnp.array_equal(plan.dist_id[:6], plan.k_idx[:6])
+        assert not bool(plan.dist_id[6:].any())  # pad aliases cell 0
+
+    def test_rejects_wrong_dist_id_length(self):
+        with pytest.raises(ValueError):
+            cellplan.make_cell_plan(1, 2, 2, dist_ids=[0])
+
 
 class TestPadCellIsolation:
     @staticmethod
-    def _run_padded_vs_unpadded(variants, with_shared=False):
+    def _run_padded_vs_unpadded(variants, with_shared=False,
+                                dist_ids=None):
         """Run the chunk body with an unpadded (pad_to=1) and a padded
         (pad_to=8) plan for the same variants; return both end states."""
         cfg = queueing.SimConfig(n_servers=5, n_arrivals=1024)
@@ -89,6 +107,15 @@ class TestPadCellIsolation:
         gaps, servers, services = queueing._sample_sweep_inputs(
             key, dists.exponential(), cfg, k_max, 1,
             with_shared=with_shared)
+        has_dists = dist_ids is not None
+        if has_dists:
+            # second system's service table stacks below the first
+            services = jnp.concatenate(
+                [services,
+                 queueing._sample_sweep_services(key, dists.pareto(2.5),
+                                                 cfg, k_max, 1,
+                                                 with_shared, False)],
+                axis=0)
 
         policies, models = scenario.variant_codes(variants)
         outs = {}
@@ -96,17 +123,20 @@ class TestPadCellIsolation:
             plan = cellplan.make_cell_plan(1, 3, len(variants),
                                            pad_to=pad_to,
                                            policies=policies,
-                                           models=models)
+                                           models=models,
+                                           dist_ids=dist_ids)
             (rates, k_mask, ovh, mix, pslow, sfac, pfail,
              delay) = queueing._plan_cell_params(plan, rhos, cfg,
                                                  variants)
+            svc_idx = (plan.dist_id * 1 + plan.seed_idx if has_dists
+                       else None)
             state = queueing._init_cell_state(plan, cfg, 128, True)
             state = queueing._sweep_chunk_cells(
                 *state, gaps, servers, services, jnp.asarray(0),
                 jnp.asarray(1024), jnp.asarray(100), plan.seed_idx,
                 rates, k_mask, ovh, plan.policy_code, plan.model_code,
-                mix, pslow, sfac, pfail, delay,
-                n_servers=5, n_bins=128, block=512)
+                mix, pslow, sfac, pfail, delay, svc_idx,
+                n_servers=5, n_bins=128, block=512, has_dists=has_dists)
             outs[pad_to] = state
         return outs
 
@@ -132,6 +162,15 @@ class TestPadCellIsolation:
                             service_model=SERVER_DEPENDENT, mix=0.7))
         self._assert_valid_cells_match(
             self._run_padded_vs_unpadded(variants, with_shared=True))
+
+    def test_pad_cells_never_contribute_mixed_dists(self):
+        """Same isolation guarantee for a HETEROGENEOUS grid: the k=2
+        variant routes its service gather to a second system's table
+        via the per-cell ``dist_id`` coordinate (pad cells alias cell
+        0's dist_id, so they can never read past the dist union)."""
+        variants = (Variant(k=1), Variant(k=2, dist_id=1))
+        self._assert_valid_cells_match(
+            self._run_padded_vs_unpadded(variants, dist_ids=[0, 1]))
 
     def test_finalize_drops_pad_cells(self):
         plan = cellplan.make_cell_plan(1, 3, 2, pad_to=8)

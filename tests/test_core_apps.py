@@ -90,6 +90,17 @@ class TestHedging:
         assert p.k_for(0.1) == 2
         assert p.k_for(0.35) == 1
 
+    def test_policy_max_k4_steps_down_with_load(self):
+        # k_for must pick the LARGEST k whose k-fold load stays under the
+        # threshold — the old loop tested a k-independent condition, so
+        # any max_k > 2 collapsed straight to 1 instead of stepping
+        # through the intermediate ks.
+        p = hedging.HedgePolicy(max_k=4, threshold=0.5)
+        assert p.k_for(0.1) == 4    # 4 * 0.1 < 0.5
+        assert p.k_for(0.13) == 3   # 4 * 0.13 >= 0.5 > 3 * 0.13
+        assert p.k_for(0.2) == 2
+        assert p.k_for(0.3) == 1
+
     def test_policy_overhead_cutoff(self):
         p = hedging.HedgePolicy(max_k=2, threshold=0.3,
                                 client_overhead_frac=0.9)
@@ -120,6 +131,20 @@ class TestStorageModel:
         assert float(jnp.mean(s)) == pytest.approx(1.0, rel=0.05)
         assert scale == pytest.approx(
             storage_sim.mean_service_ms(storage_sim.StorageConfig()), rel=1e-6)
+
+    @pytest.mark.parametrize("cv", [0.5, 1.0, 1.5, 3.0])
+    def test_seek_nonnegative_with_pinned_moments(self, cv):
+        # mean_file_kb=0 + no cache: the sampled service IS the seek.
+        # The old shifted-exponential seek went negative whenever
+        # cv > 1 (fig9's EC2 config uses 1.5); the gamma model must stay
+        # non-negative at ANY cv while pinning mean and CV.
+        cfg = storage_sim.StorageConfig(mean_file_kb=0.0,
+                                        cache_disk_ratio=0.0, seek_cv=cv)
+        s = storage_sim._sample_ms(cfg, jax.random.PRNGKey(11), (400_000,))
+        assert float(jnp.min(s)) >= 0.0
+        mean = float(jnp.mean(s))
+        assert mean == pytest.approx(cfg.seek_ms, rel=0.05)
+        assert float(jnp.std(s)) / mean == pytest.approx(cv, rel=0.05)
 
     def test_large_files_kill_replication(self):
         # Fig 10: 400 KB files => client overhead is a large fraction of

@@ -1,0 +1,149 @@
+"""Quantile-table empirical distributions + the per-cell "system"
+(dist_id) coordinate.
+
+Covers the fit contract (unit mean, closed-form variance, round-trip of
+moments and tail through the table), the mixture variance pin, and the
+heterogeneous mixed-grid engine path: every variant column of a mixed
+SYSTEMS grid must be bit-identical to the same scenario run pure —
+shared arrivals (CRN across systems), per-cell service-table routing
+only."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributions as dists, queueing, scenario
+from repro.core.scenario import Scenario
+
+CFG = queueing.SimConfig(n_servers=5, n_arrivals=3_000)
+
+
+def _pareto_fit(n_samples=400_000, alpha=2.1):
+    key = jax.random.PRNGKey(0)
+    samples = dists.pareto(alpha).sample(key, (n_samples,)) * 3.7  # ms-ish
+    return samples, dists.empirical(samples, name="pareto_fit")
+
+
+class TestEmpiricalFit:
+    def test_roundtrip_mean_and_p99(self):
+        samples, d = _pareto_fit()
+        # the trapezoid mean of the table IS the sample mean -> scale
+        assert d.scale == pytest.approx(float(jnp.mean(samples)), rel=1e-3)
+        # resampling from the table reproduces mean and p99 of the data
+        re = d.sample(jax.random.PRNGKey(1), (400_000,)) * d.scale
+        assert float(jnp.mean(re)) == pytest.approx(
+            float(jnp.mean(samples)), rel=0.02)
+        assert float(jnp.percentile(re, 99)) == pytest.approx(
+            float(jnp.percentile(samples, 99)), rel=0.05)
+
+    def test_unit_mean_contract(self):
+        _, d = _pareto_fit(n_samples=100_000)
+        s = d.sample(jax.random.PRNGKey(2), (400_000,))
+        assert float(jnp.mean(s)) == pytest.approx(1.0, rel=0.01)
+        assert d.mean == 1.0
+
+    def test_closed_form_variance_matches_sampled(self):
+        _, d = _pareto_fit(n_samples=100_000)
+        s = d.sample(jax.random.PRNGKey(3), (400_000,))
+        assert d.variance == pytest.approx(float(jnp.var(s)), rel=0.05)
+
+    def test_exceedance_matches_data_tail(self):
+        samples, d = _pareto_fit()
+        for x in (5.0, 10.0, 20.0):
+            assert d.exceedance(x) == pytest.approx(
+                float(jnp.mean(samples > x)), abs=0.005)
+        assert d.exceedance(0.0) == 1.0
+        assert d.exceedance(1e9) == 0.0
+
+    def test_table_shape_and_monotone(self):
+        _, d = _pareto_fit(n_samples=50_000)
+        assert len(d.table) == 513  # n_quantiles + 1 knots
+        t = np.asarray(d.table)
+        assert np.all(np.diff(t) >= 0.0)
+        assert t[0] >= 0.0
+
+    def test_rejects_bad_inputs(self):
+        with pytest.raises(ValueError):
+            dists.empirical([1.0])  # need >= 2 samples
+        with pytest.raises(ValueError):
+            dists.empirical([1.0, -2.0])  # negative
+        with pytest.raises(ValueError):
+            dists.empirical([1.0, jnp.inf])
+        with pytest.raises(ValueError):
+            dists.empirical([0.0, 0.0])  # zero mean
+
+    def test_mixture_variance_pinned(self):
+        # mixture() used to drop the component variances entirely
+        m = dists.mixture([dists.exponential(), dists.deterministic()],
+                          [0.5, 0.5])
+        # E[X^2] = 0.5 * (1 + 1) + 0.5 * (0 + 1) = 1.5, mean 1 => var 0.5
+        assert m.variance == pytest.approx(0.5)
+        s = m.sample(jax.random.PRNGKey(4), (400_000,))
+        assert float(jnp.var(s)) == pytest.approx(0.5, rel=0.05)
+
+
+class TestSystemCoordinate:
+    def test_combine_dedupes_union_and_assigns_dist_ids(self):
+        a, b = dists.exponential(), dists.pareto(2.5)
+        union, _, variants = scenario.combine(
+            (Scenario(dists=a, ks=(1, 2)), Scenario(dists=b, ks=(1,)),
+             Scenario(dists=a, ks=(2,))))
+        assert union == (a, b)
+        assert [v.dist_id for v in variants] == [0, 0, 1, 0]
+        assert scenario.variant_dist_ids(variants) == [0, 0, 1, 0]
+        assert scenario.any_dist_ids(variants)
+
+    def test_homogeneous_grid_has_no_dist_ids(self):
+        a = dists.exponential()
+        _, _, variants = scenario.combine(
+            (Scenario(dists=a, ks=(1,)), Scenario(dists=a, ks=(2,))))
+        assert not scenario.any_dist_ids(variants)
+
+    def test_heterogeneous_rejects_multidist_scenario(self):
+        with pytest.raises(ValueError):
+            scenario.combine(
+                (Scenario(dists=(dists.exponential(), dists.pareto(2.5))),
+                 Scenario(dists=dists.deterministic())))
+
+    def test_mixed_grid_columns_bit_match_pure_runs(self):
+        """THE heterogeneous engine contract: a mixed SYSTEMS grid keeps
+        each scenario's cells on the same arrival stream (CRN across
+        systems) and routes ONLY the service gather, so every variant
+        column is bit-identical to the scenario run pure."""
+        _, emp = _pareto_fit(n_samples=50_000)
+        scn_a = Scenario(dists=dists.exponential(), ks=(1, 2))
+        scn_b = Scenario(dists=emp, ks=(1, 2), client_overhead=0.05)
+        key = jax.random.PRNGKey(5)
+        rhos = jnp.asarray([0.2, 0.4])
+        mixed = queueing.run(key, (scn_a, scn_b), rhos, CFG, n_seeds=2)
+        pure_a = queueing.run(key, scn_a, rhos, CFG, n_seeds=2)
+        pure_b = queueing.run(key, scn_b, rhos, CFG, n_seeds=2)
+        for f in ("mean", "p50", "p99", "completed"):
+            assert jnp.array_equal(mixed[f][:, :, :2], pure_a[f]), f
+            assert jnp.array_equal(mixed[f][:, :, 2:], pure_b[f]), f
+
+    def test_mixed_grid_scan_kernel_bit_identical(self):
+        _, emp = _pareto_fit(n_samples=50_000)
+        scns = (Scenario(dists=dists.exponential(), ks=(1, 2)),
+                Scenario(dists=emp, ks=(1, 2)))
+        key = jax.random.PRNGKey(6)
+        rhos = jnp.asarray([0.3])
+        off = queueing.run(key, scns, rhos, CFG, n_seeds=1, kernel="off")
+        interp = queueing.run(key, scns, rhos, CFG, n_seeds=1,
+                              kernel="interpret")
+        for f in ("mean", "p50", "p99", "completed"):
+            assert jnp.array_equal(off[f], interp[f]), f
+
+    def test_empirical_rides_chunked_engine(self):
+        # chunked streaming re-samples per chunk from the SAME table
+        _, emp = _pareto_fit(n_samples=50_000)
+        scns = (Scenario(dists=dists.exponential(), ks=(1,)),
+                Scenario(dists=emp, ks=(1,)))
+        key = jax.random.PRNGKey(7)
+        out = queueing.run(key, scns, jnp.asarray([0.3]), CFG, n_seeds=1,
+                           chunk_size=1024)
+        assert bool(jnp.all(jnp.isfinite(out["mean"])))
+        # unit-mean service at rho=0.3: response means sit above the
+        # service mean for both systems (heavy-tailed queueing can push
+        # the empirical column well past it — no upper sanity bound)
+        assert bool(jnp.all(out["mean"] > 0.5))

@@ -41,6 +41,27 @@ class TestSimulation:
         # minimum possible FCT: size packets paced 1/slot + path latency
         assert np.all(fct >= sizes)
 
+    def test_censored_fct_units_consistent(self):
+        # Truncate the horizon so some flows cannot finish: censored
+        # FCTs must be the RELATIVE bound n_slots - start (same units
+        # as delivered last - start + 1), never the absolute horizon —
+        # the old mixed-unit censoring inflated every censored FCT by
+        # its start slot.
+        cfg = netsim.NetConfig(n_flows=80, load=0.4, replicate_first=0,
+                               seed=2)
+        *_, starts = netsim.build_workload(cfg)
+        n_slots = int(starts.max()) + 5
+        fct, sizes, _, undelivered = netsim.flow_completion_times(
+            cfg, n_slots=n_slots)
+        assert undelivered.any()  # the truncation must actually censor
+        np.testing.assert_array_equal(
+            fct[undelivered], (float(n_slots) - starts)[undelivered])
+        # censoring is a LOWER bound in consistent units: every censored
+        # FCT still fits inside the horizon, and delivered flows do too
+        assert np.all(fct[undelivered] <= n_slots)
+        assert np.all(fct[~undelivered] <= n_slots)
+        assert np.all(fct >= 0.0)
+
     def test_replication_never_hurts_uncongested(self):
         base = netsim.NetConfig(n_flows=60, load=0.05, replicate_first=0,
                                 seed=1)

@@ -77,8 +77,12 @@ class TestScenarioSpec:
 
     def test_combine_rejects_mismatched_grids(self):
         d = dists.exponential()
-        with pytest.raises(ValueError, match="dists"):
-            combine((Scenario(dists=d), Scenario(dists=dists.pareto(2.5))))
+        # Differing dists no longer reject — they form a heterogeneous
+        # union (per-cell dist_id) — but each scenario of such a grid
+        # must carry exactly ONE dist ("its system").
+        with pytest.raises(ValueError, match="exactly one dist"):
+            combine((Scenario(dists=(d, dists.pareto(2.5))),
+                     Scenario(dists=dists.pareto(2.5))))
         with pytest.raises(ValueError, match="warmup"):
             combine((Scenario(dists=d),
                      Scenario(dists=d, warmup_frac=0.2)))

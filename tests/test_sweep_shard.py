@@ -12,7 +12,9 @@ The subprocess test forces 8 host devices (the idiom of
 main test process) and checks cell counts both divisible and NOT
 divisible by the device count (exercising the pad/mask path), the
 dist-stacked driver, MIXED-policy scenario grids (policy/model codes
-sharded as per-cell coordinates), threshold bisection (bare dist
+sharded as per-cell coordinates), HETEROGENEOUS mixed-dist grids (the
+per-cell dist_id / svc_idx routing sharded the same way: scan ==
+interpreted kernel == sharded), threshold bisection (bare dist
 and Scenario forms), and the fused cell-update kernel (its per-cell
 grid maps 1:1 onto the sharded axis, so kernel mode must preserve the
 sharded==unsharded bit-identity too).
@@ -96,6 +98,24 @@ class TestShardedSingleDeviceMesh:
                           **kw)
         _assert_bit_identical(un, sh)
         assert un["mean"].shape == (2, 2, 5)
+
+    def test_mixed_dists_grid_bit_identical(self):
+        # a HETEROGENEOUS grid — two systems via per-cell dist_id —
+        # through run(mesh=...): svc_idx shards with the plan, results
+        # bit-match the local engine (scan AND interpreted kernel).
+        key = jax.random.PRNGKey(6)
+        scns = (Scenario(dists=dists.exponential(), ks=(1, 2)),
+                Scenario(dists=dists.pareto(2.5), ks=(1, 2),
+                         client_overhead=0.05))
+        kw = dict(n_seeds=2, chunk_size=1_700)
+        un = queueing.run(key, scns, RHOS, CFG, **kw)
+        sh = queueing.run(key, scns, RHOS, CFG, mesh=make_sweep_mesh(1),
+                          **kw)
+        _assert_bit_identical(un, sh)
+        sh_kern = queueing.run(key, scns, RHOS, CFG, kernel="interpret",
+                               mesh=make_sweep_mesh(1), **kw)
+        _assert_bit_identical(un, sh_kern)
+        assert un["mean"].shape == (2, 2, 4)
 
     def test_kernel_mode_bit_identical(self):
         # the fused cell-update kernel runs per shard on its local cells
@@ -185,6 +205,17 @@ kw = dict(n_seeds=1, chunk_size=1_700)
 check("mixed-policy",
       queueing.run(key, scns, rhos3, cfg, **kw),
       queueing.run(key, scns, rhos3, cfg, mesh=mesh, **kw))
+
+# HETEROGENEOUS (mixed-dist) grid, non-divisible: two systems x
+# 1 seed x 3 loads x 2 ks = 12 cells -> padded to 16. The per-cell
+# svc_idx shards with the plan: scan == interpreted kernel == sharded.
+het = (Scenario(dists=d, ks=(1, 2)),
+       Scenario(dists=dists.pareto(2.5), ks=(1, 2), client_overhead=0.05))
+het_scan = queueing.run(key, het, rhos3, cfg, **kw)
+het_kern = queueing.run(key, het, rhos3, cfg, kernel="interpret", **kw)
+het_sh = queueing.run(key, het, rhos3, cfg, mesh=mesh, **kw)
+check("mixed-dists scan vs kernel", het_scan, het_kern)
+check("mixed-dists scan vs sharded", het_scan, het_sh)
 
 # fused cell-update kernel (interpret mode off-TPU), sharded at 8
 # devices: the kernel's per-cell grid maps 1:1 onto the sharded axis,
