@@ -16,13 +16,19 @@ Rows may append provenance elements past the 3-tuple core:
     rows with no engine call; ``run.py`` records it as the row's
     ``kernel`` field so trajectories separate kernel-path from
     scan-path measurements.
+  * 7th — the row's sampling/pipeline provenance
+    (``repro.core.chunkflow.stats_provenance()``: pipeline on/off,
+    per-host sampled rows and bytes vs the full block, locality factor,
+    process count) or ``None``; ``run.py`` records it as the row's
+    ``sampling`` field so the multi-host sampling reduction is visible
+    in the perf artifact.
 """
 from __future__ import annotations
 
 import time
 from typing import Any, Callable, Optional, Union
 
-Row = tuple  # (name, us, derived[, mesh_shape[, scenario[, kernel]]])
+Row = tuple  # (name, us, derived[, mesh[, scenario[, kernel[, sampling]]]])
 
 
 def timed(fn: Callable[[], Any]) -> tuple[Any, float]:
@@ -33,13 +39,14 @@ def timed(fn: Callable[[], Any]) -> tuple[Any, float]:
 
 def row_provenance(row: Row) -> tuple[Optional[list], Union[dict, list,
                                                             None],
-                                      Optional[str]]:
-    """(mesh, scenario, kernel) provenance of a row, tolerating the
-    short forms."""
+                                      Optional[str], Optional[dict]]:
+    """(mesh, scenario, kernel, sampling) provenance of a row, tolerating
+    the short forms."""
     mesh = list(row[3]) if len(row) > 3 and row[3] is not None else None
     scn = row[4] if len(row) > 4 else None
     kernel = row[5] if len(row) > 5 else None
-    return mesh, scn, kernel
+    sampling = row[6] if len(row) > 6 else None
+    return mesh, scn, kernel, sampling
 
 
 def emit(rows: list[Row]) -> None:

@@ -5,12 +5,16 @@ Prints ``name,us_per_call,derived`` CSV. ``--only fig14`` runs one module
 ``--json PATH`` additionally writes the rows as a JSON list so the perf
 trajectory is machine-readable across PRs (e.g. ``--json
 BENCH_queueing.json``). Each JSON row records execution provenance next
-to the measurement — ``backend`` / ``device_count`` of the process, the
-``mesh`` shape the row ran under (``null`` for unsharded rows), and the
-``scenario`` the row measured (policy / service model / mix, from
-``repro.core.scenario.provenance``; ``null`` for rows that are not a
-queueing-scenario measurement) — so BENCH_*.json trajectories are
-comparable across machines AND across points of the policy space.
+to the measurement — ``backend`` / ``device_count`` / ``process_count``
+of the runtime, the ``mesh`` shape the row ran under (``null`` for
+unsharded rows), the ``scenario`` the row measured (policy / service
+model / mix, from ``repro.core.scenario.provenance``; ``null`` for rows
+that are not a queueing-scenario measurement), and the row's
+``sampling`` provenance (``repro.core.chunkflow.stats_provenance``:
+pipeline on/off, per-host sampled bytes vs the full block, locality
+factor; ``null`` for non-engine rows) — so BENCH_*.json trajectories
+are comparable across machines AND across points of the policy space,
+and the multi-host sampling reduction is visible in the artifact.
 ``--smoke`` runs every module at tiny sizes — CI uses ``--json --smoke``
 to refresh the perf-trajectory artifact on every push without paying for
 full-size sweeps. ``--devices N`` builds an N-way ``"cells"`` sweep mesh
@@ -61,10 +65,16 @@ def main() -> None:
 
     mesh = None
     if args.devices:
-        n = min(args.devices, jax.device_count())
+        # clamp to the largest DIVISOR of the visible device count:
+        # make_sweep_mesh validates divisibility, and a mesh over a
+        # non-divisor would reject the request anyway
+        avail = jax.device_count()
+        n = next(d for d in range(min(args.devices, avail), 0, -1)
+                 if avail % d == 0)
         if n < args.devices:
             print(f"# --devices {args.devices} clamped to {n} "
-                  f"(visible devices; on CPU set XLA_FLAGS="
+                  f"(largest divisor of the {avail} visible devices; on "
+                  f"CPU set XLA_FLAGS="
                   f"--xla_force_host_platform_device_count={args.devices})",
                   file=sys.stderr)
         from repro.launch.mesh import make_sweep_mesh
@@ -83,7 +93,8 @@ def main() -> None:
                serving_hedge, roofline]
 
     provenance = {"backend": jax.default_backend(),
-                  "device_count": jax.device_count()}
+                  "device_count": jax.device_count(),
+                  "process_count": jax.process_count()}
 
     print("name,us_per_call,derived")
     collected: list[dict[str, object]] = []
@@ -100,23 +111,27 @@ def main() -> None:
             kwargs["kernel"] = args.kernel
         try:
             for row in mod.run(**kwargs):
-                # rows are (name, us, derived[, mesh_shape[, scenario
-                # [, kernel]]]) — see benchmarks.common
+                # rows are (name, us, derived[, mesh[, scenario
+                # [, kernel[, sampling]]]]) — see benchmarks.common
                 row_name, us, derived = row[:3]
-                row_mesh, row_scenario, row_kernel = row_provenance(row)
+                (row_mesh, row_scenario, row_kernel,
+                 row_sampling) = row_provenance(row)
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
                 collected.append({"name": row_name,
                                   "us_per_call": round(us, 1),
                                   "derived": derived,
                                   "mesh": row_mesh,
                                   "scenario": row_scenario,
-                                  "kernel": row_kernel, **provenance})
+                                  "kernel": row_kernel,
+                                  "sampling": row_sampling,
+                                  **provenance})
         except Exception as e:  # keep the harness going
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             collected.append({"name": f"{name}/ERROR", "us_per_call": 0,
                               "derived": f"{type(e).__name__}:{e}",
                               "mesh": None, "scenario": None,
-                              "kernel": None, **provenance})
+                              "kernel": None, "sampling": None,
+                              **provenance})
             import traceback
             traceback.print_exc(file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)

@@ -34,10 +34,19 @@ carries ``scan_s= / kernel_s= / speedup=`` so BENCH_*.json trajectories
 hold the measured kernel speedup as provenance; its 6th row element
 (the ``kernel`` JSON field) is the mode the kernel leg executed under.
 
+Part 5 — sampling/compute pipeline on vs off (``queueing.run``'s
+``pipeline`` argument, ``repro.core.chunkflow``): the large streamed
+sweep with serial per-chunk sampling vs the double-buffered producer
+thread + fused jitted sampler, wall clock both ways, bit-identity
+recorded, and the run's sampling provenance
+(``chunkflow.stats_provenance``) as the row's 7th element — under a
+multi-process runtime the same row shows the per-host sampled-bytes
+reduction.
+
 Emits per-family rows plus ``sweep_engine/total`` (end-to-end old-vs-fused
 speedup, target >= 5x), ``sweep_engine/chunked*``,
-``sweep_engine/kernel_on_vs_off`` and (with a mesh)
-``sweep_engine/sharded*`` rows."""
+``sweep_engine/kernel_on_vs_off``, ``sweep_engine/pipeline_on_vs_off``
+and (with a mesh) ``sweep_engine/sharded*`` rows."""
 from __future__ import annotations
 
 import time
@@ -184,6 +193,39 @@ def _kernel_rows(key, cfg: queueing.SimConfig, kernel: str,
              None, scn_mod.provenance(scn), mode)]
 
 
+def _pipeline_rows(key, kernel: str, smoke: bool) -> list[Row]:
+    """Sampling/compute pipeline on-vs-off on the large streamed sweep
+    (the ISSUE-9 acceptance row): wall clock both ways at 2M arrivals,
+    bit-identity recorded in the derived field, the run's sampling
+    provenance (``chunkflow.stats_provenance``) as the row's 7th
+    element. Like the kernel row: record a violation, never raise."""
+    from repro.core import chunkflow
+
+    resolved = resolve_kernel_mode(kernel)
+    big_m = 200_000 if smoke else 2_000_000
+    big_cfg = queueing.SimConfig(n_servers=20, n_arrivals=big_m)
+    scn = Scenario.paper_default(dists.exponential(), ks=(1, 2))
+    rhos = jnp.asarray([0.3])
+    kw = dict(n_seeds=1, chunk_size=CHUNK, kernel=resolved)
+
+    t0 = time.perf_counter()
+    off = queueing.run(key, scn, rhos, big_cfg, pipeline="off", **kw)
+    jax.block_until_ready(off["mean"])
+    off_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    on = queueing.run(key, scn, rhos, big_cfg, pipeline="on", **kw)
+    jax.block_until_ready(on["mean"])
+    on_s = time.perf_counter() - t0
+    bit = all(bool(jnp.array_equal(off[f], on[f]))
+              for f in ("mean", "p50", "p99"))
+    return [("sweep_engine/pipeline_on_vs_off", on_s * 1e6,
+             f"arrivals={big_m};chunk={CHUNK};off_s={off_s:.2f};"
+             f"on_s={on_s:.2f};speedup={off_s / on_s:.2f}x;"
+             f"bit_identical={bit}",
+             None, scn_mod.provenance(scn), resolved,
+             chunkflow.stats_provenance())]
+
+
 def run(smoke: bool = False, mesh=None, kernel: str = "auto") -> list[Row]:
     rows: list[Row] = []
     key = jax.random.PRNGKey(1)
@@ -270,6 +312,9 @@ def run(smoke: bool = False, mesh=None, kernel: str = "auto") -> list[Row]:
 
     # --- fused cell-update kernel on vs off: measured speedup ------------
     rows.extend(_kernel_rows(key, cfg, kernel, smoke))
+
+    # --- sampling/compute pipeline on vs off: measured overlap speedup --
+    rows.extend(_pipeline_rows(key, kernel, smoke))
 
     # --- sharded cell-plan execution: bit-identity + mesh provenance ----
     if mesh is not None:

@@ -66,6 +66,24 @@ class CellPlan:
     def stacked_shape(self) -> tuple[int, int, int]:
         return (self.n_seeds, self.n_loads, self.n_ks)
 
+    def sharding_rule(self, mesh):
+        """Declare this plan's placement on a ``"cells"`` mesh: returns
+        the ``repro.launch.mesh.SweepShardingRules`` whose specs /
+        constructors the sharded executor consumes (cell-axis trees
+        shard ``P("cells")``, chunk scalars replicate). The ONE place
+        plan placement is decided — callers never hand-build
+        ``NamedSharding``s. Requires ``n_padded`` to be a multiple of
+        the mesh size (``make_cell_plan(pad_to=mesh.devices.size)``)."""
+        from repro.launch.mesh import SweepShardingRules
+
+        rules = SweepShardingRules(mesh)
+        if self.n_padded % rules.n_devices:
+            raise ValueError(
+                f"plan has {self.n_padded} padded cells, not a multiple "
+                f"of the {rules.n_devices}-device mesh; build it with "
+                f"pad_to=mesh.devices.size")
+        return rules
+
 
 def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
                    pad_to: int = 1,
@@ -118,6 +136,46 @@ def make_cell_plan(n_seeds: int, n_loads: int, n_ks: int, *,
         policy_code=jnp.asarray(policy[k_idx], jnp.int32),
         model_code=jnp.asarray(model[k_idx], jnp.int32),
         dist_id=jnp.asarray(did[k_idx], jnp.int32))
+
+
+def device_row_maps(idx, n_devices: int):
+    """Per-device input-row sets + device-local remap for a global
+    ``(n_padded,)`` input-row index array (the plan's ``seed_idx``, or
+    the heterogeneous-grid svc-row index ``dist_id * n_seeds +
+    seed_idx``).
+
+    Returns ``(rows, local)``: ``rows[d]`` lists the global input rows
+    device ``d``'s cells gather — unique, sorted, padded to the common
+    width ``R = max_d |unique(d)|`` by repeating the last entry so every
+    device's block has the same shape — and ``local[c]`` is the position
+    of cell ``c``'s row inside its OWN device's list. For any global
+    input block ``x`` (rows = seed rows), device ``d``'s local block
+    ``x[rows[d]]`` then satisfies
+
+        x[rows[d]][local[c]] == x[idx[c]]   for every cell c on d,
+
+    i.e. remapping indices to device-local row positions gathers
+    exactly the same sampled values — the chunk body reads inputs ONLY
+    through per-cell row gathers, so the remap cannot change bits; it
+    only changes WHICH rows each host must materialize (the per-host
+    sampling reduction of the multi-host executor).
+    """
+    idx = np.asarray(idx)
+    n_padded = idx.shape[0]
+    if n_padded % n_devices:
+        raise ValueError(f"{n_padded} cells do not tile {n_devices} "
+                         f"devices")
+    per = n_padded // n_devices
+    uniq = [np.unique(idx[d * per:(d + 1) * per])
+            for d in range(n_devices)]
+    width = max(u.size for u in uniq)
+    rows = np.stack([np.pad(u, (0, width - u.size), mode="edge")
+                     for u in uniq]).astype(np.int32)
+    local = np.empty((n_padded,), np.int32)
+    for d, u in enumerate(uniq):
+        seg = idx[d * per:(d + 1) * per]
+        local[d * per:(d + 1) * per] = np.searchsorted(u, seg)
+    return rows, local
 
 
 def unflatten(plan: CellPlan, x: Array) -> Array:

@@ -249,6 +249,30 @@ class EmpiricalDist(ServiceDist):
         # CDF(x) by inverting the (monotone) quantile function.
         return float(1.0 - np.interp(x, knots, u, left=0.0, right=1.0))
 
+    @classmethod
+    def from_trace(cls, path, *, n_quantiles: int = 512,
+                   name: str | None = None) -> "EmpiricalDist":
+        """Fit a quantile table from a latency TRACE file: newline-
+        delimited samples in milliseconds (blank lines and ``#``
+        comments skipped — the common format of packet/RPC latency
+        dumps). The returned dist is unit-mean like every engine
+        distribution; ``scale`` holds the trace mean in ms, so paper-
+        style absolute plots multiply back by it. Fitting goes through
+        ``empirical`` (tail-conditional top knot and all)."""
+        import os
+
+        import numpy as np
+
+        with open(path) as fh:
+            vals = [float(ln) for ln in (s.strip() for s in fh)
+                    if ln and not ln.startswith("#")]
+        if len(vals) < 2:
+            raise ValueError(f"trace {path!r} has {len(vals)} usable "
+                             f"sample(s); need at least 2")
+        label = name or f"trace:{os.path.basename(str(path))}"
+        return empirical(np.asarray(vals), n_quantiles=n_quantiles,
+                         name=label)
+
 
 def empirical(samples, *, n_quantiles: int = 512,
               name: str = "empirical") -> EmpiricalDist:

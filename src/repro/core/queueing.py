@@ -174,6 +174,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cellplan
+from repro.core import chunkflow
 from repro.core import scenario as scenario_mod
 from repro.core.distributions import ServiceDist
 from repro.core.scenario import (Policy, Scenario, ServiceModel,  # noqa: F401
@@ -183,6 +184,7 @@ from repro.kernels.cell_update.ref import cell_update_ref, step_cell
 from repro.kernels.hist_sketch import ops as hist_ops
 from repro.kernels.hist_sketch.ops import (DEFAULT_BINS, HIST_HI,  # noqa: F401
                                            HIST_LO)
+from repro.launch import mesh as launch_mesh
 
 Array = jax.Array
 
@@ -633,11 +635,39 @@ def _finalize_summary(plan: cellplan.CellPlan, ssum: Array, cnt: Array,
     return out
 
 
+def _record_pipeline_stats(sampler, *, enabled: bool, n_chunks: int,
+                           t_pad: int, seed_rows: int,
+                           svc_rows: int) -> None:
+    """Publish this run's pipeline + sampling shape to ``chunkflow`` so
+    the benchmark harness can attach it as JSON provenance. ``seed_rows``
+    / ``svc_rows`` are the rows THIS process sampled per chunk (the full
+    block on one process; the per-host reduction on many)."""
+    spec = getattr(sampler, "spec", None)
+    if spec is None:
+        return
+    k_max, n_svc = spec.k_max, spec.n_svc_cols
+
+    def nbytes(n_seed, n_svc_rows):
+        # f32 gaps (rows, T) + i32 servers (rows, T, k_max)
+        # + f32 services (rows, T, n_svc)
+        return 4 * t_pad * (n_seed * (1 + k_max) + n_svc_rows * n_svc)
+
+    chunkflow.record_stats(chunkflow.PipelineStats(
+        enabled=enabled, depth=chunkflow.DEFAULT_DEPTH, n_chunks=n_chunks,
+        seed_rows_sampled=seed_rows, seed_rows_total=spec.n_seed_rows,
+        svc_rows_sampled=svc_rows, svc_rows_total=spec.n_svc_rows,
+        bytes_sampled_per_chunk=nbytes(seed_rows, svc_rows),
+        bytes_full_per_chunk=nbytes(spec.n_seed_rows, spec.n_svc_rows),
+        process_count=jax.process_count(),
+        process_index=jax.process_index()))
+
+
 def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
                 variants: tuple[Variant, ...], warmup_frac: float,
                 percentiles: tuple[float, ...],
                 n_bins: int, chunk_size: int | None,
-                use_kernel: str = "off") -> dict[str, Array]:
+                use_kernel: str = "off",
+                pipeline: str = "off") -> dict[str, Array]:
     """Drive ``_sweep_chunk_cells`` over the whole arrival stream on one
     device: unpadded cell plan (variant policy/model codes as per-cell
     coordinates), seed-level sampled inputs shared by each seed's
@@ -646,7 +676,12 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
     ``sampler(chunk_idx, chunk_len)`` returns that chunk's
     ``(unit_gaps (S,T), servers (S,T,k_max), services (S,T,n_svc))`` —
     one call over the full stream when ``chunk_size`` is None.
-    ``use_kernel`` is a RESOLVED kernel mode (never ``"auto"``).
+    ``use_kernel`` is a RESOLVED kernel mode (never ``"auto"``); so is
+    ``pipeline`` (``"on"``/``"off"``, never ``"auto"``): ``"on"``
+    prefetches chunk ``c+1``'s inputs on a producer thread — through the
+    sampler's FUSED jit entry point, one dispatch per chunk — while the
+    chunk body for ``c`` runs (``repro.core.chunkflow``); bit-identical
+    to ``"off"`` because it changes when inputs are sampled, never what.
     """
     m = cfg.n_arrivals
     policies, models = scenario_mod.variant_codes(variants)
@@ -671,9 +706,15 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
     free, ssum, comp, cnt, hist = _init_cell_state(plan, cfg, n_bins,
                                                    need_hist)
 
-    for c in range(n_chunks):
-        unit_gaps, servers, services = _pad_chunk_inputs(
-            *sampler(c, t_chunk), pad)
+    use_pipe = pipeline == "on" and n_chunks > 1
+    fused = getattr(sampler, "fused", None)
+    draw = fused if (use_pipe and fused is not None) else sampler
+
+    def produce(c: int):
+        return _pad_chunk_inputs(*draw(c, t_chunk), pad)
+
+    for c, (unit_gaps, servers, services) in enumerate(
+            chunkflow.iter_staged(produce, n_chunks, enabled=use_pipe)):
         start = c * t_chunk
         free, ssum, comp, cnt, hist = _sweep_chunk_cells(
             free, ssum, comp, cnt, hist, unit_gaps, servers, services,
@@ -684,6 +725,14 @@ def _run_engine(sampler, n_seeds_total: int, rhos: Array, cfg: SimConfig, *,
             n_servers=cfg.n_servers, n_bins=n_bins, block=block,
             use_kernel=use_kernel, has_shared=has_shared,
             has_timed=has_timed, has_dists=has_dists)
+    # block on the last chunk so the producer thread (if any) is drained
+    # before stats are read, then record sampling provenance
+    jax.block_until_ready(ssum)
+    spec = getattr(sampler, "spec", None)
+    _record_pipeline_stats(
+        sampler, enabled=use_pipe, n_chunks=n_chunks, t_pad=t_chunk + pad,
+        seed_rows=spec.n_seed_rows if spec is not None else 0,
+        svc_rows=spec.n_svc_rows if spec is not None else 0)
 
     return _finalize_summary(plan, ssum, cnt, hist, m - warmup_start,
                              percentiles)
@@ -695,22 +744,185 @@ def _chunk_key(key: Array, chunk_idx: int, chunk_size: int | None) -> Array:
     return key if chunk_size is None else jax.random.fold_in(key, chunk_idx)
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Hashable static descriptor of a sweep's per-chunk randomness.
+
+    ``kind`` picks the input-block layout (matching the three legacy
+    sampler closures):
+
+      ``"single"``   one distribution; gaps/servers/services all have
+                     ``n_seeds`` rows.
+      ``"stacked"``  legacy multi-dist sweeps (``sweep_dists``): every
+                     dist shares the arrival process (CRN), so gaps /
+                     servers are sampled once and TILED ``d`` times;
+                     seed-row and service-row spaces both have
+                     ``d * n_seeds`` rows.
+      ``"tables"``   heterogeneous per-cell ``dist_id`` grids: gaps /
+                     servers keep ``n_seeds`` rows, services stack one
+                     table per dist-union member (``d * n_seeds``
+                     service rows reached via ``svc_idx``).
+
+    Being a frozen dataclass of hashables (``ServiceDist`` is already a
+    static jit argument elsewhere), a spec is a valid static jit key —
+    the fused samplers below compile once per spec and are shared by
+    every chunk of a run.
+    """
+
+    kind: str
+    dists: tuple[ServiceDist, ...]
+    cfg: SimConfig
+    k_max: int
+    n_seeds: int
+    with_shared: bool = False
+    with_degr: bool = False
+
+    @property
+    def n_dists(self) -> int:
+        return len(self.dists)
+
+    @property
+    def n_seed_rows(self) -> int:
+        """Rows of the gaps/servers block (the seed-row space)."""
+        return self.n_seeds * (self.n_dists if self.kind == "stacked"
+                               else 1)
+
+    @property
+    def n_svc_rows(self) -> int:
+        """Rows of the services block (the service-row space)."""
+        return self.n_seeds * (self.n_dists if self.kind != "single"
+                               else 1)
+
+    @property
+    def n_svc_cols(self) -> int:
+        return (self.k_max + int(self.with_shared)
+                + self.k_max * int(self.with_degr))
+
+
+def _sample_chunk(spec: SamplerSpec, ck: Array, t: int):
+    """One chunk's full ``(gaps, servers, services)`` block for any
+    sampler kind — op-for-op the legacy closure bodies, so eager
+    execution reproduces their exact per-op sequence (and bits)."""
+    ccfg = dataclasses.replace(spec.cfg, n_arrivals=t)
+    gaps, servers = _sample_sweep_arrivals(
+        ck, spec.cfg.n_servers, t, spec.k_max, spec.n_seeds)
+    if spec.kind == "single":
+        services = _sample_sweep_services(
+            ck, spec.dists[0], ccfg, spec.k_max, spec.n_seeds,
+            spec.with_shared, spec.with_degr)
+    else:
+        services = jnp.concatenate(
+            [_sample_sweep_services(ck, dd, ccfg, spec.k_max,
+                                    spec.n_seeds, spec.with_shared,
+                                    spec.with_degr)
+             for dd in spec.dists], axis=0)
+    if spec.kind == "stacked":
+        d = spec.n_dists
+        gaps, servers = (jnp.tile(gaps, (d, 1)),
+                         jnp.tile(servers, (d, 1, 1)))
+    return gaps, servers, services
+
+
+@partial(jax.jit, static_argnames=("spec", "t"))
+def _sample_chunk_fused(spec: SamplerSpec, ck: Array, t: int):
+    """The same block as ONE jitted program. Bit-identical to the eager
+    path (pinned by tests/test_multihost.py): the PRNG transforms'
+    op shapes are per seed row either way, so XLA's shape-dependent
+    ULP wobble (see the sweep_shard design note) cannot bite. One
+    dispatch per chunk is what lets the sampling/compute pipeline
+    overlap host sampling with device compute."""
+    return _sample_chunk(spec, ck, t)
+
+
+def _sample_chunk_rows(spec: SamplerSpec, ck: Array, t: int,
+                       seed_rows: tuple[int, ...],
+                       svc_rows: tuple[int, ...]):
+    """Row-reduced sampling: draw ONLY the requested global rows of the
+    chunk's input block.
+
+    Row ``r`` of the seed-row space always derives from per-seed key
+    ``split(ck, n_seeds)[r % n_seeds]`` (the tiled "stacked" layout
+    repeats seed keys every ``n_seeds`` rows), and service row ``r``
+    from ``(dists[r // n_seeds], split(ck, n_seeds)[r % n_seeds])`` —
+    per-seed determinism, so each returned row is bit-identical to the
+    corresponding row of ``_sample_chunk``'s full block no matter which
+    subset is requested (pinned by tests/test_multihost.py). This is
+    the per-host sampling reduction: a multi-host executor passes just
+    the rows its local cells gather instead of the full
+    O(all-rows x chunk) block.
+
+    Deliberately EAGER, never jitted: under jit XLA fuses the stacked
+    per-row service draws into one program whose op shapes depend on
+    WHICH rows were requested, and that shape-dependent fusion wobbles
+    individual draws by 1 ULP (observed: requesting all rows of a
+    4-seed block flipped ~0.1% of row 0's service values — see the
+    sweep_shard design note). Eagerly, every row is the same
+    per-op-cached ``_service_part`` call the full block makes, so
+    bit-identity is by construction, not by XLA's grace.
+    """
+    ccfg = dataclasses.replace(spec.cfg, n_arrivals=t)
+    keys = jax.random.split(ck, spec.n_seeds)
+    seed_of = jnp.asarray([r % spec.n_seeds for r in seed_rows])
+    gaps, servers = jax.vmap(
+        lambda kk: _arrival_part(kk, spec.cfg.n_servers, t,
+                                 spec.k_max))(keys[seed_of])
+    services = jnp.stack(
+        [_service_part(keys[r % spec.n_seeds],
+                       spec.dists[r // spec.n_seeds], ccfg, spec.k_max,
+                       spec.with_shared, spec.with_degr)
+         for r in svc_rows], axis=0)
+    return gaps, servers, services
+
+
+class ChunkSampler:
+    """The engine's per-chunk input sampler.
+
+    Callable with ``(chunk_idx, chunk_len)`` — the legacy closure
+    protocol, drawing the full block EAGERLY (the PR 3 path: per-op
+    caches shared across dist families, no per-family jit compile).
+    Two additional entry points serve the pipeline and the multi-host
+    executor, both bit-identical to the eager call by construction:
+
+      ``fused(c, t)``                    the full block as one jitted
+                                         dispatch (compiled per spec).
+      ``rows(c, t, seed_rows, svc_rows)`` only the requested global
+                                         rows (per-host reduction);
+                                         eager, so the requested subset
+                                         cannot change the bits (see
+                                         ``_sample_chunk_rows``).
+    """
+
+    def __init__(self, spec: SamplerSpec, key: Array,
+                 chunk_size: int | None):
+        self.spec = spec
+        self.key = key
+        self.chunk_size = chunk_size
+
+    def chunk_key(self, c: int) -> Array:
+        return _chunk_key(self.key, c, self.chunk_size)
+
+    def __call__(self, c: int, t: int):
+        return _sample_chunk(self.spec, self.chunk_key(c), t)
+
+    def fused(self, c: int, t: int):
+        return _sample_chunk_fused(self.spec, self.chunk_key(c), t)
+
+    def rows(self, c: int, t: int, seed_rows, svc_rows):
+        return _sample_chunk_rows(self.spec, self.chunk_key(c), t,
+                                  tuple(int(r) for r in seed_rows),
+                                  tuple(int(r) for r in svc_rows))
+
+
 def _sweep_sampler(key: Array, dist: ServiceDist, cfg: SimConfig,
                    k_max: int, n_seeds: int, chunk_size: int | None,
                    with_shared: bool = False, with_degr: bool = False):
-    """The per-chunk sampler closure behind ``run``/``sweep``. Shared —
-    by this exact function, not a copy — with the sharded executor, so
-    the two paths cannot drift apart on the CRN-critical sampling code
-    the bit-identity contract depends on."""
-
-    def sampler(c: int, t: int):
-        ccfg = dataclasses.replace(cfg, n_arrivals=t)
-        return _sample_sweep_inputs(_chunk_key(key, c, chunk_size), dist,
-                                    ccfg, k_max, n_seeds,
-                                    with_shared=with_shared,
-                                    with_degr=with_degr)
-
-    return sampler
+    """The per-chunk sampler behind ``run``/``sweep``. Shared — this
+    exact object, not a copy — with the sharded executor, so the two
+    paths cannot drift apart on the CRN-critical sampling code the
+    bit-identity contract depends on."""
+    return ChunkSampler(SamplerSpec("single", (dist,), cfg, k_max,
+                                    n_seeds, with_shared, with_degr),
+                        key, chunk_size)
 
 
 def _sweep_dists_sampler(key: Array, dist_list, cfg: SimConfig,
@@ -718,25 +930,13 @@ def _sweep_dists_sampler(key: Array, dist_list, cfg: SimConfig,
                          chunk_size: int | None,
                          with_shared: bool = False,
                          with_degr: bool = False):
-    """The per-chunk sampler closure behind multi-distribution runs
-    (shared with the sharded executor, like ``_sweep_sampler``). Every
-    distribution sees the same key, hence the same arrival process and
-    copy sets (CRN across dists): arrivals are sampled once and tiled."""
-    d = len(dist_list)
-
-    def sampler(c: int, t: int):
-        ck = _chunk_key(key, c, chunk_size)
-        ccfg = dataclasses.replace(cfg, n_arrivals=t)
-        gaps1, servers1 = _sample_sweep_arrivals(
-            ck, cfg.n_servers, t, k_max, n_seeds)
-        services = jnp.concatenate(
-            [_sample_sweep_services(ck, dd, ccfg, k_max, n_seeds,
-                                    with_shared, with_degr)
-             for dd in dist_list], axis=0)
-        return (jnp.tile(gaps1, (d, 1)), jnp.tile(servers1, (d, 1, 1)),
-                services)
-
-    return sampler
+    """The per-chunk sampler behind multi-distribution runs (shared with
+    the sharded executor, like ``_sweep_sampler``). Every distribution
+    sees the same key, hence the same arrival process and copy sets
+    (CRN across dists): arrivals are sampled once and tiled."""
+    return ChunkSampler(SamplerSpec("stacked", tuple(dist_list), cfg,
+                                    k_max, n_seeds, with_shared,
+                                    with_degr), key, chunk_size)
 
 
 def _dist_table_sampler(key: Array, dist_list, cfg: SimConfig,
@@ -752,19 +952,9 @@ def _dist_table_sampler(key: Array, dist_list, cfg: SimConfig,
     dist_id * n_seeds + seed_idx`` while sharing one arrival process and
     copy sets (CRN across systems; dist-0 rows are bit-identical to a
     pure single-dist run of the same key)."""
-
-    def sampler(c: int, t: int):
-        ck = _chunk_key(key, c, chunk_size)
-        ccfg = dataclasses.replace(cfg, n_arrivals=t)
-        gaps, servers = _sample_sweep_arrivals(
-            ck, cfg.n_servers, t, k_max, n_seeds)
-        services = jnp.concatenate(
-            [_sample_sweep_services(ck, dd, ccfg, k_max, n_seeds,
-                                    with_shared, with_degr)
-             for dd in dist_list], axis=0)
-        return gaps, servers, services
-
-    return sampler
+    return ChunkSampler(SamplerSpec("tables", tuple(dist_list), cfg,
+                                    k_max, n_seeds, with_shared,
+                                    with_degr), key, chunk_size)
 
 
 def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
@@ -773,7 +963,8 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
         n_bins: int = DEFAULT_BINS,
         chunk_size: int | None = None,
         mesh: jax.sharding.Mesh | None = None,
-        kernel: str = "auto") -> dict[str, Array]:
+        kernel: str = "auto",
+        pipeline: str = "auto") -> dict[str, Array]:
     """Execute a ``Scenario`` (or a sequence — a MIXED grid) over a load
     grid. THE public entry point of the sweep engine; ``sweep`` /
     ``sweep_dists`` / ``replication_gain`` are thin shims over it.
@@ -807,11 +998,24 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
     arrivals in chunks of that many steps so peak memory is independent
     of ``cfg.n_arrivals``. ``mesh`` routes execution through the sharded
     cell-plan executor (``repro.distributed.sweep_shard``) —
-    bit-identical for any device count. ``kernel`` picks the chunk-body
-    implementation (``"auto"`` / ``"on"`` / ``"off"`` /
+    bit-identical for any device count. ``mesh=None`` does NOT force the
+    single-device engine: it resolves through
+    ``repro.launch.mesh.resolve_mesh`` (innermost ``use_sweep_mesh``
+    context, else the multi-process default that
+    ``distributed.multihost.initialize`` installs, else truly no mesh) —
+    the ONE mesh-resolution point every entry point built on ``run``
+    (``threshold.*``, benchmarks, shims) rides. ``kernel`` picks the
+    chunk-body implementation (``"auto"`` / ``"on"`` / ``"off"`` /
     ``"interpret"``, see the module design note and
     ``repro.kernels.cell_update.ops.resolve_kernel_mode``) — every mode
-    is bit-identical, on or off a mesh.
+    is bit-identical, on or off a mesh. ``pipeline`` controls the
+    sampling/compute overlap (``repro.core.chunkflow``): ``"on"``
+    prefetches each next chunk's inputs on a producer thread through the
+    fused jitted sampler, ``"off"`` samples serially per chunk,
+    ``"auto"`` turns it on exactly when there is something to overlap
+    (a chunked stream with more than one chunk). All three are
+    bit-identical — the pipeline moves WHEN sampling happens, never
+    what is sampled.
 
     Key-splitting / CRN contract: unchanged from the legacy ``sweep``
     (see the module design note) — ``Scenario.paper_default`` consumes
@@ -826,6 +1030,13 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
     from ``cfg`` (the legacy shims copy them over).
     """
     dist_list, warmup_frac, variants = scenario_mod.combine(scenario)
+    if pipeline not in ("auto", "on", "off"):
+        raise ValueError(f"pipeline must be 'auto', 'on' or 'off', "
+                         f"got {pipeline!r}")
+    if pipeline == "auto":
+        pipeline = ("on" if chunk_size is not None
+                    and cfg.n_arrivals > int(chunk_size) else "off")
+    mesh = launch_mesh.resolve_mesh(mesh)
     rhos = jnp.asarray(rhos)
     k_max = max(v.k for v in variants)
     with_shared = scenario_mod.any_server_dependent(variants)
@@ -853,7 +1064,8 @@ def run(key: Array, scenario: scenario_mod.ScenarioLike, rhos: Array,
     kwargs = dict(variants=variants, warmup_frac=warmup_frac,
                   percentiles=tuple(percentiles), n_bins=n_bins,
                   chunk_size=chunk_size,
-                  use_kernel=cell_ops.resolve_kernel_mode(kernel))
+                  use_kernel=cell_ops.resolve_kernel_mode(kernel),
+                  pipeline=pipeline)
     if mesh is not None:
         from repro.distributed.sweep_shard import _sweep_cells_sharded
         out = _sweep_cells_sharded(sampler, n_seeds_total, rhos, cfg,

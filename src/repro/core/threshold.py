@@ -21,7 +21,12 @@ scan per evaluation, batched over seeds x loads x k; every estimator takes
 route every probe batch through the sharded cell-plan executor
 ``repro.distributed.sweep_shard`` — the probe loads ride the engine's
 flattened cell axis, so one sharded call still serves a whole bracket, and
-results stay bit-identical to the unsharded path):
+results stay bit-identical to the unsharded path. ``mesh=None`` is NOT
+"no mesh": it defers to ``run``'s ambient resolution
+(``repro.launch.mesh.resolve_mesh`` — a ``use_sweep_mesh`` context or the
+multi-process default installed by ``distributed.multihost.initialize``),
+so estimators need no mesh plumbing of their own to execute sharded, or
+even multi-host):
 
   * ``threshold_bisect`` — bisection on the sign of the CRN-paired gain
     mean_k1(rho) - mean_k(rho). Both bracket probes ride in a single

@@ -1,13 +1,48 @@
-"""Production mesh definition.
+"""Mesh construction + named-sharding rules for the sweep engine.
 
-A function (not a module-level constant) so importing never touches jax
-device state. Single pod = 16 x 16 = 256 chips (v5e pod); multi-pod adds a
-leading "pod" axis (2 x 16 x 16 = 512 chips) — the pod axis is the
-data-center-network tier (gradient reduction across pods is hierarchical).
+Functions (not module-level constants) so importing never touches jax
+device state. Two mesh families live here:
+
+  * ``make_production_mesh`` / ``make_test_mesh`` — the 2-D/3-D
+    data x model meshes of the serving/training stack.
+  * ``make_sweep_mesh`` — the 1-D ``"cells"`` mesh the sweep engine
+    shards its flattened cell plan over. On a multi-process runtime
+    (``repro.distributed.multihost.initialize``) the mesh spans EVERY
+    process's devices in ``jax.devices()`` order, so shard ``i`` of the
+    cell axis lives on global device ``i`` no matter which host owns it.
+
+Mesh resolution — ONE point, every entry point rides it
+-------------------------------------------------------
+
+``resolve_mesh`` is where ``queueing.run`` (and therefore
+``threshold.*``, the benchmarks, the legacy shims — everything) decides
+what mesh a sweep executes on: an explicit ``mesh=`` argument wins, else
+the innermost ``use_sweep_mesh`` context, else the process default that
+``multihost.initialize`` installs on multi-process runtimes, else no
+mesh (the single-device engine). Callers stop hand-threading ``mesh=``
+through every layer: entering ``use_sweep_mesh()`` (or initializing the
+multi-process runtime) reroutes every subsequent sweep through the
+sharded executor.
+
+``SweepShardingRules`` (in the spirit of scalax's ``MeshShardingHelper``)
+is the one place cell placement is DECLARED rather than hand-built:
+``CellPlan.sharding_rule(mesh)`` returns the rules object, and both the
+shard_map specs of the chunk body and the global-array constructors for
+the carry / plan-parameter / chunk-input trees read their placement from
+it (cells = sharded along the plan axis, scalars = replicated). The
+``put_*`` constructors build each global array from per-process local
+blocks (``jax.make_array_from_single_device_arrays``), which is what
+makes the SAME code path serve single-process meshes and multi-host
+meshes where most of the global array is not addressable locally.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+
 import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -21,15 +56,150 @@ def make_test_mesh(n_data: int = 2, n_model: int = 4) -> jax.sharding.Mesh:
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
-def make_sweep_mesh(n_cells_axis: int | None = None) -> jax.sharding.Mesh:
+def make_sweep_mesh(n_cells_axis: int | None = None, *,
+                    devices=None) -> jax.sharding.Mesh:
     """1-D mesh over the sweep engine's flattened cell axis.
 
-    ``repro.distributed.sweep_shard`` shards the (seed x load x k) cell
-    plan over the ``"cells"`` axis; the plan pads the cell count up to a
-    multiple of the mesh size, so any device count serves any grid.
-    ``n_cells_axis=None`` uses every visible device (on CPU, set
+    ``repro.distributed.sweep_shard`` shards the (seed x load x variant)
+    cell plan over the ``"cells"`` axis; the plan pads the cell count up
+    to a multiple of the mesh size, so any device count serves any grid.
+    ``n_cells_axis=None`` uses every visible device — including other
+    processes' devices on a multi-process runtime (on CPU, set
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before
-    importing jax to get N virtual devices).
+    importing jax to get N virtual devices per process).
+
+    A requested ``n_cells_axis`` must divide the available device count
+    (taking the first ``n`` of ``jax.devices()``): anything else raises
+    a ``ValueError`` here, instead of surfacing as an opaque reshape
+    error deep inside mesh construction or leaving a multi-process mesh
+    that silently excludes some hosts' devices.
     """
-    n = len(jax.devices()) if n_cells_axis is None else int(n_cells_axis)
-    return jax.make_mesh((n,), ("cells",))
+    devs = tuple(jax.devices() if devices is None else devices)
+    n = len(devs) if n_cells_axis is None else int(n_cells_axis)
+    if n < 1 or n > len(devs) or len(devs) % n != 0:
+        raise ValueError(
+            f"n_cells_axis={n} cannot tile the {len(devs)} available "
+            f"device(s): it must be >= 1 and divide the device count "
+            f"evenly. On CPU, set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={max(n, 1)} before "
+            f"importing jax to get that many virtual devices.")
+    return Mesh(np.asarray(devs[:n]), ("cells",))
+
+
+# --- ambient mesh resolution (THE single resolution point) --------------
+
+_MESH_STACK: list[jax.sharding.Mesh] = []
+_DEFAULT_MESH: list[jax.sharding.Mesh | None] = [None]
+
+
+def set_default_sweep_mesh(mesh: jax.sharding.Mesh | None) -> None:
+    """Install (or clear) the process-wide default sweep mesh.
+    ``repro.distributed.multihost.initialize`` calls this on
+    multi-process runtimes so plain ``queueing.run(...)`` calls — no
+    ``mesh=`` anywhere — execute sharded across all hosts."""
+    _DEFAULT_MESH[0] = mesh
+
+
+@contextlib.contextmanager
+def use_sweep_mesh(mesh: jax.sharding.Mesh | None = None):
+    """Scope an ambient sweep mesh: every ``queueing.run`` (and
+    everything built on it — ``threshold.*``, the shims, benchmarks)
+    inside the block executes on ``mesh`` without threading a ``mesh=``
+    argument through. ``None`` builds the all-devices sweep mesh."""
+    mesh = make_sweep_mesh() if mesh is None else mesh
+    _MESH_STACK.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def resolve_mesh(mesh: jax.sharding.Mesh | None = None
+                 ) -> jax.sharding.Mesh | None:
+    """Resolve the mesh a sweep should execute on: explicit argument >
+    innermost ``use_sweep_mesh`` > multi-process default > ``None``
+    (single-device engine)."""
+    if mesh is not None:
+        return mesh
+    if _MESH_STACK:
+        return _MESH_STACK[-1]
+    return _DEFAULT_MESH[0]
+
+
+# --- named-sharding rules for the sweep engine's trees ------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepShardingRules:
+    """Placement rules for a cell plan on a ``"cells"`` mesh.
+
+    Obtained from ``CellPlan.sharding_rule(mesh)``. Everything keyed by
+    the cell axis — the chunk-body carry, the per-cell plan parameters,
+    the per-device-blocked chunk inputs — shards ``P("cells")`` along
+    axis 0; chunk scalars (start / n_valid / warmup_start) replicate.
+    The ``put_*`` constructors realize those rules as global arrays
+    built from per-process local shards, valid on single- and
+    multi-process meshes alike (shard ``i`` of the cell axis lives on
+    ``mesh.devices.flat[i]``, the mesh's device order).
+    """
+
+    mesh: jax.sharding.Mesh
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.devices.size)
+
+    @property
+    def cell_spec(self) -> P:
+        return P("cells")
+
+    @property
+    def scalar_spec(self) -> P:
+        return P()
+
+    @property
+    def cells(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P("cells"))
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def local_positions(self) -> list[int]:
+        """Positions along the mesh's device axis owned by THIS process
+        (== the cell-axis shard indices this process materializes)."""
+        pid = jax.process_index()
+        return [i for i, d in enumerate(self.mesh.devices.flat)
+                if d.process_index == pid]
+
+    def put_cells(self, x) -> jax.Array:
+        """Host value with axis 0 divisible by the mesh size -> global
+        array sharded ``P("cells")``; this process supplies only its
+        local devices' blocks."""
+        x = np.asarray(x)
+        per = x.shape[0] // self.n_devices
+        pid = jax.process_index()
+        arrs = [jax.device_put(x[i * per:(i + 1) * per], d)
+                for i, d in enumerate(self.mesh.devices.flat)
+                if d.process_index == pid]
+        return jax.make_array_from_single_device_arrays(
+            x.shape, self.cells, arrs)
+
+    def put_blocks(self, blocks, global_shape) -> jax.Array:
+        """Per-LOCAL-device blocks (ordered like ``local_positions()``)
+        -> global array sharded ``P("cells")`` whose axis 0 concatenates
+        every device's block. The multi-host chunk-input constructor:
+        each process stages only the rows its own devices gather."""
+        pid = jax.process_index()
+        local = [d for d in self.mesh.devices.flat
+                 if d.process_index == pid]
+        arrs = [jax.device_put(b, d) for b, d in zip(blocks, local,
+                                                     strict=True)]
+        return jax.make_array_from_single_device_arrays(
+            tuple(global_shape), self.cells, arrs)
+
+    def put_replicated(self, x) -> jax.Array:
+        """Host value -> fully replicated global array (chunk scalars)."""
+        x = np.asarray(x)
+        arrs = [jax.device_put(x, d) for d in self.mesh.local_devices]
+        return jax.make_array_from_single_device_arrays(
+            x.shape, self.replicated, arrs)

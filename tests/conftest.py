@@ -1,0 +1,5 @@
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: subprocess-spawning integration tests (multi-device / "
+        "multi-process bit-identity); deselect with -m 'not slow'")

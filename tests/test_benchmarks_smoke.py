@@ -58,7 +58,7 @@ def test_sweep_engine_sharded_rows_on_single_device_mesh():
     sharded = [r for r in rows if "sharded" in r[0]]
     assert sharded, [r[0] for r in rows]
     for row in sharded:
-        mesh, _, _ = row_provenance(row)
+        mesh, _, _, _ = row_provenance(row)
         assert mesh == [1], row
         assert "bit_identical=True" in row[2], row
 
@@ -71,12 +71,12 @@ def test_fig_policy_space_scenario_provenance():
     from benchmarks.common import row_provenance
     rows = fps.run(smoke=True)
     by_name = {r[0]: r for r in rows}
-    _, scn, kernel = row_provenance(by_name["fig_policy_space/iid"])
+    _, scn, kernel, _ = row_provenance(by_name["fig_policy_space/iid"])
     assert scn["policy"] == "REPLICATE_ALL" and scn["mix"] == 0.0
     assert kernel in ("on", "off", "interpret")  # resolved, never "auto"
-    _, scn, _ = row_provenance(by_name["fig_policy_space/server_dep_mix1"])
+    _, scn, _, _ = row_provenance(by_name["fig_policy_space/server_dep_mix1"])
     assert scn["service_model"] == "SERVER_DEPENDENT" and scn["mix"] == 1.0
-    _, scn, _ = row_provenance(by_name["fig_policy_space/cancel"])
+    _, scn, _, _ = row_provenance(by_name["fig_policy_space/cancel"])
     assert scn["policy"] == "CANCEL_ON_COMPLETE"
     assert "crossover=" in by_name["fig_policy_space/crossover"][2]
 
@@ -90,7 +90,7 @@ def test_sweep_engine_kernel_row():
     rows = se.run(smoke=True)
     by_name = {r[0]: r for r in rows}
     row = by_name["sweep_engine/kernel_on_vs_off"]
-    _, _, kernel = row_provenance(row)
+    _, _, kernel, _ = row_provenance(row)
     assert kernel in ("on", "interpret")  # never the scan fallback
     assert "bit_identical=True" in row[2], row
     assert "speedup=" in row[2] and "scan_s=" in row[2], row
@@ -129,7 +129,7 @@ def test_fig_cross_system_crossover_row():
         assert f"{system}=" in cross, cross
     assert "order=" in cross, cross
     assert cross.index("memcached=") > cross.index("disk="), cross
-    _, scn, kernel = row_provenance(by_name["fig_cross_system/disk"])
+    _, scn, kernel, _ = row_provenance(by_name["fig_cross_system/disk"])
     assert scn["ks"] == [1, 2] and len(scn["dists"]) == 1
     assert kernel in ("on", "off", "interpret")
     parity = by_name["fig_cross_system/kernel_parity"][2]

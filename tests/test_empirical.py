@@ -82,6 +82,52 @@ class TestEmpiricalFit:
         assert float(jnp.var(s)) == pytest.approx(0.5, rel=0.05)
 
 
+class TestFromTrace:
+    def test_trace_fit_matches_empirical(self, tmp_path):
+        samples, _ = _pareto_fit(n_samples=5_000)
+        vals = np.asarray(samples, np.float64)
+        p = tmp_path / "latency.trace"
+        p.write_text("# latency samples, ms\n\n"
+                     + "\n".join(f"{v:.9g}" for v in vals) + "\n")
+        d = dists.EmpiricalDist.from_trace(p)
+        ref = dists.empirical(np.asarray([float(f"{v:.9g}") for v in vals]))
+        assert d.scale == pytest.approx(ref.scale, rel=1e-9)
+        assert d.table == ref.table
+        assert d.name == "trace:latency.trace[q512]"
+
+    def test_trace_dist_rides_the_engine(self, tmp_path):
+        p = tmp_path / "t.txt"
+        rng = np.random.default_rng(0)
+        p.write_text("\n".join(str(v) for v in rng.exponential(3.0, 500)))
+        d = dists.EmpiricalDist.from_trace(p, n_quantiles=64)
+        out = queueing.run(jax.random.PRNGKey(0),
+                           Scenario(dists=d, ks=(1, 2)),
+                           jnp.asarray([0.3]), CFG, n_seeds=1)
+        assert bool(jnp.all(jnp.isfinite(out["mean"])))
+
+    def test_trace_rejects_too_few(self, tmp_path):
+        p = tmp_path / "bad.txt"
+        p.write_text("# only comments\n1.5\n")
+        with pytest.raises(ValueError, match="usable"):
+            dists.EmpiricalDist.from_trace(p)
+
+    def test_netsim_fct_quantile_table(self):
+        from repro.core import netsim
+
+        cfg = netsim.NetConfig(n_flows=120, load=0.25, replicate_first=0,
+                               seed=3)
+        d = netsim.empirical_fct_dist(cfg, n_quantiles=64)
+        assert isinstance(d, dists.EmpiricalDist)
+        assert d.mean == 1.0 and d.scale > 0.0
+        # table tails agree with the raw short-flow FCTs it was fit from
+        fct, _, short, _ = netsim.flow_completion_times(cfg)
+        raw = fct[short]
+        assert d.scale == pytest.approx(float(raw.mean()), rel=0.02)
+        x = float(np.percentile(raw, 90))
+        assert d.exceedance(x) == pytest.approx(
+            float((raw > x).mean()), abs=0.05)
+
+
 class TestSystemCoordinate:
     def test_combine_dedupes_union_and_assigns_dist_ids(self):
         a, b = dists.exponential(), dists.pareto(2.5)
