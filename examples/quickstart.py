@@ -14,6 +14,11 @@
    replica CRASHED mid-trace, masked by the hedged scheduler
    (``serving.faults.FaultInjector`` — the full matrix is
    ``benchmarks/fig_fault_masking.py``).
+5. Adaptive serving — close the loop: precompute a (load x policy)
+   table from ONE engine sweep, then replay a diurnal trace open loop
+   while an online controller interpolates the table from live load and
+   re-picks k / hedge delay as the day moves through the threshold
+   (the million-request version is ``benchmarks/serving_hedge.py``).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -121,3 +126,31 @@ finally:
     sched.shutdown()
 print(f"replica s1 crashed mid-trace: 20/20 completed, "
       f"max latency {max(lats) * 1e3:.1f} ms (hedging masks the crash)")
+
+# --- 5. adaptive serving: the threshold, closed-loop --------------------
+# ONE mixed-grid sweep precomputes p99 over (load x {k=1, k=2@delay});
+# at serve time the controller is pure numpy — it estimates load from
+# arrival/busy windows and interpolates the table to re-pick the policy.
+from repro.serving.controller import AdaptiveController, PolicyTable
+from repro.serving.replay import diurnal_trace, replay_virtual
+
+tab = threshold.policy_table(key, dists.exponential(),
+                             queueing.SimConfig(n_servers=8,
+                                                n_arrivals=3_000),
+                             rhos=[0.05, 0.2, 0.35, 0.5, 0.7],
+                             ks=(1, 2), delays=(0.0, 1.0), n_seeds=2)
+table = PolicyTable.from_sweep(tab)
+trace = diurnal_trace(20_000, rhos=(0.15, 0.75, 0.15), n_replicas=8,
+                      seed=0)
+runs = {f"static k={k}": replay_virtual(trace, static_k=k, seed=1)
+        for k in (1, 2)}
+ctl = AdaptiveController(table, n_replicas=8, window_s=40.0,
+                         decision_stride=16, initial_rho=0.15)
+runs["adaptive"] = replay_virtual(trace, controller=ctl, seed=1)
+print("\nadaptive serving over a night/peak/night day (p99 per segment):")
+for name, r in runs.items():
+    segs = "  ".join(f"{r.tails(segment=s)[1]:6.2f}"
+                     for s in range(trace.n_segments))
+    print(f"  {name:11s} {segs}")
+print(f"  controller re-decided {ctl.decisions} times, "
+      f"switched policy {ctl.switches}x as load crossed the threshold")

@@ -1,5 +1,7 @@
-"""Serve a small model with batched requests through the hedged scheduler:
-4 replicas, one artificially slow (straggler) — redundancy masks it.
+"""Serve a small model through the BATCHED hedged service: pooled
+transfer buffers, non-blocking submits, and an online controller that
+picks the replication factor from engine sweeps — then a chaos segment
+where two replicas stall and the controller backs replication off.
 
 Run:  PYTHONPATH=src python examples/serve_hedged.py
 """
@@ -9,10 +11,15 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.hedging import HedgePolicy, LoadMeter
+from repro.core import distributions as dists
+from repro.core import queueing, threshold
 from repro.models import lm
-from repro.serving.engine import InferenceEngine
-from repro.serving.scheduler import HedgedScheduler
+from repro.serving.controller import AdaptiveController, PolicyTable
+from repro.serving.engine import InferenceEngine, SimulatedEngine
+from repro.serving.faults import FaultInjector
+from repro.serving.metrics import Telemetry
+from repro.serving.replay import poisson_trace, replay_live
+from repro.serving.service import BatchedHedgedService
 
 
 class SlowWrapper:
@@ -28,23 +35,80 @@ class SlowWrapper:
         return self.inner.generate(*args, **kwargs)
 
 
-def run(k: int, engines) -> np.ndarray:
-    sched = HedgedScheduler(
-        engines, policy=HedgePolicy(max_k=k, threshold=1.1),
-        meter=LoadMeter(alpha=0.0, init=0.0), seed=0)
+def run_static(k: int, engines) -> np.ndarray:
+    """Batched submits through the service at a fixed k."""
+    svc = BatchedHedgedService(engines, batch_sizes=(1, 4), max_seq=16,
+                               k=k, seed=0)
     rng = np.random.default_rng(0)
     lat = []
     try:
-        for _ in range(16):
-            prompt = rng.integers(0, 500, 12).astype(np.int32)
-            req = sched.submit(prompt, max_new_tokens=4)
-            lat.append(req.latency)
-        stats = dict(sched.stats)
+        for _ in range(4):
+            prompts = [rng.integers(0, 500, 12).astype(np.int32)
+                       for _ in range(4)]
+            reqs = svc.submit_batch(prompts, max_new_tokens=4)
+            for r in reqs:
+                svc.result(r, timeout=30.0)
+                lat.append(r.latency)
+        stats = dict(svc.stats)
     finally:
-        sched.shutdown()
+        svc.shutdown()
     print(f"  k={k}: mean={np.mean(lat) * 1e3:.0f}ms "
           f"p90={np.percentile(lat, 90) * 1e3:.0f}ms  stats={stats}")
     return np.asarray(lat)
+
+
+def chaos_segment() -> None:
+    """Open-loop Poisson traffic on 4 fast simulated replicas; two of
+    them stall mid-run. The controller's busy term (stalled workers
+    stay busy) pushes its load estimate past the crossing, it backs
+    off to k=1, and after the heal the estimate falls and hedging
+    returns."""
+    mean_s = 0.01
+    print("\nchaos: sweep the policy table (one mixed-grid engine run)...")
+    cfg = queueing.SimConfig(n_servers=4, n_arrivals=2_000)
+    tab = threshold.policy_table(jax.random.PRNGKey(0),
+                                 dists.exponential(), cfg,
+                                 rhos=[0.05, 0.2, 0.35, 0.5, 0.7],
+                                 ks=(1, 2), delays=(0.0, 1.0), n_seeds=2)
+    table = PolicyTable.from_sweep(tab)
+
+    rngs = [np.random.default_rng(10 + i) for i in range(4)]
+    injector = FaultInjector()
+    engines = [injector.wrap(SimulatedEngine(
+        lambda r=rngs[i]: float(r.exponential(mean_s)), name=f"s{i}"))
+        for i in range(4)]
+    ctl = AdaptiveController(table, n_replicas=4, mean_service_s=mean_s,
+                             window_s=1.0, hysteresis=0.1,
+                             decision_stride=16, initial_rho=0.2)
+    svc = BatchedHedgedService(engines, batch_sizes=(1, 4), max_seq=8,
+                               controller=ctl,
+                               telemetry=Telemetry(window_s=1.0), seed=1)
+    trace = poisson_trace(720, rho=0.2, n_replicas=4,
+                          mean_service_s=mean_s, seed=2)
+    # the chaos clock: stall two replicas a third of the way in, heal
+    # them two thirds of the way in
+    span = float(trace.t[-1])
+    for name in ("s0", "s1"):
+        injector.stall(name, after=span / 3)
+        injector.heal(name, after=2 * span / 3)
+    try:
+        replay_live(svc, trace, max_new_tokens=2, timeout_s=60.0)
+    finally:
+        svc.shutdown()
+
+    thirds = [0, 0, 0], [0, 0, 0]
+    ks, counts = thirds
+    for h in ctl.history:
+        third = min(int(3 * (h.t - ctl.history[0].t)
+                        / max(span, 1e-9)), 2)
+        ks[third] += h.k
+        counts[third] += 1
+    mean_k = [k / max(c, 1) for k, c in zip(ks, counts)]
+    print(f"  controller mean k by phase: healthy={mean_k[0]:.2f}  "
+          f"stalled={mean_k[1]:.2f}  healed={mean_k[2]:.2f}")
+    print(f"  switches={ctl.switches}  decisions={ctl.decisions}")
+    print(f"  telemetry: {svc.telemetry.provenance()}")
+    assert mean_k[1] < mean_k[0], "controller should back off under stall"
 
 
 def main() -> None:
@@ -58,10 +122,13 @@ def main() -> None:
 
     print("without redundancy (k=1): requests landing on the slow replica "
           "eat the stall")
-    l1 = run(1, engines)
+    l1 = run_static(1, engines)
     print("with redundancy (k=2, duplicates at low priority):")
-    l2 = run(2, engines)
-    print(f"p90 improvement: {np.percentile(l1, 90) / np.percentile(l2, 90):.1f}x")
+    l2 = run_static(2, engines)
+    print(f"p90 improvement: "
+          f"{np.percentile(l1, 90) / np.percentile(l2, 90):.1f}x")
+
+    chaos_segment()
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ The paper's prescription, operationalized:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
@@ -57,6 +58,105 @@ class LoadMeter:
     def utilization(self) -> float:
         with self._lock:
             return self._util
+
+
+class LoadTracker:
+    """O(1) shared load signal for a replica pool.
+
+    ``LoadMeter`` is an EWMA the scheduler must FEED by polling every
+    worker per request (O(n_replicas) lock acquisitions on the hot
+    path). ``LoadTracker`` inverts the flow: workers increment /
+    decrement one shared busy counter as copies start and finish, and
+    every reader — the shed decision, the adaptive controller, the
+    benchmark — sees the SAME instantaneous signal with one lock and no
+    per-worker traversal:
+
+      * ``utilization()``       busy copies / capacity, O(1);
+      * ``arrival_rate(now)``   arrivals per second over a sliding
+                                ``window_s`` window (amortized O(1):
+                                timestamps in a deque, stale entries
+                                popped on read);
+      * ``copies_per_request()`` dispatched copies per arrival over the
+                                same window — the measured effective
+                                replication factor k_eff, which lets a
+                                controller convert busy fraction back
+                                to OFFERED load (busy/k_eff) without
+                                its own hedging feeding back into its
+                                load estimate.
+
+    Timestamps default to ``time.monotonic()`` but every note-method
+    takes an explicit ``t`` so a virtual-clock harness (the trace
+    replay simulator) can drive the identical object in simulated
+    seconds.
+    """
+
+    def __init__(self, capacity: int, window_s: float = 30.0):
+        self._lock = threading.Lock()
+        self._busy = 0
+        self._capacity = max(int(capacity), 0)
+        self.window_s = float(window_s)
+        self._arrivals = collections.deque()   # arrival timestamps
+        self._copies = collections.deque()     # (timestamp, n_copies)
+        self._copies_sum = 0
+
+    def set_capacity(self, capacity: int) -> None:
+        with self._lock:
+            self._capacity = max(int(capacity), 0)
+
+    @property
+    def capacity(self) -> int:
+        with self._lock:
+            return self._capacity
+
+    def incr_busy(self) -> None:
+        with self._lock:
+            self._busy += 1
+
+    def decr_busy(self) -> None:
+        with self._lock:
+            self._busy -= 1
+
+    def utilization(self) -> float:
+        with self._lock:
+            return self._busy / max(self._capacity, 1)
+
+    def note_arrival(self, t: float | None = None) -> None:
+        t = time.monotonic() if t is None else float(t)
+        with self._lock:
+            self._arrivals.append(t)
+            self._trim(t)
+
+    def note_copies(self, n: int, t: float | None = None) -> None:
+        t = time.monotonic() if t is None else float(t)
+        with self._lock:
+            self._copies.append((t, int(n)))
+            self._copies_sum += int(n)
+            self._trim(t)
+
+    def _trim(self, now: float) -> None:
+        horizon = now - self.window_s
+        arr, cop = self._arrivals, self._copies
+        while arr and arr[0] < horizon:
+            arr.popleft()
+        while cop and cop[0][0] < horizon:
+            self._copies_sum -= cop.popleft()[1]
+
+    def arrival_rate(self, now: float | None = None) -> float:
+        now = time.monotonic() if now is None else float(now)
+        with self._lock:
+            self._trim(now)
+            if not self._arrivals:
+                return 0.0
+            span = max(now - self._arrivals[0], 1e-9)
+            return len(self._arrivals) / span
+
+    def copies_per_request(self, now: float | None = None) -> float:
+        now = time.monotonic() if now is None else float(now)
+        with self._lock:
+            self._trim(now)
+            if not self._arrivals:
+                return 1.0
+            return max(self._copies_sum / len(self._arrivals), 1.0)
 
 
 @dataclasses.dataclass

@@ -170,6 +170,75 @@ def threshold_bisect(key: Array, dist_or_scenario, cfg: SimConfig, *,
     return 0.5 * (a + b)
 
 
+def policy_table(key: Array, dist_or_scenario, cfg: SimConfig, *,
+                 rhos: Array | None = None, ks: tuple[int, ...] = (1, 2),
+                 delays: tuple[float, ...] = (0.0, 0.5, 1.0, 2.0),
+                 percentile: float = 99.0, n_seeds: int = 2,
+                 chunk_size: int | None = None, mesh=None,
+                 kernel: str = "auto") -> dict:
+    """Precompute a (rho x k x hedge-delay) policy table in ONE mixed-grid
+    ``queueing.run`` sweep — the entry point the adaptive serving
+    controller (``repro.serving.controller.PolicyTable``) is built on.
+
+    The variant axis enumerates every candidate operating point:
+    ``k=1`` is the bare no-replication baseline, and each ``k > 1``
+    fans out over ``delays`` as ``HEDGE_AFTER_DELAY`` variants
+    (``delay=0`` degenerates bit-identically to the paper's immediate
+    ``REPLICATE_ALL``, so the paper point is always one column of the
+    table). All variants of all loads ride one compiled engine call and
+    share the engine's CRN arrival/service draws, so column comparisons
+    are paired exactly like ``scenario_gain``'s.
+
+    Returns a dict of NUMPY arrays (the serve-time consumer is pure
+    numpy — no JAX dispatch on a request hot path):
+
+      ``rhos``       (B,) the load grid
+      ``k``          (V,) replication factor per variant
+      ``delay``      (V,) hedge delay per variant, engine units (mean
+                     service times; 0 = immediate replication)
+      ``tail``       (B, V) seed-averaged p``percentile`` response
+      ``mean``       (B, V) seed-averaged mean response
+      ``percentile`` the tail percentile measured
+
+    ``dist_or_scenario`` follows the other estimators: a bare dist gets
+    the paper default with the ``SimConfig`` overhead/warmup knobs; a
+    (single-dist) ``Scenario`` contributes its service model / mix /
+    degradation / overhead to every variant."""
+    import numpy as np
+
+    if rhos is None:
+        rhos = jnp.linspace(0.05, 0.75, 8)
+    rhos = jnp.asarray(rhos)
+    base = _as_scenario(dist_or_scenario, cfg, 2)
+    from repro.core.scenario import Policy
+    scns, entries = [], []
+    for k in ks:
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"policy_table ks must be >= 1, got {k}")
+        if k == 1:
+            scns.append(dataclasses.replace(
+                base, ks=(1,), policy=Policy.REPLICATE_ALL, delay=0.0))
+            entries.append((1, 0.0))
+        else:
+            for d in delays:
+                scns.append(dataclasses.replace(
+                    base, ks=(k,), policy=Policy.HEDGE_AFTER_DELAY,
+                    delay=float(d)))
+                entries.append((k, float(d)))
+    out = run(key, scns, rhos, cfg, n_seeds=n_seeds,
+              percentiles=(float(percentile),), chunk_size=chunk_size,
+              mesh=mesh, kernel=kernel)
+    tail = np.asarray(out[f"p{float(percentile):g}"]).mean(axis=0)  # (B, V)
+    mean = np.asarray(out["mean"]).mean(axis=0)
+    return {"rhos": np.asarray(rhos, dtype=np.float64),
+            "k": np.asarray([e[0] for e in entries], dtype=np.int64),
+            "delay": np.asarray([e[1] for e in entries], dtype=np.float64),
+            "tail": tail.astype(np.float64),
+            "mean": mean.astype(np.float64),
+            "percentile": float(percentile)}
+
+
 def crossing_load(rhos: Array, g: Array) -> float:
     """Threshold load from a sampled gain curve: linear interpolation of
     the first sign change of ``g(rho)`` (``rhos[-1]`` if replication

@@ -1,1 +1,2 @@
-"""Serving: replica engines + the hedged (redundant-dispatch) scheduler."""
+"""Serving: replica engines, the hedged (redundant-dispatch) scheduler,
+and the adaptive batched service (controller + trace replay + telemetry)."""

@@ -44,7 +44,7 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from repro.core.hedging import HedgePolicy, LoadMeter
+from repro.core.hedging import HedgePolicy, LoadMeter, LoadTracker
 from repro.serving.engine import Request
 
 PRIORITY_HIGH = 0
@@ -78,6 +78,14 @@ class _Copy:
 
 
 class ReplicaWorker:
+    """One replica's drain thread. ``scheduler`` is any owner exposing
+    ``tied_cancel`` (bool) and ``tracker`` (``LoadTracker`` busy
+    accounting, updated as copies start/finish so ``utilization()`` is
+    an O(1) read); an owner may additionally define
+    ``_on_copy_done(worker, copy, won)`` to observe completions — the
+    batched service (``repro.serving.service``) finalizes requests
+    there instead of blocking a submitter thread per request."""
+
     def __init__(self, engine, scheduler: "HedgedScheduler", name: str):
         self.engine = engine
         self.scheduler = scheduler
@@ -130,6 +138,9 @@ class ReplicaWorker:
                     continue  # a sibling already finished: drop silently
                 copy.started = True
                 self._busy = True
+            tracker = getattr(self.scheduler, "tracker", None)
+            if tracker is not None:
+                tracker.incr_busy()
             try:
                 out = self.engine.generate(
                     copy.req.tokens, copy.req.max_new_tokens,
@@ -141,10 +152,17 @@ class ReplicaWorker:
             finally:
                 with self._cv:
                     self._busy = False
+                if tracker is not None:
+                    tracker.decr_busy()
+            won = False
             if out is not None and not copy.req.done_event.is_set():
                 copy.req.out_tokens = list(map(int, out))
                 copy.req.completed_by = self.name
                 copy.req.done_event.set()
+                won = True
+            on_done = getattr(self.scheduler, "_on_copy_done", None)
+            if on_done is not None:
+                on_done(self, copy, won)
 
 
 class HedgedScheduler:
@@ -155,7 +173,8 @@ class HedgedScheduler:
                  seed: int = 0,
                  hedge_delay: float = 0.0,
                  retry: RetryPolicy | None = None,
-                 shed_watermark: float = 1.0):
+                 shed_watermark: float = 1.0,
+                 tracker: LoadTracker | None = None):
         self.policy = policy or HedgePolicy()
         self.meter = meter or LoadMeter(alpha=0.2)
         self.tied_cancel = tied_cancel
@@ -163,6 +182,13 @@ class HedgedScheduler:
         self.hedge_delay = float(hedge_delay)
         self.retry = retry
         self.shed_watermark = float(shed_watermark)
+        # the ONE load signal: workers update it as copies start/finish,
+        # and shed decisions + any adaptive controller read the same
+        # object (see LoadTracker — utilization() is O(1), not a
+        # per-request traversal of every worker's lock)
+        engines = list(engines)
+        self.tracker = tracker or LoadTracker(len(engines))
+        self.tracker.set_capacity(len(engines))
         self._lock = threading.Lock()   # guards the workers list
         self.workers = [ReplicaWorker(e, self, getattr(e, "name", f"r{i}"))
                         for i, e in enumerate(engines)]
@@ -181,6 +207,7 @@ class HedgedScheduler:
             self.workers.append(ReplicaWorker(
                 engine, self,
                 getattr(engine, "name", f"r{len(self.workers)}")))
+            self.tracker.set_capacity(len(self.workers))
 
     def remove_replica(self, name: str) -> bool:
         with self._lock:
@@ -192,6 +219,7 @@ class HedgedScheduler:
             else:
                 return False
             survivors = list(self.workers)
+            self.tracker.set_capacity(len(survivors))
         for copy in victim.stop():
             if copy.cancelled or copy.req.done_event.is_set():
                 continue
@@ -203,10 +231,12 @@ class HedgedScheduler:
 
     # ------------------------------------------------------------------
     def utilization(self) -> float:
-        with self._lock:
-            workers = list(self.workers)
-        busy = sum(1.0 for w in workers if w.is_busy())
-        return busy / max(len(workers), 1)
+        """Busy copies / replicas — an O(1) read of the shared
+        ``LoadTracker`` (workers incr/decr as copies start/finish), not
+        a per-request traversal of every worker's condition variable.
+        The shed decision below and an adaptive controller subscribed
+        to the same tracker therefore see the SAME load signal."""
+        return self.tracker.utilization()
 
     def _dispatch(self, req: Request, priority: int, dispatched: list,
                   exclude: set[str]) -> ReplicaWorker:
@@ -321,16 +351,20 @@ def estimate_hedge_delay(key, dist, rho: float, cfg,
     tail — the scheduler's ``hedge_delay`` knob fed by the same sweep
     machinery that calibrates the hedge threshold. Delays are in units
     of mean service time (the engine's clock); the caller scales by the
-    replicas' measured mean service seconds."""
-    import jax.numpy as jnp
+    replicas' measured mean service seconds.
 
-    from repro.core import queueing
-    from repro.core.scenario import Policy, Scenario
+    Since the adaptive-serving PR this is a one-row view of the SAME
+    (rho x k x delay) grid ``threshold.policy_table`` sweeps for the
+    online controller — one mixed-grid ``queueing.run`` call either
+    way, so a fixed-``hedge_delay`` scheduler and an adaptive
+    ``BatchedHedgedService`` calibrate from identical machinery."""
+    from repro.core import threshold
+    from repro.core.scenario import Scenario
 
     kw = {} if degradation is None else {"degradation": degradation}
-    scns = [Scenario(dists=dist, policy=Policy.HEDGE_AFTER_DELAY,
-                     delay=d, ks=(2,), **kw) for d in delays]
-    out = queueing.run(key, scns, jnp.asarray([float(rho)]), cfg,
-                       n_seeds=n_seeds, percentiles=(percentile,))
-    tail = np.asarray(out[f"p{percentile:g}"]).mean(axis=0)[0]
-    return float(delays[int(np.argmin(tail))])
+    base = Scenario(dists=dist, ks=(2,), **kw)
+    tab = threshold.policy_table(key, base, cfg, rhos=[float(rho)],
+                                 ks=(2,), delays=tuple(delays),
+                                 percentile=float(percentile),
+                                 n_seeds=n_seeds)
+    return float(tab["delay"][int(np.argmin(tab["tail"][0]))])

@@ -114,6 +114,32 @@ def test_fig_fault_masking_chaos_acceptance():
     assert "completion_order=True" in engine, engine
 
 
+def test_serving_adaptive_vs_static_acceptance():
+    """The adaptive-serving acceptance booleans hold at smoke sizes: a
+    short deterministic diurnal replay where the controller's p99 is no
+    worse than the best static k at every segment and strictly better
+    on at least one (the 1M-request version is the slow-marked test in
+    test_serving_adaptive.py). The policy-table row resolves its grid
+    from ONE mixed-grid sweep."""
+    import benchmarks.serving_hedge as sh
+    from benchmarks.common import row_provenance
+    rows = sh.run(smoke=True)
+    by_name = {r[0]: r for r in rows}
+    cmp = by_name["serving/adaptive_vs_static"][2]
+    assert "no_worse=True" in cmp, cmp
+    assert "strictly_better=True" in cmp, cmp
+    _, scn, _, _ = row_provenance(by_name["serving/adaptive_vs_static"])
+    assert scn["adaptive_no_worse"] is True
+    assert scn["adaptive_strictly_better"] is True
+    assert scn["controller"]["decisions"] > 0
+    table = by_name["serving/policy_table"]
+    assert "best@0.10=" in table[2] and "best@0.75=" in table[2]
+    _, tab, _, _ = row_provenance(table)
+    assert len(tab["k"]) == len(tab["delay"]) >= 2
+    live = by_name["serving/batched_live"][2]
+    assert "completions=" in live and "p99_ms=" in live
+
+
 def test_fig_cross_system_crossover_row():
     """The cross-system figure's summary row reports one crossover load
     per system off a SINGLE mixed-grid gain call, the expected ordering

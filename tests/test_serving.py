@@ -99,6 +99,45 @@ class TestHedgedScheduler:
         finally:
             sched.shutdown()
 
+    def test_utilization_matches_worker_traversal(self):
+        """The O(1) LoadTracker read and an O(n) walk of the workers'
+        busy flags are the same signal — shed decisions and policy
+        decisions must agree on load. Checked at quiesced points
+        (0 busy, 1 busy held by a gate, 0 busy again)."""
+        release = threading.Event()
+        started = threading.Event()
+
+        class Gated:
+            name = "g0"
+
+            def generate(self, prompt, max_new_tokens=2,
+                         check_cancel=None):
+                started.set()
+                release.wait(5.0)
+                return np.zeros(1, np.int32)
+
+        sched = HedgedScheduler([Gated()],
+                                policy=HedgePolicy(max_k=1), seed=0)
+
+        def walk():
+            return (sum(w.is_busy() for w in sched.workers)
+                    / len(sched.workers))
+
+        try:
+            assert sched.utilization() == walk() == 0.0
+            t = threading.Thread(
+                target=lambda: sched.submit(np.zeros(2, np.int32),
+                                            max_new_tokens=1))
+            t.start()
+            assert started.wait(5.0)
+            assert sched.utilization() == walk() == 1.0
+            release.set()
+            t.join(5.0)
+            assert sched.utilization() == walk() == 0.0
+        finally:
+            release.set()
+            sched.shutdown()
+
     def test_replica_failure_masked(self):
         class Boom:
             name = "boom"
