@@ -142,13 +142,23 @@ class LoadTracker:
             self._copies_sum -= cop.popleft()[1]
 
     def arrival_rate(self, now: float | None = None) -> float:
+        """Arrivals per second over the retained window. Batch submits
+        stamp many arrivals with ONE timestamp, so the raw span can be
+        zero (or microscopic) while the deque is full — dividing by it
+        would report an absurd rate and slam an adaptive controller to
+        its max-load policy. Until the window has observed a span of at
+        least 5% of ``window_s``, the rate is conservatively floored:
+        zero span reads as 0 (no rate measurable yet), tiny spans are
+        divided by the floor instead."""
         now = time.monotonic() if now is None else float(now)
         with self._lock:
             self._trim(now)
             if not self._arrivals:
                 return 0.0
-            span = max(now - self._arrivals[0], 1e-9)
-            return len(self._arrivals) / span
+            span = now - self._arrivals[0]
+            if span <= 0.0:
+                return 0.0
+            return len(self._arrivals) / max(span, 0.05 * self.window_s)
 
     def copies_per_request(self, now: float | None = None) -> float:
         now = time.monotonic() if now is None else float(now)

@@ -39,6 +39,7 @@ class Request:
         default_factory=threading.Event)
     cancelled: bool = False
     completed_by: str = ""
+    failed: bool = False            # every issued copy errored
 
 
 class InferenceEngine:

@@ -137,7 +137,8 @@ class Telemetry:
         self._windows: dict[int, TailSketch] = {}
         self._t0: float | None = None
         self.counters = {"arrivals": 0, "completions": 0, "hedged": 0,
-                         "shed": 0, "cancelled_copies": 0, "timeouts": 0}
+                         "shed": 0, "cancelled_copies": 0, "timeouts": 0,
+                         "failures": 0}
 
     # ------------------------------------------------------------------
     def note_arrival(self, rid: int, t: float, k_planned: int = 1) -> None:
@@ -192,15 +193,27 @@ class Telemetry:
 
     def note_cancel(self, rid: int, t: float, n_copies: int = 1,
                     timeout: bool = False) -> None:
+        """Record loser cancellations. O(1): only LIVE records are
+        annotated, so for a completing request this must be called
+        BEFORE ``note_completion`` (the service does) — once a record
+        is folded into the sketches it is immutable, and scanning the
+        done list for it would serialize the completion path behind an
+        O(n) walk."""
         with self._lock:
-            r = self._records.get(rid) or next(
-                (d for d in reversed(self._done) if d.rid == rid), None)
+            r = self._records.get(rid)
             if r is not None:
                 r.t_cancel = t
                 r.copies_cancelled += int(n_copies)
             self.counters["cancelled_copies"] += int(n_copies)
             if timeout:
                 self.counters["timeouts"] += 1
+
+    def note_failure(self, rid: int, t: float) -> None:
+        """Every copy of ``rid`` errored: there is no completion to
+        fold, so drop the live record and count the failure."""
+        with self._lock:
+            self._records.pop(rid, None)
+            self.counters["failures"] += 1
 
     # ------------------------------------------------------------------
     def records(self) -> list[RequestRecord]:

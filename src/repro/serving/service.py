@@ -23,7 +23,10 @@ dispatch thread per replica group):
   * delayed hedges park in ONE timer heap serviced by one timer thread
     for the whole service, not one waiting thread per request; first
     completion finalizes the request from the worker's callback and
-    cancels queued losers.
+    cancels queued losers. Single replica failures are masked by
+    surviving copies; a request whose copies ALL error (and with no
+    hedge left to fire) is finalized as FAILED — ``result`` raises
+    instead of blocking its waiter forever.
 
 Batch sizes are FIXED at construction: ``submit_batch`` picks the
 smallest registered size that fits and pads, so buffer shapes (and any
@@ -131,10 +134,16 @@ class TransferBufferPool:
 
 
 class _Pending:
-    """Dispatcher-side state of one in-flight request."""
+    """Dispatcher-side state of one in-flight request.
+
+    ``outstanding`` counts reserved copies that have neither won nor
+    failed; ``hedge_pending`` marks a delayed hedge parked in the timer
+    heap. Together they decide when EVERY avenue to a completion is
+    exhausted (all copies failed, no hedge left to fire) so the request
+    can be finalized as failed instead of leaking a waiter."""
 
     __slots__ = ("req", "copies", "used", "k", "hedge_delay", "lock",
-                 "finalized", "group")
+                 "finalized", "group", "outstanding", "hedge_pending")
 
     def __init__(self, req: Request, group: int):
         self.req = req
@@ -145,6 +154,8 @@ class _Pending:
         self.lock = threading.Lock()
         self.finalized = False
         self.group = group
+        self.outstanding = 0
+        self.hedge_pending = False
 
 
 class BatchedHedgedService:
@@ -199,9 +210,11 @@ class BatchedHedgedService:
         self._rid = itertools.count()
         self._pending: dict[int, _Pending] = {}
         self._plock = threading.Lock()
+        # stats are written from submitter, dispatcher, timer and worker
+        # threads — mutate only through _bump (under _plock)
         self.stats = {"total": 0, "hedged": 0, "shed": 0,
                       "duplicate_wins": 0, "cancelled_copies": 0,
-                      "batches": 0}
+                      "batches": 0, "failed": 0}
 
         # replica groups: round-robin partition, one dispatcher each
         self._groups: list[list[ReplicaWorker]] = [[] for _ in
@@ -224,6 +237,11 @@ class BatchedHedgedService:
         for t in self._dispatchers:
             t.start()
         self._timer.start()
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        if n:
+            with self._plock:
+                self.stats[key] += n
 
     # ------------------------------------------------------------------
     # submission: non-blocking, O(1)
@@ -257,7 +275,7 @@ class BatchedHedgedService:
                               max_new_tokens=max_new_tokens,
                               submitted_at=t)
                 reqs.append(req)
-            self.stats["batches"] += 1
+            self._bump("batches")
         finally:
             self.pool.release(buf)
         for req in reqs:
@@ -269,13 +287,16 @@ class BatchedHedgedService:
         if not req.done_event.wait(timeout=timeout):
             self._cancel_request(req)
             raise TimeoutError(f"request {req.rid} timed out")
+        if req.failed:
+            raise RuntimeError(f"request {req.rid} failed on every "
+                               "replica copy")
         return req.out_tokens
 
     def _enqueue(self, req: Request, t: float) -> None:
-        self.stats["total"] += 1
         g = req.rid % len(self._groups)
         p = _Pending(req, g)
         with self._plock:
+            self.stats["total"] += 1
             self._pending[req.rid] = p
         self.telemetry.note_arrival(req.rid, t)
         if self.controller is not None:
@@ -316,7 +337,7 @@ class BatchedHedgedService:
             shed = False
             if k > 1 and self.tracker.utilization() >= self.shed_watermark:
                 k, shed = 1, True
-                self.stats["shed"] += 1
+                self._bump("shed")
             p.k, p.hedge_delay = k, delay
             t = time.monotonic()
             self.telemetry.note_dispatch(p.req.rid, t, k, shed=shed)
@@ -326,30 +347,47 @@ class BatchedHedgedService:
                 self.controller.note_dispatch(k, t)
             else:
                 self.tracker.note_copies(k, t)
-            self._send_copy(p, workers, PRIORITY_HIGH)
-            if k > 1:
-                if delay <= 0.0:
-                    self.stats["hedged"] += 1
-                    self.telemetry.note_hedge(p.req.rid, k - 1)
-                    for _ in range(k - 1):
-                        self._send_copy(p, workers, PRIORITY_LOW)
-                else:
-                    with self._timer_cv:
-                        heapq.heappush(self._timer_heap,
-                                       (t + delay, p.req.rid))
-                        self._timer_cv.notify()
+            if k > 1 and delay <= 0.0:
+                self._bump("hedged")
+                self.telemetry.note_hedge(p.req.rid, k - 1)
+                # reserve primary + duplicates in ONE lock section: a
+                # fast-failing primary must never see outstanding==0
+                # while its siblings are still on the way
+                self._send_copies(
+                    p, workers,
+                    [PRIORITY_HIGH] + [PRIORITY_LOW] * (k - 1))
+            elif k > 1:
+                with p.lock:
+                    p.hedge_pending = True
+                self._send_copies(p, workers, [PRIORITY_HIGH])
+                with self._timer_cv:
+                    heapq.heappush(self._timer_heap,
+                                   (t + delay, p.req.rid))
+                    self._timer_cv.notify()
+            else:
+                self._send_copies(p, workers, [PRIORITY_HIGH])
 
-    def _send_copy(self, p: _Pending, workers: list[ReplicaWorker],
-                   priority: int) -> None:
+    def _reserve_copy(self, p: _Pending, workers: list[ReplicaWorker],
+                      priority: int) -> tuple[ReplicaWorker, _Copy]:
+        """Pick a replica and register one copy. Caller holds ``p.lock``
+        and submits the returned pair after releasing it."""
         cand = [w for w in workers if w.name not in p.used] or workers
         w = cand[int(self.rng.integers(len(cand)))]
         copy = _Copy(p.req, priority)
+        p.copies.append((w, copy))
+        p.used.add(w.name)
+        p.outstanding += 1
+        return w, copy
+
+    def _send_copies(self, p: _Pending, workers: list[ReplicaWorker],
+                     priorities: Sequence[int]) -> None:
         with p.lock:
             if p.finalized:
                 return
-            p.copies.append((w, copy))
-            p.used.add(w.name)
-        w.submit(copy)
+            sends = [self._reserve_copy(p, workers, pr)
+                     for pr in priorities]
+        for w, copy in sends:
+            w.submit(copy)
 
     def _timer_loop(self) -> None:
         while True:
@@ -366,28 +404,54 @@ class BatchedHedgedService:
                 heapq.heappop(self._timer_heap)
             with self._plock:
                 p = self._pending.get(rid)
-            if p is None or p.req.done_event.is_set():
-                continue  # completed before the hedge fired: saved work
-            self.stats["hedged"] += 1
-            self.telemetry.note_hedge(rid, p.k - 1)
+            if p is None:
+                continue  # finalized before the hedge fired
             workers = self._groups[p.group]
-            for _ in range(p.k - 1):
-                self._send_copy(p, workers, PRIORITY_LOW)
+            sends = []
+            with p.lock:
+                # clearing the flag and reserving the copies must be one
+                # atomic step: with the flag down and nothing reserved, a
+                # concurrently failing primary would finalize the request
+                p.hedge_pending = False
+                fire = not p.finalized and not p.req.done_event.is_set()
+                if fire:
+                    sends = [self._reserve_copy(p, workers, PRIORITY_LOW)
+                             for _ in range(p.k - 1)]
+            if not fire:
+                continue  # completed before the hedge fired: saved work
+            self._bump("hedged")
+            self.telemetry.note_hedge(rid, p.k - 1)
+            for w, copy in sends:
+                w.submit(copy)
 
     # ------------------------------------------------------------------
     # completion: ReplicaWorker owner protocol
     def _on_copy_done(self, worker: ReplicaWorker, copy: _Copy,
                       won: bool) -> None:
+        """Only two callers may finalize a request: its WINNING copy
+        (so the latency stamp is the first completion, never a loser
+        that drained later), and its LAST failing copy once no sibling
+        or parked hedge can still win (so a request whose copies all
+        error is surfaced as failed instead of blocking its waiter
+        forever)."""
         rid = copy.req.rid
         with self._plock:
             p = self._pending.get(rid)
         if p is None:
             return
+        failed = False
         with p.lock:
             if p.finalized:
                 return
-            if not won and not copy.req.done_event.is_set():
-                return  # this copy failed; siblings may still win
+            if not won:
+                if copy.req.done_event.is_set():
+                    # loser drained after the winner set the event: the
+                    # winner's own callback finalizes — pure no-op here
+                    return
+                p.outstanding -= 1
+                if p.outstanding > 0 or p.hedge_pending:
+                    return  # a sibling or a parked hedge may still win
+                failed = True
             p.finalized = True
             copies = list(p.copies)
         with self._plock:
@@ -398,16 +462,20 @@ class BatchedHedgedService:
             if c is not copy and not c.started:
                 cancelled += 1
             c.cancelled = True
-        self.stats["cancelled_copies"] += cancelled
-        if won and copy.req.completed_by != copies[0][0].name \
-                and copies[0][1].started:
-            self.stats["duplicate_wins"] += 1
-        copy.req.latency = t - copy.req.submitted_at  # type: ignore
-        self.telemetry.note_completion(rid, t, copy.req.completed_by)
+        self._bump("cancelled_copies", cancelled)
         if cancelled:
             self.telemetry.note_cancel(rid, t, cancelled)
-        if not copy.req.done_event.is_set():
-            copy.req.done_event.set()  # every copy failed: unblock waiter
+        if failed:
+            copy.req.failed = True
+            self._bump("failed")
+            self.telemetry.note_failure(rid, t)
+            copy.req.done_event.set()  # unblock waiters with the failure
+            return
+        if copy.req.completed_by != copies[0][0].name \
+                and copies[0][1].started:
+            self._bump("duplicate_wins")
+        copy.req.latency = t - copy.req.submitted_at  # type: ignore
+        self.telemetry.note_completion(rid, t, copy.req.completed_by)
 
     def _cancel_request(self, req: Request) -> None:
         req.cancelled = True

@@ -242,6 +242,60 @@ class TestVirtualReplay:
         assert twin.tails()[1] <= base.tails()[1]
 
 
+class FailingEngine:
+    """A replica whose every ``generate`` errors (a crashed backend)."""
+
+    def __init__(self, name="bad"):
+        self.name = name
+
+    def generate(self, tokens, max_new_tokens=16, check_cancel=None):
+        raise RuntimeError("replica down")
+
+
+class TestLoadTracker:
+    def test_batch_stamp_does_not_explode_arrival_rate(self):
+        """submit_batch stamps every row with ONE timestamp; a window
+        of identical stamps must read as 'no rate measurable yet', and
+        microscopic spans are floored — never a ~1e9/s rate that slams
+        the controller to its max-load policy."""
+        tr = LoadTracker(4, window_s=10.0)
+        for _ in range(64):
+            tr.note_arrival(5.0)
+        assert tr.arrival_rate(5.0) == 0.0
+        tr.note_arrival(5.001)
+        # span floored at 5% of the window: bounded, not 65_000/s
+        assert tr.arrival_rate(5.001) <= 65 / 0.5
+        # an established span still measures the true rate
+        tr2 = LoadTracker(4, window_s=10.0)
+        for i in range(50):
+            tr2.note_arrival(i * 0.1)
+        assert tr2.arrival_rate(5.0) == pytest.approx(10.0, rel=0.01)
+
+
+class TestTelemetryCancelPath:
+    def test_note_cancel_only_annotates_live_records(self):
+        """Cancellations land on the live record (the service reports
+        them before the completion); after the record is folded, only
+        the counter moves — no O(n) scan of the done list."""
+        tel = Telemetry(window_s=1.0)
+        tel.note_arrival(0, 0.0)
+        tel.note_dispatch(0, 0.0, 2)
+        tel.note_cancel(0, 0.5, 1)
+        tel.note_completion(0, 0.5)
+        tel.note_cancel(0, 0.6, 1)
+        r = tel.records()[0]
+        assert r.copies_cancelled == 1 and r.t_cancel == 0.5
+        assert tel.counters["cancelled_copies"] == 2
+
+    def test_note_failure_drops_live_record(self):
+        tel = Telemetry()
+        tel.note_arrival(1, 0.0)
+        tel.note_failure(1, 0.2)
+        assert tel.counters["failures"] == 1
+        assert tel.counters["completions"] == 0
+        assert tel.records() == []
+
+
 class TestBatchedService:
     def _engines(self, n=4, mean_s=0.005, seed=0):
         rngs = [np.random.default_rng(seed + i) for i in range(n)]
@@ -316,6 +370,59 @@ class TestBatchedService:
                 assert (svc.stats["hedged"] > 0) == want_hedged
             finally:
                 svc.shutdown()
+
+    def test_all_copies_failing_raises_instead_of_hanging(self):
+        """A request whose every copy errors must surface promptly as a
+        failure (result raises RuntimeError), not block its waiter
+        forever and leak the pending entry."""
+        for k in (1, 2):
+            svc = BatchedHedgedService(
+                [FailingEngine(f"b{i}") for i in range(2)],
+                batch_sizes=(1,), max_seq=8, k=k, seed=0)
+            try:
+                req = svc.submit(np.zeros(2, np.int32), max_new_tokens=2)
+                with pytest.raises(RuntimeError):
+                    svc.result(req, timeout=5.0)
+                assert req.failed and req.done_event.is_set()
+                assert svc.stats["failed"] == 1
+                assert svc.telemetry.counters["failures"] == 1
+                assert not svc._pending
+            finally:
+                svc.shutdown()
+
+    def test_all_copies_failing_with_delayed_hedge(self):
+        """With a hedge parked in the timer heap, a failing primary
+        must WAIT for the hedge (it may still win); once the hedge
+        copies fail too, the request finalizes as failed."""
+        svc = BatchedHedgedService(
+            [FailingEngine(f"b{i}") for i in range(2)],
+            batch_sizes=(1,), max_seq=8, k=2, hedge_delay_s=0.05, seed=0)
+        try:
+            req = svc.submit(np.zeros(2, np.int32), max_new_tokens=2)
+            t0 = time.monotonic()
+            with pytest.raises(RuntimeError):
+                svc.result(req, timeout=10.0)
+            # hedge fired at ~50 ms, then failed: no 10 s timeout burn
+            assert time.monotonic() - t0 < 5.0
+            assert svc.stats["hedged"] == 1 and svc.stats["failed"] == 1
+        finally:
+            svc.shutdown()
+
+    def test_failure_masked_by_surviving_replica(self):
+        """One crashed replica out of two: redundancy masks it and
+        every request completes."""
+        svc = BatchedHedgedService(
+            [FailingEngine("bad")] + self._engines(n=1),
+            batch_sizes=(1,), max_seq=8, k=2, seed=0)
+        try:
+            reqs = [svc.submit(np.zeros(2, np.int32), max_new_tokens=2)
+                    for _ in range(6)]
+            for r in reqs:
+                assert svc.result(r, timeout=10.0)
+            assert svc.stats["failed"] == 0
+            assert svc.telemetry.counters["completions"] == 6
+        finally:
+            svc.shutdown()
 
     def test_telemetry_windows_and_sketch_geometry(self):
         """Telemetry quantiles come from the SAME log-bin geometry as
